@@ -1,0 +1,44 @@
+"""Paper Fig 2a: the params-vs-FLOPs design-space cloud for a small layer.
+
+Enumerates the aligned solution cloud for the paper's 120×84 example and
+reports its envelope: how many solutions beat the dense layer on both
+axes, the Pareto front size, and the spread — the figure's point is that
+the cloud is huge and mostly dominated, which motivates pruning.
+"""
+from __future__ import annotations
+
+from repro.core.dse import DSEConfig, aligned_combination_shapes
+from repro.core.flops import (clip_ranks, dense_flops, dense_params,
+                              tt_flops, tt_params)
+
+from .common import header, row
+
+M, N = 120, 84          # paper Fig 2a layer (LeNet5 FC)
+
+
+def run(quick: bool = False) -> None:
+    pts = []
+    for ms, ns in aligned_combination_shapes(M, N, max_d=6):
+        d = len(ms)
+        for R in range(1, 33 if not quick else 17):
+            ranks = clip_ranks(ms, ns, [1] + [R] * (d - 1) + [1])
+            pts.append((tt_params(ms, ns, ranks), tt_flops(ms, ns, ranks)))
+    dp, df = dense_params(M, N), dense_flops(M, N)
+    better = [(p, f) for p, f in pts if p < dp and f < df]
+    # Pareto front of the 'better' set
+    front = []
+    for p, f in sorted(set(better)):
+        if not front or f < front[-1][1]:
+            front.append((p, f))
+    header(f"Fig 2a: DS cloud for FC [{N}->{M}] (dense: {dp} params, "
+           f"{df} FLOPs)",
+           ["total_solutions", "beat_dense_both", "pareto_front",
+            "min_params", "min_flops"])
+    print(row(len(pts), len(better), len(front),
+              min(p for p, _ in pts), min(f for _, f in pts)))
+    print("pareto (params, flops):",
+          " ".join(f"({p},{f})" for p, f in front[:12]))
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,85 @@
+"""Paper Figs 12–14 / Table 3: the three einsum kernel classes (first,
+middle, final) at the paper's CB0–CB7 sizes.
+
+Hardware adaptation (DESIGN.md §2): the paper compares its hand-scheduled
+RISC-V kernels against Pluto (no vectorization) and IREE (transpose-to-
+matmul in HBM).  On this CPU container the analogues we can *time* are:
+
+  naive   — jnp.einsum on the T3F layout, cores transposed at RUNTIME
+            (the IREE-style data movement: every call pays the relayout)
+  packed  — our compile-time packed layout: the contraction is a single
+            matmul on pre-packed cores, zero runtime transposes
+            (the paper's array-packing insight, MXU-mapped)
+
+The Pallas kernel itself is validated in tests (interpret mode is a Python
+interpreter — timing it is meaningless); its TPU performance is modeled in
+the roofline analysis (EXPERIMENTS.md §Perf).  GFLOP/s here are CPU numbers
+— the *ratio* between the two schedules is the reproduced claim.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.flops import prod
+
+from .common import header, row, time_fn
+
+# Table 3 sizes: (mt, bt, nt, rt) — first: rt_1=1; middle: rt=rt_1=R;
+# final: rt=1, column is rt_1.  R=8 throughout (the paper's choice).
+FIRST = [(512, 32, 128, 8), (64, 64, 64, 8), (128, 1024, 4, 8),
+         (256, 64, 784, 8), (32, 64, 392, 8), (512, 896, 28, 8),
+         (100, 12, 64, 8), (16, 4, 150, 8)]
+MIDDLE = [(48, 224, 2, 8), (64, 3582, 4, 8), (96, 128, 14, 8),
+          (64, 64, 32, 8), (256, 128, 4, 8), (32, 9, 7, 8),
+          (4, 16383, 28, 8), (64, 1020, 28, 8)]
+FINAL = [(32, 126, 256, 8), (64, 64, 128, 8), (32, 126, 4, 8),
+         (256, 16, 7, 8), (8, 510, 896, 8), (32, 250, 4, 8),
+         (124, 9, 16, 8), (48, 21, 4, 8)]
+
+
+@functools.partial(jax.jit, static_argnames=())
+def _naive(G, X):
+    """Runtime-transposed einsum (the un-packed schedule)."""
+    return jnp.einsum("rnmk,bnk->mbr", G, X)
+
+
+@jax.jit
+def _packed(P, X2):
+    """state2 @ P on the packed layout — no runtime transpose."""
+    return X2 @ P
+
+
+def _bench_class(name, sizes, kind):
+    header(f"Fig {12 + ['first', 'middle', 'final'].index(kind)}: "
+           f"{name} einsum kernel (R=8)",
+           ["id", "mt", "bt", "nt", "rt", "rt_1", "mflops",
+            "naive_gflops", "packed_gflops", "speedup"])
+    key = jax.random.PRNGKey(0)
+    for i, (mt, bt, nt, r) in enumerate(sizes):
+        rt = 1 if kind == "final" else r
+        rt_1 = 1 if kind == "first" else r
+        k1, k2 = jax.random.split(jax.random.fold_in(key, i))
+        G = jax.random.normal(k1, (rt_1, nt, mt, rt), jnp.float32)
+        X = jax.random.normal(k2, (bt, nt, rt), jnp.float32)
+        P = G.transpose(1, 3, 2, 0).reshape(nt * rt, mt * rt_1)
+        X2 = X.reshape(bt, nt * rt)
+        flops = 2 * mt * bt * nt * rt * rt_1
+        t_naive = time_fn(_naive, G, X)
+        t_packed = time_fn(_packed, P, X2)
+        print(row(f"CB{i}", mt, bt, nt, rt, rt_1, f"{flops/1e6:.2f}",
+                  f"{flops/t_naive/1e9:.2f}", f"{flops/t_packed/1e9:.2f}",
+                  f"{t_naive/t_packed:.2f}"))
+
+
+def run(quick: bool = False) -> None:
+    n = 3 if quick else 8
+    _bench_class("first", FIRST[:n], "first")
+    _bench_class("middle", MIDDLE[:n], "middle")
+    _bench_class("final", FINAL[:n], "final")
+
+
+if __name__ == "__main__":
+    run()

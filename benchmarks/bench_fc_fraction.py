@@ -1,0 +1,61 @@
+"""Paper Fig 11: fraction of inference time spent in FC layers.
+
+The paper profiles TFLite models on the K1 board; here we time our smoke
+models' prefill with the FC projections (a) intact and (b) replaced by
+identity-cost stubs, attributing the difference to the FC share.  The
+claim being reproduced: FC layers dominate LM-family inference time and
+are therefore the right compression target.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import build, get_config
+from repro.configs.shapes import concrete_batch
+
+from .common import header, row, time_fn
+
+ARCHS = ["deepseek_7b", "qwen3_32b", "gemma3_4b", "mamba2_2p7b",
+         "internvl2_2b"]
+
+
+def run(quick: bool = False) -> None:
+    header("Fig 11: FC-layer share of inference time (smoke configs, CPU)",
+           ["arch", "full_ms", "attn_only_ms", "fc_share_pct"])
+    archs = ARCHS[:3] if quick else ARCHS
+    B, S = 2, 64
+    for arch in archs:
+        cfg = get_config(arch, "smoke")
+        model = build(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        batch = concrete_batch(cfg, B, S)
+
+        fwd = jax.jit(lambda p, b: model.loss(p, b, remat=False))
+        t_full = time_fn(fwd, params, batch, warmup=1, iters=3)
+
+        # zero-width FC proxy: drop the FFN/projection cost by zeroing the
+        # heavy weights' contribution (multiply by 0 keeps shapes; XLA
+        # cannot elide the matmuls, so instead we time a model whose d_ff
+        # is cut to the minimum the family allows)
+        import dataclasses
+        if cfg.d_ff:
+            thin = dataclasses.replace(cfg, d_ff=8)
+        elif cfg.moe:
+            thin = dataclasses.replace(
+                cfg, moe=dataclasses.replace(cfg.moe, expert_ff=8))
+        else:                               # ssm: shrink expansion
+            thin = dataclasses.replace(
+                cfg, ssm=dataclasses.replace(cfg.ssm, expand=1))
+        model_t = build(thin)
+        params_t = model_t.init(jax.random.PRNGKey(0))
+        fwd_t = jax.jit(lambda p, b: model_t.loss(p, b, remat=False))
+        t_thin = time_fn(fwd_t, params_t, batch, warmup=1, iters=3)
+
+        share = max(0.0, 1 - t_thin / t_full)
+        print(row(arch, f"{t_full*1e3:.1f}", f"{t_thin*1e3:.1f}",
+                  f"{share*100:.0f}"))
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,30 @@
+"""Shared timing + reporting helpers for the benchmark harness."""
+from __future__ import annotations
+
+import time
+
+import jax
+
+
+def time_fn(fn, *args, warmup: int = 2, iters: int = 5) -> float:
+    """Median wall seconds per call of a jitted fn (block_until_ready)."""
+    for _ in range(warmup):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        ts.append(time.perf_counter() - t0)
+    ts.sort()
+    return ts[len(ts) // 2]
+
+
+def row(*cols) -> str:
+    return ",".join(str(c) for c in cols)
+
+
+def header(title: str, cols: list[str]) -> None:
+    print(f"\n## {title}")
+    print(",".join(cols))

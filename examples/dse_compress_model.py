@@ -1,0 +1,70 @@
+"""The paper's design tool, model-wise: run the layer-level DSE over every
+FC projection of an assigned architecture and report the chosen plans +
+whole-model compression.
+
+    PYTHONPATH=src python examples/dse_compress_model.py --arch qwen3-32b \
+        --rank 16 --families ffn,attn
+"""
+import argparse
+
+from repro.configs import get_config
+from repro.core.dse import best_plan
+from repro.core.flops import dense_flops, dense_params
+
+
+def fc_layers_of(cfg):
+    """(name, M_out, N_in, family) of every FC projection family."""
+    out = []
+    d = cfg.d_model
+    q = cfg.num_heads * cfg.head_dim
+    kv = cfg.num_kv_heads * cfg.head_dim
+    out += [("attn.q", q, d, "attn"), ("attn.k", kv, d, "attn"),
+            ("attn.v", kv, d, "attn"), ("attn.o", d, q, "attn")]
+    ff = cfg.moe.expert_ff if (cfg.moe and cfg.moe.num_experts) else cfg.d_ff
+    if ff:
+        out += [("ffn.gate", ff, d, "ffn"), ("ffn.up", ff, d, "ffn"),
+                ("ffn.down", d, ff, "ffn")]
+    out += [("lm_head", cfg.vocab_size, d, "lm_head")]
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-32b")
+    ap.add_argument("--rank", type=int, default=16)
+    ap.add_argument("--length", type=int, default=2)
+    ap.add_argument("--min-factor", type=int, default=8)
+    ap.add_argument("--families", default="ffn,attn,lm_head")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, "full")
+    families = set(args.families.split(","))
+    print(f"{cfg.name}: d_model={cfg.d_model} layers={cfg.num_layers} "
+          f"rank={args.rank} length={args.length}")
+    print(f"{'layer':12s} {'shape':>16s} {'plan':>24s} "
+          f"{'params_x':>9s} {'flops_x':>8s}")
+    tot_dense = tot_tt = 0
+    for name, M, N, fam in fc_layers_of(cfg):
+        dp = dense_params(M, N, bias=False)
+        if fam not in families:
+            tot_dense += dp
+            tot_tt += dp
+            print(f"{name:12s} {f'[{N}->{M}]':>16s} {'(dense)':>24s}")
+            continue
+        plan = best_plan(M, N, rank=args.rank, length=args.length,
+                         min_factor=args.min_factor)
+        tot_dense += dp
+        if plan is None:
+            tot_tt += dp
+            print(f"{name:12s} {f'[{N}->{M}]':>16s} {'no survivor':>24s}")
+            continue
+        tot_tt += plan.params
+        desc = f"{'x'.join(map(str, plan.ms))}|{'x'.join(map(str, plan.ns))}"
+        print(f"{name:12s} {f'[{N}->{M}]':>16s} {desc:>24s} "
+              f"{dp/plan.params:9.1f} {dense_flops(M, N, False)/plan.flops:8.1f}")
+    print(f"\nper-layer FC params: {tot_dense:,} -> {tot_tt:,} "
+          f"({tot_dense/tot_tt:.1f}x compression of factorized families)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,48 @@
+"""Serve a TT-compressed model with batched requests: prefill a batch of
+prompts of *different lengths* (left-padded into one batch), then decode.
+
+    PYTHONPATH=src python examples/serve_tt_lm.py --arch gemma3-4b
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import build, get_config
+from repro.configs.base import TTConfig
+from repro.data.pipeline import make_batch
+from repro.serving.engine import generate
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gemma3-4b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--max-prompt", type=int, default=48)
+    ap.add_argument("--decode", type=int, default=16)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, "smoke",
+                     tt=TTConfig(enabled=True, families=("ffn",), rank=4,
+                                 min_factor=2))
+    model = build(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+
+    batch = make_batch(cfg, args.batch, args.max_prompt, step=0)
+    batch = dict(batch, cache_len=args.max_prompt + args.decode)
+
+    t0 = time.time()
+    res = generate(model, params, batch, steps=args.decode, temperature=0.8,
+                   key=jax.random.PRNGKey(1))
+    dt = time.time() - t0
+    n = args.batch * args.decode
+    print(f"{cfg.name}: {n} tokens in {dt:.2f}s ({n/dt:.1f} tok/s, "
+          f"incl. compile)")
+    for b in range(args.batch):
+        print(f"req[{b}] -> {res.tokens[b].tolist()} "
+              f"(mean logprob {float(jnp.mean(res.logprobs[b])):.2f})")
+
+
+if __name__ == "__main__":
+    main()

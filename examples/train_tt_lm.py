@@ -1,0 +1,60 @@
+"""End-to-end driver: train a TT-compressed LM on the synthetic pipeline.
+
+Presets:
+  tiny  (default)  ~0.5M params, 100 steps — finishes in ~1 min on CPU
+  100m             ~100M params, 300 steps — the brief's end-to-end run
+
+Both train a deepseek-7b-family decoder with the paper's technique on the
+FFN projections, checkpointing every 50 steps (kill it mid-run and rerun:
+it resumes bit-identically).
+
+    PYTHONPATH=src python examples/train_tt_lm.py --preset tiny
+    PYTHONPATH=src python examples/train_tt_lm.py --preset 100m
+"""
+import argparse
+import dataclasses
+import sys
+
+from repro.configs import get_config
+from repro.configs.base import ModelConfig, TTConfig
+from repro.launch import train as train_cli
+
+
+def preset_cfg(preset: str) -> list[str]:
+    if preset == "tiny":
+        return ["--arch", "deepseek-7b", "--variant", "smoke",
+                "--steps", "100", "--batch", "8", "--seq", "64",
+                "--lr", "3e-3", "--tt", "ffn", "--tt-rank", "4",
+                "--ckpt-dir", "/tmp/tt_lm_tiny"]
+    if preset == "100m":
+        # ~100M params: register a scaled config on the fly
+        import repro.configs.deepseek_7b as ds
+        base = ds.SMOKE
+        ds.SMOKE = dataclasses.replace(
+            base, name="deepseek-100m", num_layers=8, d_model=512,
+            num_heads=8, num_kv_heads=4, head_dim=64, d_ff=2048,
+            vocab_size=50257,
+            tt=TTConfig(enabled=True, families=("ffn",), rank=16,
+                        min_factor=2))
+        return ["--arch", "deepseek-7b", "--variant", "smoke",
+                "--steps", "300", "--batch", "8", "--seq", "256",
+                "--lr", "1e-3", "--micro-batches", "2",
+                "--ckpt-dir", "/tmp/tt_lm_100m", "--save-every", "50"]
+    raise SystemExit(f"unknown preset {preset}")
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--preset", default="tiny", choices=["tiny", "100m"])
+    args = ap.parse_args()
+    out = train_cli.main(preset_cfg(args.preset))
+    print(f"preset={args.preset} params={out['params']/1e6:.1f}M "
+          f"loss {out['first_loss']:.3f} -> {out['final_loss']:.3f}")
+    # A resumed segment can be a few noisy steps — only gate fresh runs
+    # with enough steps to see the trend (a full fresh 300-step 100m run
+    # goes ~10.8 → 9.6 on the synthetic stream).
+    if out.get("steps_run", 0) >= 50:
+        assert out["final_loss"] < out["first_loss"], "loss did not improve"
+    else:
+        print(f"(resumed segment of {out.get('steps_run', 0)} steps — "
+              "trend gate skipped)")

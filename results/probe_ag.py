@@ -1,0 +1,56 @@
+"""Probe: largest all-gather / all-reduce ops in one compiled MoE layer."""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import re
+import sys
+import jax
+import jax.numpy as jnp
+
+from repro.configs import build, get_config
+from repro.distributed import sharding as shd
+from repro.models import transformer as tf
+from repro.models.spec import is_spec
+from repro.analysis.roofline import _COLL_RE, _shape_bytes_list, _group_size
+
+arch = sys.argv[1] if len(sys.argv) > 1 else "deepseek_v2_lite_16b"
+mesh = jax.make_mesh((16, 16), ("data", "model"))
+cfg = get_config(arch, "full")
+shd.set_ctx(shd.ShardCtx(mesh, dict(shd.ACT_RULES_TRAIN), ("data",)))
+B, S = 256, 4096
+tf.SCAN_UNROLL = True
+
+model = build(cfg, counts={0: 1, 1: 1} if arch != "mixtral_8x7b" else {0: 1})
+spec_tree = model.param_specs()
+shard_tree = shd.param_shardings(spec_tree, mesh, fsdp=True)
+params_sds = jax.tree.map(
+    lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+    spec_tree, shard_tree, is_leaf=is_spec)
+batch = {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+
+
+def step(p, b):
+    return jax.value_and_grad(lambda pp, bb: model.loss(pp, bb,
+                                                        remat=False))(p, b)
+
+
+txt = jax.jit(step).lower(params_sds, batch).compile().as_text()
+ops = []
+for line in txt.splitlines():
+    m = _COLL_RE.search(line)
+    if not m:
+        continue
+    shapes = _shape_bytes_list(m.group(1))
+    g = _group_size(line)
+    if not shapes or g <= 1:
+        continue
+    ops.append((max(shapes), m.group(2), g, line.strip()[:120]))
+ops.sort(reverse=True)
+from collections import Counter
+tot = Counter()
+for b_, kind, g, _ in ops:
+    tot[kind] += b_
+print("totals (sum of op result bytes):",
+      {k: f"{v:.3e}" for k, v in tot.items()})
+print("\ntop 12 ops:")
+for b_, kind, g, line in ops[:12]:
+    print(f"  {b_:.3e}B g={g:3d} {kind:18s} {line[:100]}")

@@ -1,0 +1,98 @@
+"""Probe: where do dsv2-lite's excess HLO FLOPs come from?
+Compile one MoE layer fwd+bwd (unrolled, 16x16 mesh) and ablate parts."""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import build, get_config
+from repro.distributed import sharding as shd
+from repro.models import transformer as tf
+from repro.models import moe as moe_mod
+from repro.models.spec import is_spec
+
+mesh = jax.make_mesh((16, 16), ("data", "model"))
+cfg = get_config("deepseek_v2_lite_16b", "full")
+rules = dict(shd.ACT_RULES_TRAIN)
+shd.set_ctx(shd.ShardCtx(mesh, rules, ("data",)))
+
+B, S = 256, 4096
+tf.SCAN_UNROLL = True
+
+
+def flops_of(counts, label):
+    model = build(cfg, counts=counts)
+    spec_tree = model.param_specs()
+    shard_tree = shd.param_shardings(spec_tree, mesh, fsdp=True)
+    params_sds = jax.tree.map(
+        lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+        spec_tree, shard_tree, is_leaf=is_spec)
+    batch = {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+
+    def loss_fn(p, b):
+        return model.loss(p, b, remat=False)
+
+    def step(p, b):
+        return jax.value_and_grad(loss_fn)(p, b)
+
+    lowered = jax.jit(step).lower(params_sds, batch)
+    c = lowered.compile()
+    ca = c.cost_analysis()
+    ca = ca if isinstance(ca, dict) else ca[0]
+    print(f"{label:28s} flops/dev={ca.get('flops', 0):.3e} "
+          f"bytes/dev={ca.get('bytes accessed', 0):.3e}")
+    return ca.get("flops", 0)
+
+
+# 1 dense layer only vs dense + 1 moe layer → isolate one MoE layer's cost
+f_dense = flops_of({0: 1, 1: 0}, "1 dense layer (g1=0)")
+f_moe1 = flops_of({0: 1, 1: 1}, "dense + 1 moe layer")
+print(f"one MoE layer marginal: {f_moe1 - f_dense:.3e} flops/dev "
+      f"(x256 = {(f_moe1 - f_dense) * 256:.3e} global)")
+# analytic: routed+shared ≈ 1.4e14+3.6e13 fwd, ~3x for bwd ≈ 5.2e14 global
+print("analytic expectation ≈ 5.2e14 global")
+
+# --- ablate: replace the cumsum position assignment with a fake one --------
+import repro.models.moe as M
+
+orig = M.moe_apply
+
+def moe_no_cumsum(p, cfg_, x, backend="xla"):
+    m = cfg_.moe
+    B, S, d = x.shape
+    T = B * S
+    xt = x.reshape(T, d)
+    logits = xt @ p["router"]
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    gate, eidx = jax.lax.top_k(probs, m.top_k)
+    gate = gate / jnp.sum(gate, -1, keepdims=True)
+    C = int(np.ceil(m.top_k * T / m.num_experts * m.capacity_factor))
+    C = max(C, 8)
+    e_flat = eidx.reshape(-1)
+    # FAKE positions (wrong math, same shapes/ops minus cumsum)
+    pos_in_e = (jnp.arange(T * m.top_k) % C)
+    keep = pos_in_e < C
+    tok = jnp.repeat(jnp.arange(T), m.top_k)
+    buf = jnp.zeros((m.num_experts, C + 1, d), x.dtype)
+    buf = buf.at[e_flat, pos_in_e].set(xt[tok], mode="drop")
+    buf = M.shard_act(buf, ("act_experts", None, None))
+    ys = M._expert_mlp(p["experts"], buf[:, :C], backend)
+    ys = M.shard_act(ys, ("act_experts", None, None))
+    y_tok = ys.at[e_flat, jnp.minimum(pos_in_e, C - 1)].get(
+        mode="fill", fill_value=0)
+    y_tok = jnp.where(keep[:, None], y_tok, 0)
+    w = gate.reshape(-1)[:, None].astype(y_tok.dtype)
+    y = jnp.zeros_like(xt).at[tok].add(y_tok * w)
+    if m.num_shared:
+        y = y + M.mlp_apply(p["shared"], xt, backend)
+    return y.reshape(B, S, d)
+
+M.moe_apply = moe_no_cumsum
+import repro.models.transformer as tfm
+tfm.moe_apply = moe_no_cumsum
+f_moe_nc = flops_of({0: 1, 1: 1}, "dense + 1 moe (no cumsum)")
+print(f"marginal without cumsum: {(f_moe_nc - f_dense):.3e} flops/dev")
+M.moe_apply = orig
+tfm.moe_apply = orig

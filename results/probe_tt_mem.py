@@ -1,0 +1,54 @@
+"""Probe: where do the TT variant's extra HLO bytes come from? (qwen3)"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import jax
+import jax.numpy as jnp
+
+from repro.configs import build, get_config
+from repro.configs.base import TTConfig
+from repro.distributed import sharding as shd
+from repro.models import transformer as tf
+from repro.models.spec import is_spec
+
+mesh = jax.make_mesh((16, 16), ("data", "model"))
+shd.set_ctx(shd.ShardCtx(mesh, dict(shd.ACT_RULES_TRAIN), ("data",)))
+B, S = 256, 4096
+tf.SCAN_UNROLL = True
+
+
+def cost(tt, remat, label, layers=1):
+    cfg = get_config("qwen3_32b", "full", tt=tt)
+    model = build(cfg, counts={0: layers})
+    spec_tree = model.param_specs()
+    shard_tree = shd.param_shardings(spec_tree, mesh, fsdp=True)
+    params_sds = jax.tree.map(
+        lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+        spec_tree, shard_tree, is_leaf=is_spec)
+    batch = {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+
+    def step(p, b):
+        return jax.value_and_grad(
+            lambda pp, bb: model.loss(pp, bb, remat=remat))(p, b)
+
+    c = jax.jit(step).lower(params_sds, batch).compile()
+    ca = c.cost_analysis()
+    ca = ca if isinstance(ca, dict) else ca[0]
+    print(f"{label:34s} flops/dev={ca.get('flops', 0):.3e} "
+          f"bytes/dev={ca.get('bytes accessed', 0):.3e}")
+    return ca.get("flops", 0), ca.get("bytes accessed", 0)
+
+
+TT = TTConfig(enabled=True, families=("ffn",), rank=16, length=2,
+              min_factor=8, backend="xla")
+f0, b0 = cost(None, True, "dense 1L remat")
+f1, b1 = cost(TT, True, "tt-ffn 1L remat")
+f2, b2 = cost(None, False, "dense 1L norem")
+f3, b3 = cost(TT, False, "tt-ffn 1L norem")
+print(f"\nmarginal bytes tt-vs-dense: remat {b1-b0:+.3e}  norem {b3-b2:+.3e}")
+print(f"remat cost: dense {b0-b2:+.3e}  tt {b1-b3:+.3e}")
+
+print("\n-- after tt_m -> model sharding (re-import not needed; rules are "
+      "read at param_shardings time) --")
+f4, b4 = cost(TT, True, "tt-ffn 1L remat (m-sharded)")
+print(f"tt-vs-dense marginal now: {b4-b0:+.3e} B/dev "
+      f"(was {b1-b0:+.3e})")

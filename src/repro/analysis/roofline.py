@@ -1,0 +1,235 @@
+"""Roofline analysis from compiled dry-run artifacts.
+
+Three terms per (arch × shape × mesh), in seconds (brief §ROOFLINE):
+
+  compute    = HLO_FLOPs / (chips × 197e12)
+  memory     = HLO_bytes / (chips × 819e9)
+  collective = collective_bytes / (chips × 50e9)
+
+``cost_analysis()`` is *per-device* after SPMD partitioning (verified
+empirically: a 2·1024³ matmul on 8 devices reports 2·1024³/8), so global =
+per-device × chips and the divisions above reduce to per-device quantities.
+
+collective_bytes is parsed from the partitioned HLO: for every all-gather /
+all-reduce / reduce-scatter / all-to-all / collective-permute we take the
+per-device result shape and apply a ring-cost factor over its replica-group
+size g:  all-gather (g-1)/g·out, all-reduce 2·(g-1)/g·bytes,
+reduce-scatter (g-1)/g·in, all-to-all (g-1)/g·bytes, permute 1·bytes.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+
+import numpy as np
+
+from repro.core import hw
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "token": 0, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLL_RE = re.compile(
+    r"=\s+((?:\([^)]*\))|(?:\S+))\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(", re.M)
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_GROUPS_ID_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes_list(type_str: str) -> list[float]:
+    out = []
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        out.append(n * _DTYPE_BYTES[dt])
+    return out
+
+
+def _shape_bytes(type_str: str) -> float:
+    return sum(_shape_bytes_list(type_str))
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_ID_RE.search(line)
+    if m:                       # iota form [num_groups, group_size]
+        return int(m.group(2))
+    m = _GROUPS_RE.search(line)
+    if m:
+        return len([x for x in m.group(1).split(",") if x.strip() != ""])
+    return 2
+
+
+def collective_bytes_from_hlo(hlo_text: str) -> dict[str, float]:
+    """Per-device bytes-on-wire by op kind (ring model).
+
+    The result type of a ``-start`` op is a tuple ``(operand, result)`` —
+    we take the max (the gathered output for all-gather; in == out for
+    all-reduce / all-to-all) except for reduce-scatter where the *result*
+    (the min) is the per-device shard: ring RS moves (g-1)·out bytes
+    (== (g-1)/g of the unreduced input).
+    """
+    out: dict[str, float] = {}
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        type_str, kind = m.group(1), m.group(2)
+        shapes = _shape_bytes_list(type_str)
+        if not shapes:
+            continue
+        g = _group_size(line)
+        if g <= 1:
+            continue
+        if kind == "reduce-scatter":
+            b, factor = min(shapes), float(g - 1)
+        elif kind == "all-reduce":
+            b, factor = max(shapes), 2.0 * (g - 1) / g
+        elif kind == "collective-permute":
+            b, factor = max(shapes), 1.0
+        else:                       # all-gather / all-to-all
+            b, factor = max(shapes), (g - 1) / g
+        out[kind] = out.get(kind, 0.0) + b * factor
+    out["total"] = sum(v for k, v in out.items() if k != "total")
+    return out
+
+
+@dataclasses.dataclass
+class Roofline:
+    chips: int
+    flops_per_device: float
+    bytes_per_device: float
+    collective_per_device: float
+    model_flops: float                  # analytic 6·N·D / 2·N·D
+    peak_flops: float = hw.PEAK_FLOPS_BF16
+    hbm_bw: float = hw.HBM_BW
+    ici_bw: float = hw.ICI_BW
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops_per_device / self.peak_flops
+
+    @property
+    def t_memory(self) -> float:
+        return self.bytes_per_device / self.hbm_bw
+
+    @property
+    def t_collective(self) -> float:
+        return self.collective_per_device / self.ici_bw
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def t_bound(self) -> float:
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        """MODEL_FLOPS / HLO_FLOPs — remat/redundancy waste detector."""
+        hlo_global = self.flops_per_device * self.chips
+        return self.model_flops / hlo_global if hlo_global else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Useful-compute seconds / bound seconds: how close the dominant
+        term lets us get to spending every cycle on model math."""
+        t_useful = self.model_flops / (self.chips * self.peak_flops)
+        return t_useful / self.t_bound if self.t_bound else 0.0
+
+    def to_dict(self) -> dict:
+        return {
+            "chips": self.chips,
+            "flops_per_device": self.flops_per_device,
+            "bytes_per_device": self.bytes_per_device,
+            "collective_per_device": self.collective_per_device,
+            "model_flops": self.model_flops,
+            "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "bottleneck": self.bottleneck,
+            "useful_flops_ratio": self.useful_flops_ratio,
+            "roofline_fraction": self.roofline_fraction,
+        }
+
+
+def model_flops_estimate(num_params: int, active_params: int, tokens: int,
+                         kind: str) -> float:
+    """6·N·D for training, 2·N·D for inference (N = active params)."""
+    n = active_params or num_params
+    return (6.0 if kind == "train" else 2.0) * n * tokens
+
+
+# ---------------------------------------------------------------------------
+# Report CLI: ``python -m repro.analysis.roofline --table [--variant base]``
+# ---------------------------------------------------------------------------
+
+def _load_cells(results_dir: str, variant: str = "base",
+                mesh: str | None = "16x16") -> list[dict]:
+    import glob
+    import json
+    import os
+    cells = []
+    for path in sorted(glob.glob(os.path.join(results_dir,
+                                              f"*__{variant}.json"))):
+        with open(path) as f:
+            d = json.load(f)
+        if mesh and d.get("mesh") != mesh:
+            continue
+        cells.append(d)
+    return cells
+
+
+def format_table(cells: list[dict]) -> str:
+    """Markdown roofline table, one row per ok cell."""
+    hdr = ("| arch | shape | mesh | t_comp (s) | t_mem (s) | t_coll (s) | "
+           "bottleneck | MODEL/HLO | roofline frac | note |")
+    sep = "|" + "---|" * 10
+    rows = [hdr, sep]
+    for d in cells:
+        if d.get("status") == "skipped":
+            rows.append(f"| {d['arch']} | {d['shape']} | {d['mesh']} | — | —"
+                        f" | — | — | — | — | skipped: {d['reason'][:40]} |")
+            continue
+        if d.get("status") != "ok":
+            rows.append(f"| {d['arch']} | {d['shape']} | {d['mesh']} | — | —"
+                        f" | — | — | — | — | FAILED |")
+            continue
+        r = d["roofline"]
+        rows.append(
+            f"| {d['arch']} | {d['shape']} | {d['mesh']} "
+            f"| {r['t_compute_s']:.3e} | {r['t_memory_s']:.3e} "
+            f"| {r['t_collective_s']:.3e} | {r['bottleneck']} "
+            f"| {r['useful_flops_ratio']:.2f} "
+            f"| {r['roofline_fraction']:.4f} | |")
+    return "\n".join(rows)
+
+
+def main():
+    import argparse
+    import os
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--table", action="store_true")
+    ap.add_argument("--variant", default="base")
+    ap.add_argument("--mesh", default="16x16")
+    ap.add_argument("--results", default=os.path.join(
+        os.path.dirname(__file__), "..", "..", "..", "results", "dryrun"))
+    args = ap.parse_args()
+    cells = _load_cells(args.results, args.variant,
+                        None if args.mesh == "all" else args.mesh)
+    print(format_table(cells))
+
+
+if __name__ == "__main__":
+    main()

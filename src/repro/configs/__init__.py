@@ -1,0 +1,105 @@
+"""Config registry: ``get_config(arch, variant)`` + ``build(cfg)`` → Model.
+
+Layer plans (scan groups) are derived from ModelConfig fields here so the
+per-arch files stay declarative.
+"""
+from __future__ import annotations
+
+import importlib
+from typing import TYPE_CHECKING
+
+import jax.numpy as jnp
+
+from .base import (MLAConfig, ModelConfig, MoEConfig, SHAPES, ShapeSpec,
+                   SSMConfig, TTConfig, shape_applicable)
+
+if TYPE_CHECKING:                      # avoid configs ↔ models import cycle
+    from repro.models.model import Model
+    from repro.models.transformer import Group
+
+ARCH_IDS = [
+    "qwen3_32b", "gemma3_4b", "deepseek_7b", "granite_8b", "jamba_v0_1_52b",
+    "deepseek_v2_lite_16b", "mixtral_8x7b", "internvl2_2b", "mamba2_2p7b",
+    "seamless_m4t_large_v2",
+]
+
+# external ids (--arch flag) → module names
+ALIASES = {a.replace("_", "-"): a for a in ARCH_IDS}
+ALIASES.update({
+    "qwen3-32b": "qwen3_32b", "gemma3-4b": "gemma3_4b",
+    "deepseek-7b": "deepseek_7b", "granite-8b": "granite_8b",
+    "jamba-v0.1-52b": "jamba_v0_1_52b",
+    "deepseek-v2-lite-16b": "deepseek_v2_lite_16b",
+    "mixtral-8x7b": "mixtral_8x7b", "internvl2-2b": "internvl2_2b",
+    "mamba2-2.7b": "mamba2_2p7b",
+    "seamless-m4t-large-v2": "seamless_m4t_large_v2",
+})
+
+
+def get_config(arch: str, variant: str = "full",
+               tt: TTConfig | None = None) -> ModelConfig:
+    mod = importlib.import_module(
+        f"repro.configs.{ALIASES.get(arch, arch)}")
+    cfg: ModelConfig = {"full": mod.FULL, "smoke": mod.SMOKE}[variant]
+    if tt is not None:
+        import dataclasses
+        cfg = dataclasses.replace(cfg, tt=tt)
+    return cfg
+
+
+def make_layer_plan(cfg: ModelConfig
+                    ) -> tuple[list, list | None]:
+    from repro.models.transformer import BlockDef
+    L = cfg.num_layers
+    if cfg.family == "ssm":
+        return [(((BlockDef("ssm", ffn="none"),), L))], None
+
+    if cfg.enc_dec:
+        enc = [((BlockDef("gqa", causal=False),), cfg.num_enc_layers)]
+        dec = [((BlockDef("gqa", cross=True),), L)]
+        return dec, enc
+
+    if cfg.attn_every:                       # jamba: 1 attn per period
+        period = []
+        for i in range(cfg.attn_every):
+            mixer = "gqa" if i == cfg.attn_index else "ssm"
+            moe_here = cfg.moe and (i % cfg.moe.every_n_layers
+                                    == cfg.moe.every_n_layers - 1)
+            period.append(BlockDef(mixer, ffn="moe" if moe_here else "mlp"))
+        return [(tuple(period), L // cfg.attn_every)], None
+
+    if cfg.local_global_period:              # gemma3 5:1 local:global
+        p = cfg.local_global_period
+        local = BlockDef("gqa", window=cfg.local_window, theta=10_000.0)
+        glob = BlockDef("gqa", theta=cfg.rope_theta)
+        period = tuple([local] * (p - 1) + [glob])
+        groups: list[Group] = [(period, L // p)]
+        if L % p:
+            groups.append(((local,), L % p))
+        return groups, None
+
+    if cfg.mla is not None:                  # deepseek-v2
+        groups = []
+        if cfg.moe and cfg.moe.first_dense_ff:
+            groups.append(((BlockDef("mla", ffn="dense0"),), 1))
+            groups.append(((BlockDef("mla", ffn="moe"),), L - 1))
+        else:
+            groups.append(((BlockDef("mla"),), L))
+        return groups, None
+
+    ffn = "moe" if (cfg.moe and cfg.moe.num_experts) else "mlp"
+    return [((BlockDef("gqa", window=cfg.window, ffn=ffn),), L)], None
+
+
+def build(cfg: ModelConfig, param_dtype=jnp.float32,
+          counts: dict[int, int] | None = None,
+          enc_counts: dict[int, int] | None = None) -> "Model":
+    from repro.models.model import build_model
+    """``counts``/``enc_counts``: optional per-group count overrides (the
+    dry-run's reduced-depth roofline compiles use {gi: 1} / {gi: 2})."""
+    groups, enc = make_layer_plan(cfg)
+    if counts:
+        groups = [(p, counts.get(gi, c)) for gi, (p, c) in enumerate(groups)]
+    if enc is not None and enc_counts:
+        enc = [(p, enc_counts.get(gi, c)) for gi, (p, c) in enumerate(enc)]
+    return build_model(cfg, groups, enc, param_dtype)

@@ -1,0 +1,123 @@
+"""Configuration dataclasses: model architecture, TT compression, shapes."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Literal
+
+Family = Literal["dense", "moe", "hybrid", "ssm", "vlm", "audio"]
+
+
+@dataclasses.dataclass(frozen=True)
+class TTConfig:
+    """How the paper's technique is applied to a model (DESIGN.md §4).
+
+    ``families``: which projection families are TT-factorized.  The DSE
+    (core.dse.best_plan) picks the factorization shape at config-build time
+    — offline, exactly like the paper's tool.
+    """
+    enabled: bool = False
+    families: tuple[str, ...] = ("ffn",)     # of: ffn, attn, lm_head, embed
+    rank: int = 16
+    length: int = 2                          # paper §6.4 deploys length-2
+    min_factor: int = 8                      # TPU MXU-utilization constraint
+    backend: str = "xla"                     # xla | pallas_step | pallas_fused2 | auto
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    num_experts: int = 0
+    top_k: int = 2
+    expert_ff: int = 0
+    num_shared: int = 0
+    shared_ff: int = 0
+    capacity_factor: float = 1.25
+    every_n_layers: int = 1                  # MoE at layers where idx % n == n-1
+    first_dense_ff: int = 0                  # dense FFN width for layer 0 (dsv2)
+
+
+@dataclasses.dataclass(frozen=True)
+class MLAConfig:
+    kv_lora: int = 512
+    rope_head_dim: int = 64
+    nope_head_dim: int = 128
+    v_head_dim: int = 128
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMConfig:
+    d_state: int = 128
+    d_conv: int = 4
+    expand: int = 2
+    head_dim: int = 64
+    n_groups: int = 1
+    chunk: int = 256
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: Family
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 128
+    # attention variants
+    qk_norm: bool = False
+    rope_theta: float = 1e6
+    window: int = 0                          # >0 → sliding-window attention
+    local_global_period: int = 0             # gemma3: every Nth layer global
+    local_window: int = 1024
+    mla: MLAConfig | None = None
+    attn_every: int = 0                      # jamba: 1 attn layer per period
+    attn_index: int = 0                      #        at this index
+    # mixture of experts
+    moe: MoEConfig | None = None
+    # state space
+    ssm: SSMConfig | None = None
+    # encoder-decoder (seamless)
+    enc_dec: bool = False
+    num_enc_layers: int = 0
+    # multimodal stubs
+    frontend: str | None = None              # 'vit' | 'speech'
+    frontend_dim: int = 0
+    frontend_tokens: int = 0
+    tie_embeddings: bool = False
+    norm_eps: float = 1e-6
+    # paper technique
+    tt: TTConfig = TTConfig()
+    # attention-kind classification for shape applicability
+    subquadratic: bool = False               # can run long_500k decode
+
+    @property
+    def q_dim(self) -> int:
+        return self.num_heads * self.head_dim
+
+    @property
+    def kv_dim(self) -> int:
+        return self.num_kv_heads * self.head_dim
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    kind: Literal["train", "prefill", "decode"]
+    seq_len: int
+    global_batch: int
+
+
+SHAPES = {
+    "train_4k": ShapeSpec("train_4k", "train", 4096, 256),
+    "prefill_32k": ShapeSpec("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": ShapeSpec("decode_32k", "decode", 32768, 128),
+    "long_500k": ShapeSpec("long_500k", "decode", 524288, 1),
+}
+
+
+def shape_applicable(cfg: ModelConfig, shape: ShapeSpec) -> tuple[bool, str]:
+    """DESIGN.md §5 skip rules."""
+    if shape.name == "long_500k" and not cfg.subquadratic:
+        return False, "pure full-attention arch — long_500k needs sub-quadratic attention"
+    return True, ""

@@ -1,0 +1,68 @@
+"""input_specs(): ShapeDtypeStruct stand-ins for every model input
+(weak-type-correct, shardable, no device allocation) per (arch × shape).
+
+For LM shapes: tokens are [global_batch, seq_len].  ``decode_*``/``long_*``
+lower ``serve_step`` — one new token against a cache of ``seq_len`` — not
+``train_step``.  Multimodal frontends receive precomputed embeddings
+(assignment brief: frontend is a stub).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.model import Model
+from .base import ModelConfig, SHAPES, ShapeSpec
+
+sd = jax.ShapeDtypeStruct
+
+
+def _token_batch_specs(cfg: ModelConfig, B: int, S: int) -> dict:
+    out: dict = {}
+    if cfg.frontend == "vit":
+        S_img = min(cfg.frontend_tokens, S // 2)
+        out["tokens"] = sd((B, S - S_img), jnp.int32)
+        out["image_embeds"] = sd((B, S_img, cfg.frontend_dim), jnp.bfloat16)
+    elif cfg.frontend == "speech":
+        out["speech_embeds"] = sd((B, S, cfg.frontend_dim), jnp.bfloat16)
+        out["tokens"] = sd((B, S), jnp.int32)
+    else:
+        out["tokens"] = sd((B, S), jnp.int32)
+    return out
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec | str, model: Model,
+                cache_dtype=jnp.bfloat16) -> dict:
+    """Returns the kwargs tree for the step function that the dry-run lowers.
+
+    train   → {"batch": {...tokens...}}
+    prefill → {"batch": {...tokens...}}
+    decode  → {"token": [B,1], "cache": <cache tree at seq_len>}
+    """
+    if isinstance(shape, str):
+        shape = SHAPES[shape]
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind in ("train", "prefill"):
+        return {"batch": _token_batch_specs(cfg, B, S)}
+    # decode: one new token with a cache of S
+    enc_T = S if cfg.enc_dec else 0
+    return {
+        "token": sd((B, 1), jnp.int32),
+        "cache": model.cache_shapes(B, S, enc_T=enc_T, dtype=cache_dtype),
+    }
+
+
+def concrete_batch(cfg: ModelConfig, B: int, S: int, seed: int = 0) -> dict:
+    """Small concrete batch for smoke tests / examples (CPU-sized)."""
+    key = jax.random.PRNGKey(seed)
+    specs = _token_batch_specs(cfg, B, S)
+    out = {}
+    for name, s in specs.items():
+        key, sub = jax.random.split(key)
+        if jnp.issubdtype(s.dtype, jnp.integer):
+            out[name] = jax.random.randint(sub, s.shape, 0, cfg.vocab_size,
+                                           s.dtype)
+        else:
+            out[name] = jax.random.normal(sub, s.shape, jnp.float32).astype(
+                s.dtype)
+    return out

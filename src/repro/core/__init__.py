@@ -1,0 +1,7 @@
+# The paper's primary contribution: TT decomposition of FC layers with a
+# pruned design-space exploration and hardware-aware kernel planning.
+from .tt import TTPlan, make_plan, tt_init, tt_decompose, tt_reconstruct, tt_apply  # noqa: F401
+from .flops import (tt_flops, tt_params, dense_flops, dense_params,               # noqa: F401
+                    tt_flops_per_einsum, einsum_loop_bounds)
+from .dse import DSEConfig, TPU_DSE, explore, count_stages, best_plan             # noqa: F401
+from .packing import pack_core, select_blocks, BlockPlan                          # noqa: F401

@@ -1,0 +1,266 @@
+"""Design-space exploration for TT-decomposed FC layers (paper §4).
+
+Pipeline (paper Fig. 4):
+
+  stage 0  "all initial solutions"    — every (m-perm, n-perm, rank-list)
+  stage 1  alignment strategy (§4.1)  — keep only the aligned permutation
+                                        (Definition 1: m desc, n asc)
+  stage 2  vectorization constr. (§4.2.1) — ranks multiples of ``vl``
+  stage 3  initial-layer constr. (§4.2.2) — FLOPs & params below dense
+  stage 4  scalability constr.   (§4.2.3) — thread-count selection + prune
+                                        long low-workload configurations
+
+Stages 0–2 are *counted analytically* (the spaces reach 1e33 — the paper's
+point is precisely that they must be pruned without materialization).
+Stages 3–4 enumerate the surviving aligned ⨯ uniform-rank grid (the paper
+uses uniform intermediate ranks R throughout, cf. §2 footnote 3).
+
+Hardware adaptation: ``vl`` defaults to 8 (RVV, paper-faithful).  TPU mode
+uses ``vl=128`` (lane width) — see DESIGN.md §2.  The thread-count table
+(paper Fig. 9) generalizes to a ``parallel_units`` table; on TPU it chooses
+the grid split of the Pallas kernel instead of pthread counts.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Iterable, Sequence
+
+from .flops import (dense_flops, dense_params, einsum_loop_bounds,
+                    max_tt_rank_at_cut, num_permutations_aligned, prod,
+                    tt_flops, tt_params)
+from .tt import TTPlan, make_plan
+
+
+# ---------------------------------------------------------------------------
+# Factorization enumeration
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=None)
+def multiplicative_partitions(n: int, min_factor: int = 2
+                              ) -> tuple[tuple[int, ...], ...]:
+    """All multisets of integers ≥ ``min_factor`` with product ``n``,
+    each returned ascending.  ``n`` itself is included as the length-1
+    factorization."""
+    out: list[tuple[int, ...]] = []
+
+    def rec(remaining: int, start: int, acc: tuple[int, ...]):
+        if remaining == 1:
+            if acc:
+                out.append(acc)
+            return
+        f = start
+        while f * f <= remaining:
+            if remaining % f == 0:
+                rec(remaining // f, f, acc + (f,))
+            f += 1
+        if remaining >= start:
+            out.append(acc + (remaining,))
+
+    rec(n, min_factor, ())
+    return tuple(sorted(set(out)))
+
+
+def factorizations_by_length(n: int, max_d: int) -> dict[int, list[tuple[int, ...]]]:
+    by_len: dict[int, list[tuple[int, ...]]] = {}
+    for f in multiplicative_partitions(n):
+        if len(f) <= max_d:
+            by_len.setdefault(len(f), []).append(f)
+    return by_len
+
+
+def aligned_pair(fm: Sequence[int], fn: Sequence[int]
+                 ) -> tuple[tuple[int, ...], tuple[int, ...]]:
+    """Definition 1: output factors descending, input factors ascending."""
+    return tuple(sorted(fm, reverse=True)), tuple(sorted(fn))
+
+
+def aligned_combination_shapes(M: int, N: int, max_d: int = 12, min_d: int = 2,
+                               min_factor: int = 2
+                               ) -> list[tuple[tuple[int, ...], tuple[int, ...]]]:
+    """All aligned (ms, ns) combination shapes with equal length d."""
+    fm_by = factorizations_by_length(M, max_d)
+    fn_by = factorizations_by_length(N, max_d)
+    out = []
+    for d in range(min_d, max_d + 1):
+        for fm in fm_by.get(d, ()):
+            if fm[0] < min_factor:       # ascending → fm[0] is the minimum
+                continue
+            for fn in fn_by.get(d, ()):
+                if fn[0] < min_factor:
+                    continue
+                out.append(aligned_pair(fm, fn))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Configuration
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class DSEConfig:
+    vl: int = 8                    # vector length (8 = RVV paper; 128 = TPU lane)
+    rank_cap: int = 3064           # paper's benchmark rank ceiling
+    rank_step: int = 8             # grid step for enumerated solutions
+    max_d: int = 12                # paper Fig. 10 explores lengths 2–12
+    min_d: int = 2
+    min_factor: int = 2            # discard shapes with any factor below this
+                                   # (paper: 2; TPU mode: 8 so every einsum
+                                   # dim can feed the 8-sublane register file;
+                                   # recovers the paper's §6.4 balanced picks)
+    batch: int = 1                 # tokens folded into the chain's b-dim
+    # paper Fig. 9: FLOPs → thread count on the SpacemiT K1
+    thread_table: tuple[tuple[float, int], ...] = (
+        (2e6, 1), (4e6, 2), (8e6, 3), (float("inf"), 4))
+    max_scalable_d: int = 4        # prune length > this …
+    heavy_flops_min: float = 8e6   # … when the heaviest einsum is below this
+
+
+TPU_DSE = DSEConfig(vl=128, rank_step=128, min_factor=8,
+                    # TPU analogue of Fig. 9: FLOPs → number of TensorCores
+                    # worth of grid parallelism before per-kernel overheads
+                    # dominate (napkin: ~5 µs launch+pipeline fill @197TF/s).
+                    thread_table=((1e9, 1), (4e9, 2), (1.6e10, 4),
+                                  (float("inf"), 8)))
+
+
+def select_threads(flops: float, cfg: DSEConfig) -> int:
+    """Paper §4.2.3 / Fig. 9: workload-dependent parallelism selection."""
+    for bound, t in cfg.thread_table:
+        if flops < bound:
+            return t
+    return cfg.thread_table[-1][1]
+
+
+# ---------------------------------------------------------------------------
+# Analytic stage counting (stages 0–2)
+# ---------------------------------------------------------------------------
+
+def _rank_choice_counts(ms, ns, cap: int, multiple_of: int = 1) -> float:
+    """Π over internal cuts of the number of admissible r_t values for the
+    *aligned* permutation (representative; see module docstring)."""
+    d = len(ms)
+    total = 1.0
+    for t in range(1, d):
+        cut = min(max_tt_rank_at_cut(ms, ns, t), cap)
+        k = cut // multiple_of
+        if k == 0:
+            return 0.0
+        total *= k
+    return total
+
+
+def count_stages(M: int, N: int, cfg: DSEConfig = DSEConfig()) -> dict[str, float]:
+    """Reproduce the count columns of Tables 1–2.
+
+    ``all_initial`` = Σ_shapes perms(m)·perms(n)·Π_t |{1..cap_t}|
+    ``aligned``     = Σ_shapes Π_t |{1..cap_t}|
+    ``vectorized``  = Σ_shapes Π_t |{vl, 2vl, .. cap_t}|
+    """
+    shapes = aligned_combination_shapes(M, N, cfg.max_d, cfg.min_d, 2)
+    c_all = c_aligned = c_vec = 0.0
+    for ms, ns in shapes:
+        rc = _rank_choice_counts(ms, ns, cfg.rank_cap, 1)
+        c_all += num_permutations_aligned(ms, ns) * rc
+        c_aligned += rc
+        c_vec += _rank_choice_counts(ms, ns, cfg.rank_cap, cfg.vl)
+    return {"all_initial": c_all, "aligned": c_aligned, "vectorized": c_vec}
+
+
+# ---------------------------------------------------------------------------
+# Enumerated pipeline (stages 2–4) → concrete solutions
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Solution:
+    plan: TTPlan
+    flops: int
+    params: int
+    threads: tuple[int, ...]       # per einsum, execution order (core d first)
+    max_einsum_flops: int
+
+    @property
+    def d(self) -> int:
+        return self.plan.d
+
+
+@dataclasses.dataclass
+class DSEResult:
+    M: int
+    N: int
+    counts: dict[str, float]
+    solutions: list[Solution]      # sorted by FLOPs ascending
+
+    def best(self, length: int | None = None, rank: int | None = None
+             ) -> Solution | None:
+        for s in self.solutions:
+            if length is not None and s.d != length:
+                continue
+            if rank is not None and any(r not in (1, rank)
+                                        for r in s.plan.ranks):
+                continue
+            return s
+        return None
+
+
+def _uniform_rank_grid(ms, ns, cfg: DSEConfig) -> Iterable[int]:
+    d = len(ms)
+    cap = min(cfg.rank_cap,
+              min(max_tt_rank_at_cut(ms, ns, t) for t in range(1, d)))
+    r = cfg.vl
+    while r <= cap:
+        yield r
+        r += cfg.rank_step
+
+
+def explore(M: int, N: int, cfg: DSEConfig = DSEConfig(),
+            with_counts: bool = True) -> DSEResult:
+    """Run the full paper pipeline for one FC layer ``[N → M]``."""
+    counts = count_stages(M, N, cfg) if with_counts else {}
+    dense_f, dense_p = dense_flops(M, N), dense_params(M, N)
+
+    survivors: list[Solution] = []
+    n_vec = n_init = 0
+    for ms, ns in aligned_combination_shapes(M, N, cfg.max_d, cfg.min_d,
+                                             cfg.min_factor):
+        for R in _uniform_rank_grid(ms, ns, cfg):
+            n_vec += 1
+            plan = make_plan(ms, ns, R)
+            f = tt_flops(ms, ns, plan.ranks)
+            p = tt_params(ms, ns, plan.ranks)
+            # stage 3: initial-layer constraint (§4.2.2)
+            if f >= dense_f or p >= dense_p:
+                continue
+            n_init += 1
+            # stage 4: scalability constraint (§4.2.3)
+            bounds = einsum_loop_bounds(ms, ns, plan.ranks, cfg.batch)
+            heaviest = max(b["flops"] for b in bounds)
+            if plan.d > cfg.max_scalable_d and heaviest < cfg.heavy_flops_min:
+                continue
+            threads = tuple(select_threads(b["flops"], cfg) for b in bounds)
+            survivors.append(Solution(plan, f, p, threads, heaviest))
+
+    survivors.sort(key=lambda s: (s.flops, s.params))
+    counts["vectorized_enumerated"] = n_vec
+    counts["initial_layer"] = n_init
+    counts["scalability"] = len(survivors)
+    return DSEResult(M, N, counts, survivors)
+
+
+def best_plan(M: int, N: int, rank: int = 8, length: int | None = 2,
+              cfg: DSEConfig | None = None, min_factor: int | None = None
+              ) -> TTPlan | None:
+    """The layer-level entry point used by TTLinear: min-FLOPs surviving
+    solution at uniform rank ``rank`` (paper §6.4 deploys length-2,
+    min-FLOPs solutions)."""
+    cfg = cfg or DSEConfig(vl=min(rank, 8), rank_step=max(rank, 8),
+                           rank_cap=rank)
+    # fast path: only enumerate the requested rank
+    cfg = dataclasses.replace(cfg, vl=rank, rank_step=rank, rank_cap=rank)
+    if min_factor is not None:
+        cfg = dataclasses.replace(cfg, min_factor=min_factor)
+    res = explore(M, N, cfg, with_counts=False)
+    sol = res.best(length=length, rank=rank)
+    if sol is None and length is not None:
+        sol = res.best(length=None, rank=rank)   # relax the length preference
+    return sol.plan if sol else None

@@ -1,0 +1,132 @@
+"""Analytic parameter / FLOP models for TT-decomposed FC layers.
+
+Implements Eq. (4) (parameters), Eq. (11)/(13) (FLOPs) of the paper
+*Optimizing Tensor Train Decomposition in DNNs for RISC-V Architectures*.
+
+Conventions (paper §2): an FC layer ``y = Wx + b`` with ``W ∈ R^{M×N}`` is
+factorized with output factors ``ms = [m_1..m_d]`` (``Π m_t = M``) and input
+factors ``ns = [n_1..n_d]`` (``Π n_t = N``) and TT-ranks
+``ranks = [r_0..r_d]`` with ``r_0 = r_d = 1``.  Core ``t`` has shape
+``[r_{t-1}, n_t, m_t, r_t]``.
+
+All functions are pure Python over ints so the DSE can run without touching
+jax device state.
+"""
+from __future__ import annotations
+
+import math
+from typing import Sequence
+
+
+def prod(xs: Sequence[int]) -> int:
+    out = 1
+    for x in xs:
+        out *= int(x)
+    return out
+
+
+def dense_params(M: int, N: int, bias: bool = True) -> int:
+    """Parameters of the unfactorized FC layer: M*N (+ M bias)."""
+    return M * N + (M if bias else 0)
+
+
+def dense_flops(M: int, N: int, bias: bool = True) -> int:
+    """FLOPs of one dense matrix–vector product: 2*M*N (+ M bias adds)."""
+    return 2 * M * N + (M if bias else 0)
+
+
+def tt_params(ms: Sequence[int], ns: Sequence[int], ranks: Sequence[int],
+              bias: bool = True) -> int:
+    """Eq. (4): Memory = M + Σ_t r_{t-1}·m_t·n_t·r_t."""
+    d = len(ms)
+    assert len(ns) == d and len(ranks) == d + 1
+    core = sum(ranks[t] * ms[t] * ns[t] * ranks[t + 1] for t in range(d))
+    return core + (prod(ms) if bias else 0)
+
+
+def tt_flops_step(ms: Sequence[int], ns: Sequence[int], ranks: Sequence[int],
+                  t: int) -> int:
+    """Eq. (13): FLOPs of einsum step ``t`` (1-indexed like the paper).
+
+    FLOPs^(t) = 2 · r_t · r_{t-1} · m_t···m_d · n_1···n_t
+    """
+    d = len(ms)
+    assert 1 <= t <= d
+    m_tail = prod(ms[t - 1:])          # m_t … m_d
+    n_head = prod(ns[:t])              # n_1 … n_t
+    return 2 * ranks[t] * ranks[t - 1] * m_tail * n_head
+
+
+def tt_flops(ms: Sequence[int], ns: Sequence[int], ranks: Sequence[int],
+             bias: bool = True) -> int:
+    """Eq. (11): FLOPs = M + Σ_t FLOPs^(t)."""
+    d = len(ms)
+    total = sum(tt_flops_step(ms, ns, ranks, t) for t in range(1, d + 1))
+    return total + (prod(ms) if bias else 0)
+
+
+def tt_flops_per_einsum(ms: Sequence[int], ns: Sequence[int],
+                        ranks: Sequence[int]) -> list[int]:
+    """Per-einsum FLOPs, ordered t = 1 … d (paper's last-executed first)."""
+    return [tt_flops_step(ms, ns, ranks, t) for t in range(1, len(ms) + 1)]
+
+
+def max_tt_rank_at_cut(ms: Sequence[int], ns: Sequence[int], t: int) -> int:
+    """Paper footnote 5: the maximum feasible r_t is bounded by the matrix
+    rank of the t-th unfolding: min(Π_{i≤t} m_i·n_i, Π_{i>t} m_i·n_i)."""
+    left = prod(ms[:t]) * prod(ns[:t])
+    right = prod(ms[t:]) * prod(ns[t:])
+    return min(left, right)
+
+
+def clip_ranks(ms: Sequence[int], ns: Sequence[int],
+               ranks: Sequence[int]) -> tuple[int, ...]:
+    """Clip a requested rank list to the feasible TT max rank at each cut."""
+    d = len(ms)
+    out = [1]
+    for t in range(1, d):
+        out.append(min(int(ranks[t]), max_tt_rank_at_cut(ms, ns, t)))
+    out.append(1)
+    return tuple(out)
+
+
+def compression_ratio(ms, ns, ranks, bias: bool = True) -> float:
+    return dense_params(prod(ms), prod(ns), bias) / max(
+        1, tt_params(ms, ns, ranks, bias))
+
+
+def einsum_loop_bounds(ms: Sequence[int], ns: Sequence[int],
+                       ranks: Sequence[int], batch: int = 1
+                       ) -> list[dict[str, int]]:
+    """Loop bounds {mt, bt, nt, rt, rt_1} of each einsum kernel, in
+    *execution* order (core d first), as in paper Listing 2 / Table 3.
+
+    ``bt`` is the flattened remainder dimension; with a token batch ``batch``
+    it is folded in (paper evaluates batch=1 vectors; we generalize).
+    """
+    d = len(ms)
+    N = prod(ns)
+    out = []
+    # execution order: t = d, d-1, …, 1
+    b = batch * N
+    for t in range(d, 0, -1):
+        nt, mt = ns[t - 1], ms[t - 1]
+        rt, rt_1 = ranks[t], ranks[t - 1]
+        bt = b // (nt * rt)
+        out.append(dict(t=t, mt=mt, bt=bt, nt=nt, rt=rt, rt_1=rt_1,
+                        flops=2 * mt * bt * nt * rt * rt_1))
+        # next state has size mt * bt * rt_1
+        b = mt * bt * rt_1
+    return out
+
+
+def num_permutations_aligned(ms: Sequence[int], ns: Sequence[int]) -> int:
+    """Proposition 4: number of (m-perm, n-perm) pairs collapsing onto one
+    aligned representative: (d!)² / (k_1!·…·k_j!) where k_i are the
+    multiplicities of repeated values within each list."""
+    d = len(ms)
+    denom = 1
+    for seq in (ms, ns):
+        for v in set(seq):
+            denom *= math.factorial(list(seq).count(v))
+    return (math.factorial(d) ** 2) // denom

@@ -1,0 +1,42 @@
+"""Target hardware model: TPU v5e (one chip) + ICI mesh.
+
+Single source of truth for every roofline / DSE / block-selection constant.
+The container executes on CPU; these describe the *target*.
+"""
+
+# --- per-chip compute / memory -------------------------------------------
+PEAK_FLOPS_BF16 = 197e12          # FLOP/s
+PEAK_FLOPS_FP32 = PEAK_FLOPS_BF16 / 4
+HBM_BYTES = 16 * 2 ** 30          # 16 GiB
+HBM_BW = 819e9                    # B/s
+VMEM_BYTES = 64 * 2 ** 20         # conservative v5e figure
+VMEM_BUDGET_BYTES = 32 * 2 ** 20  # ~half kept for pipelining/compiler slack
+
+# --- vector/matrix unit geometry ------------------------------------------
+MXU = 128                         # systolic array dim
+LANES = 128
+SUBLANES = 8
+
+# --- interconnect ----------------------------------------------------------
+ICI_BW = 50e9                     # B/s per link (prompt-specified)
+
+# --- mesh ------------------------------------------------------------------
+POD_CHIPS = 256                   # 16 x 16 single pod
+NUM_PODS = 2
+
+
+def ridge_intensity(dtype_bytes: int = 2) -> float:
+    """FLOP/byte at which compute and HBM terms balance."""
+    return PEAK_FLOPS_BF16 / HBM_BW
+
+
+def compute_seconds(flops: float, chips: int = 1) -> float:
+    return flops / (chips * PEAK_FLOPS_BF16)
+
+
+def memory_seconds(bytes_: float, chips: int = 1) -> float:
+    return bytes_ / (chips * HBM_BW)
+
+
+def collective_seconds(bytes_: float, chips: int = 1) -> float:
+    return bytes_ / (chips * ICI_BW)

@@ -1,0 +1,122 @@
+"""Compile-time core packing and block-shape selection (paper §4.3 → TPU).
+
+The paper's compiler pipeline for the einsum kernel is:
+  array packing (compile-time re-layout of the constant core G)
+  → vectorize the r-loop (multiples of vl)
+  → register blocking chosen by an analytical load/store model (§4.3.4)
+  → L2 cache tiling chosen by a cache-way occupancy model (§4.3.5).
+
+TPU transfer (DESIGN.md §2): the constant core is packed into an
+MXU-friendly matrix at parameter-build time; "registers" become VMEM tiles;
+the L/S-instruction objective becomes an HBM-bytes-moved objective; the
+L2-fit test (Eq. 26–28) becomes a VMEM-residency constraint.  The shape of
+the model is identical — minimize memory traffic subject to a fast-memory
+capacity — only the constants changed.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from . import hw
+from .flops import prod
+
+
+def pack_core(G):
+    """Compile-time array packing of one TT core.
+
+    ``G [r_{t-1}, n_t, m_t, r_t]``  →  ``P [(n_t·r_t), (m_t·r_{t-1})]``
+    so that the step contraction becomes ``state2 @ P`` on the MXU.  This is
+    the paper's §4.3.1 re-layout: executed offline (at parameter build /
+    checkpoint load), never at inference time.
+    """
+    r0, n, m, r1 = G.shape
+    return G.transpose(1, 3, 2, 0).reshape(n * r1, m * r0)
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockPlan:
+    """Chosen VMEM tiling for one einsum step out[m,b,r0] += G·x."""
+    bm: int          # m-tile
+    bb: int          # b-tile
+    bn: int          # n-tile (grid-accumulated)
+    traffic_bytes: int
+    vmem_bytes: int
+
+
+def _round_up(x: int, mult: int) -> int:
+    return ((x + mult - 1) // mult) * mult
+
+
+def _divisors_pow2(n: int, lo: int, hi: int):
+    v = lo
+    while v <= min(n, hi):
+        yield v
+        v *= 2
+    if n < hi and (n & (n - 1)) != 0:
+        yield n           # the full (non-pow2) extent, padded by mosaic
+
+
+def select_blocks(mt: int, bt: int, nt: int, rt: int, rt_1: int,
+                  itemsize: int = 4,
+                  vmem_budget: int = hw.VMEM_BUDGET_BYTES) -> BlockPlan:
+    """Analytical block-shape selection (paper §4.3.4 step 2–3).
+
+    HBM traffic model for grid (m/bm, b/bb, n/bn) with n innermost
+    (accumulation):
+
+      bytes(G)   = ceil(m/bm) … G re-read once per *b*-tile
+      bytes(X)   = ceil(b/bb) … X re-read once per *m*-tile
+      bytes(out) = written once
+
+    Minimize total subject to double-buffered VMEM residency:
+      2·(bm·bn·rt·rt_1 + bb·bn·rt + bm·bb·rt_1)·itemsize ≤ budget.
+    Alignment: last dim padded to the 128-lane register shape, second-minor
+    to 8 sublanes (the TPU analogue of the paper's vl-multiple rule).
+    """
+    g_total = mt * nt * rt * rt_1 * itemsize
+    x_total = bt * nt * rt * itemsize
+    o_total = mt * bt * rt_1 * itemsize
+
+    best: BlockPlan | None = None
+    for bm in _divisors_pow2(mt, 8, 512):
+        for bb in _divisors_pow2(bt, 8, 1024):
+            for bn in _divisors_pow2(nt, 8, 2048):
+                vmem = 2 * itemsize * (bm * bn * rt * rt_1
+                                       + bb * bn * rt + bm * bb * rt_1)
+                if vmem > vmem_budget:
+                    continue
+                n_mtiles = -(-mt // bm)
+                n_btiles = -(-bt // bb)
+                traffic = (g_total * n_btiles + x_total * n_mtiles + o_total)
+                cand = BlockPlan(bm, bb, bn, traffic, vmem)
+                if best is None or (cand.traffic_bytes, -cand.vmem_bytes) < \
+                        (best.traffic_bytes, -best.vmem_bytes):
+                    best = cand
+    if best is None:      # degenerate tiny problem: single block
+        best = BlockPlan(min(mt, 8), min(bt, 8), min(nt, 8),
+                         g_total + x_total + o_total, 0)
+    return best
+
+
+def chain_fits_vmem(plan_sizes: list[int], itemsize: int = 4,
+                    vmem_budget: int = hw.VMEM_BUDGET_BYTES) -> bool:
+    """Paper Eq. (26) analogue: can the whole einsum chain for one batch
+    tile stay resident in VMEM (weights + largest two consecutive states)?"""
+    peak = 0
+    for a, b in zip(plan_sizes, plan_sizes[1:]):
+        peak = max(peak, a + b)
+    return peak * itemsize * 2 <= vmem_budget
+
+
+def fused2_batch_tile(N: int, M: int, mid: int, weights: int,
+                      itemsize: int = 4,
+                      vmem_budget: int = hw.VMEM_BUDGET_BYTES) -> int:
+    """Largest power-of-two batch tile such that X-tile + intermediate +
+    Y-tile + packed weights double-buffer in VMEM (fused d=2 kernel)."""
+    bb = 1024
+    while bb > 8:
+        need = 2 * itemsize * (bb * (N + mid + M)) + itemsize * weights
+        if need <= vmem_budget:
+            return bb
+        bb //= 2
+    return 8

@@ -1,0 +1,239 @@
+"""Tensor-Train matrix core math (T3F conventions) in JAX.
+
+A TT-matrix for ``W ∈ R^{M×N}`` (``y = W x``) is a list of ``d`` cores,
+core ``t`` (1-indexed) of shape ``[r_{t-1}, n_t, m_t, r_t]`` — exactly the
+layout used by the paper (§2) and the T3F library.
+
+The forward pass is the paper's Listing-1 einsum chain:
+
+    state  = x reshaped to [b_d, n_d, r_d]
+    out_t  = einsum("rnmk,bnk->mbr", G_t, state)      # t = d … 1
+    y      = flatten(out_1) (+ bias)
+
+which performs **zero transposes** between steps — only reshapes — the
+property the paper's compiler work relies on.  We preserve it here; the
+single final transpose ([M, B] → [B, M]) is the price of a leading token
+batch, and is absorbed by XLA into the consumer.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .flops import (clip_ranks, dense_params, prod, tt_flops, tt_params)
+
+
+@dataclasses.dataclass(frozen=True)
+class TTPlan:
+    """A fully specified factorization choice for one FC layer."""
+    ms: tuple[int, ...]          # output factors, Π = M
+    ns: tuple[int, ...]          # input factors,  Π = N
+    ranks: tuple[int, ...]       # r_0 … r_d (r_0 = r_d = 1)
+
+    def __post_init__(self):
+        assert len(self.ms) == len(self.ns), (self.ms, self.ns)
+        assert len(self.ranks) == len(self.ms) + 1
+        assert self.ranks[0] == 1 and self.ranks[-1] == 1
+
+    @property
+    def d(self) -> int:
+        return len(self.ms)
+
+    @property
+    def M(self) -> int:
+        return prod(self.ms)
+
+    @property
+    def N(self) -> int:
+        return prod(self.ns)
+
+    @property
+    def core_shapes(self) -> list[tuple[int, int, int, int]]:
+        return [(self.ranks[t], self.ns[t], self.ms[t], self.ranks[t + 1])
+                for t in range(self.d)]
+
+    @property
+    def params(self) -> int:
+        return tt_params(self.ms, self.ns, self.ranks, bias=False)
+
+    @property
+    def flops(self) -> int:
+        return tt_flops(self.ms, self.ns, self.ranks, bias=False)
+
+    @property
+    def compression(self) -> float:
+        return dense_params(self.M, self.N, bias=False) / max(1, self.params)
+
+    def describe(self) -> str:
+        return (f"TT[M={self.M}={'x'.join(map(str, self.ms))}, "
+                f"N={self.N}={'x'.join(map(str, self.ns))}, "
+                f"r={list(self.ranks)}] params={self.params} "
+                f"flops={self.flops} cx={self.compression:.1f}x")
+
+
+def make_plan(ms: Sequence[int], ns: Sequence[int],
+              rank: int | Sequence[int]) -> TTPlan:
+    """Build a TTPlan; a scalar ``rank`` means [1, R, …, R, 1] (paper §2),
+    clipped to the feasible max rank at each cut (paper footnote 5)."""
+    ms, ns = tuple(int(m) for m in ms), tuple(int(n) for n in ns)
+    d = len(ms)
+    if isinstance(rank, int):
+        ranks = [1] + [rank] * (d - 1) + [1]
+    else:
+        ranks = list(rank)
+    return TTPlan(ms, ns, clip_ranks(ms, ns, ranks))
+
+
+# ---------------------------------------------------------------------------
+# Initialization / conversion
+# ---------------------------------------------------------------------------
+
+def tt_init(key: jax.Array, plan: TTPlan, dtype=jnp.float32,
+            target_std: float | None = None) -> list[jax.Array]:
+    """Random TT cores such that the implied dense W has elementwise std
+    ≈ ``target_std`` (default: Glorot, sqrt(2/(M+N))).
+
+    For iid N(0, σ²) cores, Var(W_ij) = (Π_t σ_t²) · (Π_{t=1}^{d-1} r_t), so
+    each core gets σ_t = (target_var / Π r_t)^(1/2d).
+    """
+    if target_std is None:
+        target_std = float(np.sqrt(2.0 / (plan.M + plan.N)))
+    rank_prod = prod(plan.ranks[1:-1]) if plan.d > 1 else 1
+    sigma = (target_std ** 2 / max(rank_prod, 1)) ** (1.0 / (2 * plan.d))
+    keys = jax.random.split(key, plan.d)
+    return [jax.random.normal(k, shape, dtype) * jnp.asarray(sigma, dtype)
+            for k, shape in zip(keys, plan.core_shapes)]
+
+
+def tt_decompose(W: jax.Array | np.ndarray, plan: TTPlan,
+                 ) -> list[np.ndarray]:
+    """TT-SVD of a dense ``W [M, N]`` into cores per ``plan`` (numpy;
+    offline tooling — matches what T3F's ``to_tt_matrix`` computes).
+
+    Ranks are clipped to the matrix rank of each unfolding, so for
+    sufficiently large requested ranks reconstruction is exact.
+    """
+    W = np.asarray(W, np.float64)
+    assert W.shape == (plan.M, plan.N)
+    d, ms, ns, ranks = plan.d, plan.ms, plan.ns, plan.ranks
+    # [M, N] -> [m_1.., n_1..] -> interleave -> [n_1, m_1, n_2, m_2, ...]
+    T = W.reshape(ms + ns)
+    perm = []
+    for t in range(d):
+        perm += [d + t, t]          # (n_t, m_t)
+    T = T.transpose(perm)
+    cores: list[np.ndarray] = []
+    r_prev = 1
+    for t in range(d):
+        nt, mt = ns[t], ms[t]
+        rest = T.size // (r_prev * nt * mt)
+        mat = T.reshape(r_prev * nt * mt, rest)
+        U, S, Vh = np.linalg.svd(mat, full_matrices=False)
+        r_t = 1 if t == d - 1 else min(ranks[t + 1], len(S))
+        cores.append(U[:, :r_t].reshape(r_prev, nt, mt, r_t))
+        T = (S[:r_t, None] * Vh[:r_t]).reshape((r_t,) + tuple(
+            x for pair in [(ns[i], ms[i]) for i in range(t + 1, d)]
+            for x in pair))
+        r_prev = r_t
+    # absorb the residual scalar chain into the last core
+    cores[-1] = cores[-1] * T.reshape(1, 1, 1, 1) if T.ndim == 1 and T.size == 1 \
+        else cores[-1]
+    return [c.astype(np.float32) for c in cores]
+
+
+def tt_reconstruct(cores: Sequence[jax.Array]) -> jax.Array:
+    """Contract TT cores back to the dense ``W [M, N]`` (testing only)."""
+    d = len(cores)
+    # acc over processed cores: [n_1..n_t, m_1..m_t, r_t]
+    acc = None
+    ms, ns = [], []
+    for t, G in enumerate(cores):
+        r0, nt, mt, r1 = G.shape
+        ns.append(nt)
+        ms.append(mt)
+        if acc is None:
+            acc = G  # [1, n, m, r] -> treat as [n, m, r]
+            acc = acc.reshape(nt, mt, r1)
+        else:
+            # acc [..., r0] x G [r0, n, m, r1] -> [..., n, m, r1]
+            acc = jnp.tensordot(acc, G, axes=[[-1], [0]])
+    # acc dims: n_1, m_1, n_2, m_2, ..., n_d, m_d
+    perm_m = [2 * t + 1 for t in range(d)]
+    perm_n = [2 * t for t in range(d)]
+    acc = acc.reshape(tuple(x for t in range(d) for x in (ns[t], ms[t])))
+    acc = acc.transpose(perm_m + perm_n)
+    return acc.reshape(prod(ms), prod(ns))
+
+
+# ---------------------------------------------------------------------------
+# Forward (paper Listing 1, batched)
+# ---------------------------------------------------------------------------
+
+def tt_apply_chain(cores: Sequence[jax.Array], x: jax.Array) -> jax.Array:
+    """Paper-faithful einsum chain.  ``x [B, N] → y [B, M]`` (no bias).
+
+    Executes cores d → 1 with einsum("rnmk,bnk->mbr") and reshapes only,
+    exactly as T3F / paper Listing 1; the token batch B is folded into the
+    chain's ``b`` dimension and recovered by one final transpose.
+    """
+    B = x.shape[0]
+    state = x.reshape(B, -1)                      # [B, N]
+    d = len(cores)
+    # fold B into the leading position of the b-block
+    state = state.reshape(-1)                     # [B*N]
+    b = state.shape[0]
+    for t in range(d - 1, -1, -1):
+        G = cores[t]
+        r0, nt, mt, r1 = G.shape
+        state = state.reshape(b // (nt * r1), nt, r1)
+        # einsum("rnmk,bnk->mbr")
+        state = jnp.einsum("rnmk,bnk->mbr", G, state,
+                           preferred_element_type=state.dtype)
+        b = state.size
+        state = state.reshape(-1)
+    M = b // B
+    # layout is [m_1, …, m_d, B] → transpose to [B, M]
+    return state.reshape(M, B).T
+
+
+def tt_apply_batched(cores: Sequence[jax.Array], x: jax.Array) -> jax.Array:
+    """SPMD-friendly chain: the token axis stays leading throughout.
+
+    The paper's chain (``tt_apply_chain``) folds the token batch into the
+    chain's ``b`` dimension — the right loop fusion for a single CPU, but
+    it reshapes *through* the batch axis, so GSPMD loses the data-parallel
+    sharding and re-gathers activations at every step (measured: qwen3
+    train t_coll 44.7 → 448.7 s with naive TT; EXPERIMENTS §Perf it. 3).
+    Keeping ``T`` leading makes every reshape feature-only: the chain is
+    collective-free and the final [m, B] transpose disappears.
+
+    Identical math: the paper's b_t always factors as B·(b_t/B) with B
+    leading, so this is the same contraction with T pulled outside.
+    """
+    T = x.shape[0]
+    state = x                                     # [T, F]
+    for t in range(len(cores) - 1, -1, -1):
+        G = cores[t]
+        r0, nt, mt, r1 = G.shape
+        f = state.shape[-1] if state.ndim == 2 else int(
+            np.prod(state.shape[1:]))
+        state = state.reshape(T, f // (nt * r1), nt, r1)
+        # paper step einsum with the token axis carried through
+        state = jnp.einsum("rnmk,tbnk->tmbr", G, state,
+                           preferred_element_type=state.dtype)
+        state = state.reshape(T, -1)
+    return state                                  # [T, M] (m-major == M)
+
+
+def tt_apply(cores: Sequence[jax.Array], x: jax.Array,
+             bias: jax.Array | None = None) -> jax.Array:
+    """Apply a TT layer to ``x [..., N]`` → ``[..., M]``."""
+    lead = x.shape[:-1]
+    y = tt_apply_batched(cores, x.reshape(-1, x.shape[-1]))
+    if bias is not None:
+        y = y + bias
+    return y.reshape(lead + (y.shape[-1],))

@@ -1,0 +1,189 @@
+"""Logical-axis sharding rules (DP / FSDP / TP / SP / EP / pod).
+
+Parameters carry logical axis names in their ``ParamSpec.axes``; activations
+are annotated at call sites via ``shard_act``.  This module resolves both to
+``PartitionSpec``s for the active mesh, dropping any assignment whose dim is
+not divisible by the mesh axis (GSPMD could pad, but even sharding keeps the
+roofline analysis honest).
+
+Mesh axes: ``("data", "model")`` single-pod, ``("pod", "data", "model")``
+multi-pod.  The ``pod`` axis behaves as an outer data-parallel axis: batch
+and FSDP shards extend onto it; no tensor is ever sharded across pods along
+a model dimension (cross-pod DCI is the slow hop — gradient all-reduce only).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.spec import ParamSpec, is_spec
+
+# --- parameter rules: logical name -> mesh axis (tensor parallel class) ----
+PARAM_RULES: dict[str, Any] = {
+    "vocab": "model",
+    "ff": "model",
+    "heads": "model",        # fused head*head_dim projections
+    "experts": "model",      # EP when divisible
+    "embed": None,
+    "layers": None,
+    # TT cores: ranks/input factors replicated (KB-scale — the compressed
+    # object), but the *output-factor* dim m_t is tensor-parallel when it
+    # divides the model axis.  In an aligned plan only the heavy
+    # last-executed core has m_t ≥ mesh size, so exactly one chain step is
+    # m-sharded and the big [T, M] chain output is born sharded instead of
+    # replicated per model rank (EXPERIMENTS §Perf it. 4: TT activations
+    # were replicated → +280 GB/dev/layer).
+    "tt_r": None, "tt_n": None, "tt_m": "model",
+    "conv": None,
+    "ssm_inner": "model",
+    "ssm_heads": "model",
+    "ssm_state": None,
+}
+
+# --- activation rules ------------------------------------------------------
+ACT_RULES_TRAIN = {
+    "act_batch": ("pod", "data"),
+    "act_seq": "model",          # sequence parallelism on the residual stream
+    "act_embed": None,
+    "act_heads": "model",
+    "act_kv_heads": "model",
+    "act_ff": "model",
+    "act_vocab": "model",
+    "act_experts": "model",
+    "act_moe_cap": "model",      # MoE buffer capacity — fallback EP axis
+    "act_kv_seq": None,
+}
+
+ACT_RULES_DECODE = {
+    **ACT_RULES_TRAIN,
+    "act_seq": None,             # S == 1
+    "act_kv_seq": "model",       # shard the KV cache along sequence
+}
+
+
+@dataclasses.dataclass
+class ShardCtx:
+    mesh: Mesh
+    act_rules: dict[str, Any]
+    data_axes: tuple[str, ...]       # FSDP axes, e.g. ("data",) or ("pod","data")
+
+
+_CTX: ShardCtx | None = None
+
+
+def set_ctx(ctx: ShardCtx | None):
+    global _CTX
+    _CTX = ctx
+
+
+def get_ctx() -> ShardCtx | None:
+    return _CTX
+
+
+def _axis_size(mesh: Mesh, axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, (tuple, list)):
+        return int(np.prod([_axis_size(mesh, a) for a in axis]))
+    return mesh.shape[axis] if axis in mesh.shape else 1
+
+
+def _resolve_axis(mesh: Mesh, axis):
+    """Drop mesh axes that don't exist on this mesh (e.g. 'pod' single-pod)."""
+    if axis is None:
+        return None
+    if isinstance(axis, (tuple, list)):
+        kept = [a for a in axis if a in mesh.shape]
+        return tuple(kept) if len(kept) > 1 else (kept[0] if kept else None)
+    return axis if axis in mesh.shape else None
+
+
+def model_axis_size() -> int:
+    """Extent of the 'model' mesh axis under the active ctx (1 if none)."""
+    ctx = _CTX
+    if ctx is None:
+        return 1
+    return _axis_size(ctx.mesh, "model")
+
+
+def shard_act(x: jax.Array, names: tuple[str | None, ...]) -> jax.Array:
+    """Annotate an activation with logical axis names (no-op without ctx)."""
+    ctx = _CTX
+    if ctx is None:
+        return x
+    assert len(names) == x.ndim, (names, x.shape)
+    parts = []
+    used: set = set()
+    for dim, name in zip(x.shape, names):
+        axis = _resolve_axis(ctx.mesh, ctx.act_rules.get(name))
+        if axis is not None and dim % _axis_size(ctx.mesh, axis) != 0:
+            axis = None
+        # one mesh axis per tensor — leftmost logical dim wins (e.g. MoE
+        # buffers [E, C, d]: EP on E when divisible, else C picks it up)
+        flat = set(axis) if isinstance(axis, tuple) else {axis}
+        if axis is not None and flat & used:
+            axis = None
+        if axis is not None:
+            used |= flat
+        parts.append(axis)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(ctx.mesh, P(*parts)))
+
+
+# ---------------------------------------------------------------------------
+# Parameter sharding from spec trees
+# ---------------------------------------------------------------------------
+
+def param_pspec(spec: ParamSpec, mesh: Mesh, fsdp_axes: tuple[str, ...] = ()
+                ) -> P:
+    parts = []
+    used: set = set()
+    for dim, name in zip(spec.shape, spec.axes):
+        axis = _resolve_axis(mesh, PARAM_RULES.get(name))
+        if axis is not None and dim % _axis_size(mesh, axis) != 0:
+            axis = None
+        # one mesh axis per tensor: leftmost logical dim wins (e.g. stacked
+        # MoE experts [L, E, d, ff] → EP on E, TP dropped on ff)
+        flat = set(axis) if isinstance(axis, tuple) else {axis}
+        if axis is not None and flat & used:
+            axis = None
+        if axis is not None:
+            used |= flat
+        parts.append(axis)
+    if fsdp_axes:
+        fs = _resolve_axis(mesh, tuple(fsdp_axes))
+        if fs is not None:
+            size = _axis_size(mesh, fs)
+            # largest still-unsharded dim divisible by the FSDP extent
+            cands = [(dim, i) for i, (dim, p) in
+                     enumerate(zip(spec.shape, parts))
+                     if p is None and dim % size == 0 and dim >= size]
+            if cands:
+                _, i = max(cands)
+                parts[i] = fs
+    return P(*parts)
+
+
+def param_shardings(spec_tree, mesh: Mesh, fsdp: bool = False):
+    """NamedSharding tree matching a ParamSpec tree."""
+    fsdp_axes = ("pod", "data") if fsdp else ()
+
+    def f(s: ParamSpec):
+        return NamedSharding(mesh, param_pspec(s, mesh, fsdp_axes))
+    return jax.tree.map(f, spec_tree, is_leaf=is_spec)
+
+
+def replicated(mesh: Mesh) -> NamedSharding:
+    return NamedSharding(mesh, P())
+
+
+def batch_sharding(mesh: Mesh, ndim: int, batch_divisible: bool = True
+                   ) -> NamedSharding:
+    """[B, ...] inputs: batch over (pod, data) when divisible."""
+    axes = _resolve_axis(mesh, ("pod", "data"))
+    return NamedSharding(
+        mesh, P(axes if batch_divisible else None, *([None] * (ndim - 1))))

@@ -1,0 +1,73 @@
+"""Public jit'd entry points for TT layer application.
+
+``tt_forward(cores, x, bias, backend)`` dispatches between:
+
+  'xla'           — paper-faithful einsum chain lowered by XLA
+                    (the "IREE-class compiler" baseline of Figs. 12–14)
+  'pallas_step'   — chain with one blocked Pallas kernel per einsum step
+  'pallas_fused2' — single fused kernel for d=2 plans (paper §6.4 deploys
+                    length-2 solutions; this is the fast path)
+  'auto'          — fused2 when d==2, else pallas_step
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.packing import pack_core, select_blocks
+from repro.core.tt import tt_apply
+from .tt_contract import tt_fused2_pallas, tt_step_pallas
+
+BACKENDS = ("xla", "pallas_step", "pallas_fused2", "auto")
+
+
+def _chain_with_step_kernel(cores: Sequence[jax.Array], x: jax.Array,
+                            interpret: bool | None) -> jax.Array:
+    """Paper chain where each einsum runs in the blocked Pallas kernel.
+    Layout between steps follows the paper exactly: reshapes only."""
+    B = x.shape[0]
+    state = x.reshape(-1)
+    b = state.shape[0]
+    for t in range(len(cores) - 1, -1, -1):
+        G = cores[t]
+        r0, nt, mt, r1 = G.shape
+        bt = b // (nt * r1)
+        st = state.reshape(bt, nt, r1)
+        plan = select_blocks(mt, bt, nt, r1, r0)
+        out = tt_step_pallas(G, st, plan, interpret=interpret)   # [m, b, r0]
+        state = out.reshape(-1).astype(x.dtype)
+        b = state.shape[0]
+    M = b // B
+    return state.reshape(M, B).T
+
+
+def tt_forward(cores: Sequence[jax.Array], x: jax.Array,
+               bias: jax.Array | None = None, backend: str = "auto",
+               interpret: bool | None = None) -> jax.Array:
+    """Apply a TT layer to ``x [..., N]`` → ``[..., M]``."""
+    assert backend in BACKENDS, backend
+    d = len(cores)
+    if backend == "auto":
+        backend = "pallas_fused2" if d == 2 else "pallas_step"
+
+    lead, N = x.shape[:-1], x.shape[-1]
+    x2 = x.reshape(-1, N)
+
+    if backend == "xla":
+        y = tt_apply(cores, x2)
+    elif backend == "pallas_fused2":
+        assert d == 2, "fused2 backend requires a length-2 plan"
+        G1, G2 = cores
+        _, n1, m1, r1 = G1.shape
+        _, n2, m2, _ = G2.shape
+        y = tt_fused2_pallas(
+            x2, pack_core(G2), pack_core(G1),
+            dims=(n1, n2, m1, m2, r1), interpret=interpret)
+    else:
+        y = _chain_with_step_kernel(cores, x2, interpret)
+
+    if bias is not None:
+        y = y + bias
+    return y.reshape(lead + (y.shape[-1],)).astype(x.dtype)

@@ -1,0 +1,52 @@
+"""Pure-jnp oracles for the TT einsum kernels.
+
+These are the correctness references each Pallas kernel is swept against
+(tests/test_kernels.py) and the "unoptimized" baseline of the paper's
+Figs. 12–16 breakdown.
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax.numpy as jnp
+
+from repro.core.tt import tt_apply_chain
+
+
+def tt_einsum_step_ref(G: jnp.ndarray, X: jnp.ndarray) -> jnp.ndarray:
+    """Paper Listing 2: out[m,b,r] = Σ_{n,k} G[r,n,m,k]·X[b,n,k].
+
+    ``G [r_{t-1}, n_t, m_t, r_t]``, ``X [b_t, n_t, r_t]`` →
+    ``out [m_t, b_t, r_{t-1}]`` — accumulation in fp32.
+    """
+    out = jnp.einsum("rnmk,bnk->mbr", G.astype(jnp.float32),
+                     X.astype(jnp.float32))
+    return out.astype(X.dtype)
+
+
+def tt_chain_ref(cores: Sequence[jnp.ndarray], x: jnp.ndarray) -> jnp.ndarray:
+    """Whole-layer oracle: ``x [B, N] → y [B, M]`` via the paper chain."""
+    return tt_apply_chain(cores, x)
+
+
+def tt_fused2_ref(cores: Sequence[jnp.ndarray], x: jnp.ndarray
+                  ) -> jnp.ndarray:
+    """Oracle for the fused d=2 kernel — identical math to tt_chain_ref but
+    written as the two packed matmuls + explicit relayouts the kernel fuses.
+
+    cores: [G1 [1, n1, m1, r1], G2 [r1, n2, m2, 1]];  x [B, n1*n2].
+    """
+    assert len(cores) == 2
+    G1, G2 = cores
+    _, n1, m1, r1 = G1.shape
+    r1b, n2, m2, r2 = G2.shape
+    assert r1b == r1 and r2 == 1 and G1.shape[0] == 1
+    B = x.shape[0]
+    f32 = jnp.float32
+    p2 = G2.transpose(1, 3, 2, 0).reshape(n2, m2 * r1).astype(f32)   # packed
+    p1 = G1.transpose(1, 3, 2, 0).reshape(n1 * r1, m1).astype(f32)   # packed
+    a = x.reshape(B * n1, n2).astype(f32) @ p2                       # MXU 1
+    a = a.reshape(B, n1, m2, r1).transpose(0, 2, 1, 3)               # VMEM T
+    y = a.reshape(B * m2, n1 * r1) @ p1                              # MXU 2
+    y = y.reshape(B, m2, m1).transpose(0, 2, 1)                      # VMEM T
+    return y.reshape(B, m1 * m2).astype(x.dtype)

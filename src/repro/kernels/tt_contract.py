@@ -1,0 +1,148 @@
+"""Pallas TPU kernels for the TT einsum chain.
+
+Two kernels (DESIGN.md §2 maps them onto the paper's §4.3 pipeline):
+
+``tt_step_kernel``   — one einsum step ``out[m,b,r0] = Σ_{n,r1} G·X`` with
+   explicit (bm, bb, bn) VMEM tiling chosen by the analytical model in
+   ``core.packing.select_blocks`` (the paper's register-blocking / cache-
+   tiling transfer).  Grid = (m-tiles, b-tiles, n-tiles), n innermost with
+   fp32 accumulation in the revisited output block.
+
+``tt_fused2_kernel`` — the whole d=2 chain fused: two MXU matmuls over
+   *packed* cores with the inter-step relayout done in VMEM, zero HBM
+   intermediates and zero HBM transposes.  This is the TPU-native answer to
+   the paper's IREE critique: IREE's transpose-to-matmul layers live in HBM;
+   ours live in vector registers.
+
+Kernels are written for TPU (BlockSpec/VMEM semantics) and validated on CPU
+in interpret mode.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.packing import BlockPlan
+
+
+def _interpret_default() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+# ---------------------------------------------------------------------------
+# Kernel 1: single einsum step, blocked + accumulated
+# ---------------------------------------------------------------------------
+
+def _tt_step_body(g_ref, x_ref, o_ref):
+    """out[m,b,r0] += einsum over the (n, r1) block."""
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    part = jnp.einsum(
+        "rnmk,bnk->mbr", g_ref[...], x_ref[...],
+        preferred_element_type=jnp.float32)
+    o_ref[...] += part
+
+
+@functools.partial(jax.jit, static_argnames=("plan", "interpret"))
+def tt_step_pallas(G: jax.Array, X: jax.Array, plan: BlockPlan,
+                   interpret: bool | None = None) -> jax.Array:
+    """``G [r0, n, m, r1]``, ``X [b, n, r1]`` → ``out [m, b, r0]`` (fp32).
+
+    Inputs are zero-padded to block multiples (padding on n contributes 0 to
+    the accumulation; padding on m/b is sliced off), so block shapes never
+    have to divide the problem — the paper's "padding ukernel" (§4.3.4)
+    replaced by masked tiles.
+    """
+    if interpret is None:
+        interpret = _interpret_default()
+    r0, n, m, r1 = G.shape
+    b = X.shape[0]
+    bm, bb, bn = min(plan.bm, m), min(plan.bb, b), min(plan.bn, n)
+
+    def pad_to(a, axis, mult):
+        pad = (-a.shape[axis]) % mult
+        if pad == 0:
+            return a
+        widths = [(0, 0)] * a.ndim
+        widths[axis] = (0, pad)
+        return jnp.pad(a, widths)
+
+    Gp = pad_to(pad_to(G, 1, bn), 2, bm)
+    Xp = pad_to(pad_to(X, 0, bb), 1, bn)
+    mp, np_, bp = Gp.shape[2], Gp.shape[1], Xp.shape[0]
+    grid = (mp // bm, bp // bb, np_ // bn)
+
+    out = pl.pallas_call(
+        _tt_step_body,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((r0, bn, bm, r1), lambda i, j, k: (0, k, i, 0)),
+            pl.BlockSpec((bb, bn, r1), lambda i, j, k: (j, k, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, bb, r0), lambda i, j, k: (i, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((mp, bp, r0), jnp.float32),
+        interpret=interpret,
+    )(Gp, Xp)
+    return out[:m, :b, :]
+
+
+# ---------------------------------------------------------------------------
+# Kernel 2: fused d=2 chain
+# ---------------------------------------------------------------------------
+
+def _fused2_body(x_ref, p2_ref, p1_ref, o_ref, *, n1, n2, m1, m2, r1):
+    bb = x_ref.shape[0]
+    f32 = jnp.float32
+    x = x_ref[...].astype(f32)
+    # MXU matmul 1:  [bb·n1, n2] @ [n2, m2·r1]
+    a = jnp.dot(x.reshape(bb * n1, n2), p2_ref[...].astype(f32),
+                preferred_element_type=f32)
+    # VMEM relayout (the chain's reshape, paper §4.3.2 — no HBM traffic)
+    a = a.reshape(bb, n1, m2, r1).transpose(0, 2, 1, 3)
+    # MXU matmul 2:  [bb·m2, n1·r1] @ [n1·r1, m1]
+    y = jnp.dot(a.reshape(bb * m2, n1 * r1), p1_ref[...].astype(f32),
+                preferred_element_type=f32)
+    # final m-major relayout, still in VMEM
+    y = y.reshape(bb, m2, m1).transpose(0, 2, 1).reshape(bb, m1 * m2)
+    o_ref[...] = y.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("dims", "block_b", "interpret"))
+def tt_fused2_pallas(x: jax.Array, p2: jax.Array, p1: jax.Array,
+                     dims: tuple[int, int, int, int, int],
+                     block_b: int = 64,
+                     interpret: bool | None = None) -> jax.Array:
+    """Fused d=2 TT layer.  ``x [B, n1·n2]`` → ``y [B, m1·m2]``.
+
+    ``p2 [n2, m2·r1]``, ``p1 [n1·r1, m1]`` are the *packed* cores
+    (core.packing.pack_core) — constant layout fixed at compile time.
+    """
+    if interpret is None:
+        interpret = _interpret_default()
+    n1, n2, m1, m2, r1 = dims
+    B = x.shape[0]
+    bb = min(block_b, B)
+    padB = (-B) % bb
+    xp = jnp.pad(x, ((0, padB), (0, 0))) if padB else x
+    Bp = xp.shape[0]
+
+    body = functools.partial(_fused2_body, n1=n1, n2=n2, m1=m1, m2=m2, r1=r1)
+    out = pl.pallas_call(
+        body,
+        grid=(Bp // bb,),
+        in_specs=[
+            pl.BlockSpec((bb, n1 * n2), lambda i: (i, 0)),
+            pl.BlockSpec((n2, m2 * r1), lambda i: (0, 0)),
+            pl.BlockSpec((n1 * r1, m1), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bb, m1 * m2), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((Bp, m1 * m2), x.dtype),
+        interpret=interpret,
+    )(xp, p2, p1)
+    return out[:B]

@@ -1,0 +1,397 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell and
+extract the roofline terms from the compiled artifact.
+
+The two lines above MUST stay the first statements of this module — jax
+locks the device count at first init (brief §MULTI-POD DRY-RUN).
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen3-32b --shape train_4k
+  python -m repro.launch.dryrun --all            # 40 cells × both meshes
+  python -m repro.launch.dryrun --all --mesh single
+  python -m repro.launch.dryrun --arch ... --variant tt_r16
+
+Results are written incrementally to results/dryrun/<cell>.json so the sweep
+is restartable (already-done cells are skipped unless --force).
+"""
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.analysis.roofline import (Roofline, collective_bytes_from_hlo,
+                                     model_flops_estimate)
+from repro.configs import build, get_config
+from repro.configs.base import SHAPES, TTConfig, shape_applicable
+from repro.configs.shapes import input_specs
+from repro.distributed import sharding as shd
+from repro.models.spec import abstract_tree, count_params, is_spec
+from repro.training.train_loop import TrainConfig, make_train_step
+from repro.training.optimizer import OptConfig
+from .mesh import make_production_mesh
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                           "results", "dryrun")
+
+
+# ---------------------------------------------------------------------------
+# Variants (perf hillclimbing — EXPERIMENTS.md §Perf)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Variant:
+    name: str
+    tt: TTConfig | None = None          # None → arch default (dense)
+    remat: bool = True
+    act_rules: dict | None = None       # overrides on the activation rules
+    notes: str = ""
+
+
+VARIANTS = {
+    "base": Variant("base", notes="paper-faithful dense baseline"),
+    "tt_r16": Variant(
+        "tt_r16",
+        tt=TTConfig(enabled=True, families=("ffn",), rank=16, length=2,
+                    min_factor=8, backend="xla"),
+        notes="paper technique: TT(R=16, d=2) on FFN projections"),
+    "tt_r16_attn": Variant(
+        "tt_r16_attn",
+        tt=TTConfig(enabled=True, families=("ffn", "attn"), rank=16,
+                    length=2, min_factor=8, backend="xla"),
+        notes="TT on FFN + attention projections"),
+    "norem": Variant("norem", remat=False,
+                     notes="no activation rematerialization"),
+    "seqshard": Variant(
+        "seqshard",
+        act_rules={"act_kv_seq": "model", "act_heads": None},
+        notes="decode: shard KV sequence instead of heads"),
+    "headshard": Variant(
+        "headshard",
+        act_rules={"act_kv_seq": None},
+        notes="decode: shard heads only, replicate KV sequence"),
+}
+
+
+# ---------------------------------------------------------------------------
+# Sharding helpers
+# ---------------------------------------------------------------------------
+
+def abstract_params_sharded(spec_tree, mesh, fsdp: bool):
+    shard_tree = shd.param_shardings(spec_tree, mesh, fsdp=fsdp)
+    return jax.tree.map(
+        lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+        spec_tree, shard_tree, is_leaf=is_spec)
+
+
+def _batch_sds(specs: dict, mesh) -> dict:
+    out = {}
+    daxes = shd._resolve_axis(mesh, ("pod", "data"))
+    dsize = shd._axis_size(mesh, daxes)
+    for name, s in specs.items():
+        parts = [daxes if s.shape[0] % dsize == 0 else None]
+        parts += [None] * (len(s.shape) - 1)
+        sh = jax.sharding.NamedSharding(mesh,
+                                        jax.sharding.PartitionSpec(*parts))
+        out[name] = jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh)
+    return out
+
+
+def _cache_sds(cache_tree, mesh, rules: dict) -> dict:
+    """Name/shape-aware cache shardings (leading dim is the stacked layer
+    axis).  kv heads → model if divisible, else sequence → model."""
+    daxes = shd._resolve_axis(mesh, ("pod", "data"))
+    dsize = shd._axis_size(mesh, daxes)
+    msize = shd._axis_size(mesh, "model")
+    seq_over_model = rules.get("act_kv_seq") == "model"
+
+    def one(path, s):
+        name = str(getattr(path[-1], "key", ""))
+        nd = len(s.shape)
+        parts = [None] * nd
+        if nd >= 2 and s.shape[1] % dsize == 0 and s.shape[1] >= dsize:
+            parts[1] = daxes                             # batch
+        if name in ("k", "v", "xk", "xv"):               # [L,B,T,KV,hd]
+            if s.shape[3] % msize == 0:
+                parts[3] = "model"
+            elif seq_over_model and s.shape[2] % msize == 0:
+                parts[2] = "model"
+        elif name in ("ckv", "krope"):                   # [L,B,T,d]
+            if seq_over_model and s.shape[2] % msize == 0:
+                parts[2] = "model"
+        elif name == "state":                            # [L,B,H,N,P]
+            if s.shape[2] % msize == 0:
+                parts[2] = "model"
+        elif name == "conv":                             # [L,B,K,D]
+            if s.shape[3] % msize == 0:
+                parts[3] = "model"
+        sh = jax.sharding.NamedSharding(
+            mesh, jax.sharding.PartitionSpec(*parts))
+        return jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh)
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(cache_tree)
+    return jax.tree_util.tree_unflatten(
+        treedef, [one(p, s) for p, s in flat])
+
+
+def active_param_count(spec_tree, cfg) -> int:
+    """Active parameters per token (MoE experts scaled by (k+shared)/E)."""
+    total = 0
+    for path, s in jax.tree_util.tree_flatten_with_path(
+            spec_tree, is_leaf=is_spec)[0]:
+        import numpy as np
+        n = int(np.prod(s.shape))
+        keys = [str(getattr(p, "key", "")) for p in path]
+        if "experts" in keys and cfg.moe:
+            n = int(n * cfg.moe.top_k / cfg.moe.num_experts)
+        total += n
+    return total
+
+
+# ---------------------------------------------------------------------------
+# One cell
+# ---------------------------------------------------------------------------
+
+def _compile_step(cfg, model, shape, mesh, rules, variant):
+    """Lower + compile one model instance; return (compiled, lower_s,
+    compile_s)."""
+    kind = shape.kind
+    spec_tree = model.param_specs()
+    inputs = input_specs(cfg, shape, model)
+    t0 = time.time()
+    if kind == "train":
+        params_sds = abstract_params_sharded(spec_tree, mesh, fsdp=True)
+        state_sds = {
+            "params": params_sds,
+            "opt": {"m": params_sds, "v": params_sds,
+                    "step": jax.ShapeDtypeStruct((), jnp.int32)},
+        }
+        tcfg = TrainConfig(opt=OptConfig(), remat=variant.remat)
+        step = make_train_step(model, tcfg)
+        batch_sds = _batch_sds(inputs["batch"], mesh)
+        lowered = jax.jit(step, donate_argnums=(0,)).lower(
+            state_sds, batch_sds)
+    elif kind == "prefill":
+        params_sds = abstract_params_sharded(spec_tree, mesh, fsdp=False)
+        batch_sds = _batch_sds(inputs["batch"], mesh)
+        lowered = jax.jit(model.prefill).lower(params_sds, batch_sds)
+    else:  # decode
+        params_sds = abstract_params_sharded(spec_tree, mesh, fsdp=False)
+        cache_sds = _cache_sds(inputs["cache"], mesh, rules)
+        tok_sds = _batch_sds({"t": inputs["token"]}, mesh)["t"]
+        lowered = jax.jit(model.decode_step, donate_argnums=(1,)).lower(
+            params_sds, cache_sds, tok_sds)
+    t_lower = time.time() - t0
+    compiled = lowered.compile()
+    return compiled, t_lower, time.time() - t0 - t_lower
+
+
+_COLL_KINDS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+
+def _cost_of(compiled) -> dict:
+    ca = compiled.cost_analysis()
+    ca = ca if isinstance(ca, dict) else ca[0]
+    hlo = compiled.as_text()
+    coll = collective_bytes_from_hlo(hlo)
+    counts = {k: hlo.count(f" {k}(") + hlo.count(f" {k}-start(")
+              for k in _COLL_KINDS}
+    return {"flops": float(ca.get("flops", 0.0)),
+            "bytes": float(ca.get("bytes accessed", 0.0)),
+            "coll": coll, "coll_counts": counts}
+
+
+def _combine(base: dict, bumps: dict[str, dict], real: dict[str, int]
+             ) -> dict:
+    """Linear extrapolation: total = F(all counts=1) + Σ_g (c_g-1)·b_g where
+    b_g = F(1+e_g) − F(1).  Exact because per-layer cost is count-invariant."""
+    out = {"flops": base["flops"], "bytes": base["bytes"],
+           "coll": dict(base["coll"]),
+           "coll_counts": dict(base["coll_counts"])}
+    for g, bump in bumps.items():
+        k = real[g] - 1
+        out["flops"] += k * max(bump["flops"] - base["flops"], 0.0)
+        out["bytes"] += k * max(bump["bytes"] - base["bytes"], 0.0)
+        for kind in set(base["coll"]) | set(bump["coll"]):
+            d = max(bump["coll"].get(kind, 0.0)
+                    - base["coll"].get(kind, 0.0), 0.0)
+            out["coll"][kind] = out["coll"].get(kind, 0.0) + k * d
+        for kind in _COLL_KINDS:
+            d = max(bump["coll_counts"][kind]
+                    - base["coll_counts"][kind], 0)
+            out["coll_counts"][kind] = out["coll_counts"].get(kind, 0) + k * d
+    out["coll"]["total"] = sum(v for kk, v in out["coll"].items()
+                               if kk != "total")
+    return out
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             variant: Variant) -> dict:
+    from repro.models import transformer as tf
+    from repro.configs import make_layer_plan
+
+    shape = SHAPES[shape_name]
+    cfg = get_config(arch, "full", tt=variant.tt)
+    ok, why = shape_applicable(cfg, shape)
+    if not ok:
+        return {"status": "skipped", "reason": why}
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    kind = shape.kind
+    param_dtype = jnp.float32 if kind == "train" else jnp.bfloat16
+
+    rules = dict(shd.ACT_RULES_TRAIN if kind == "train"
+                 else shd.ACT_RULES_DECODE)
+    if variant.act_rules:
+        rules.update(variant.act_rules)
+    shd.set_ctx(shd.ShardCtx(mesh, rules, ("pod", "data")))
+    try:
+        # ---- 1. the dry-run deliverable: full-depth scanned compile -------
+        model = build(cfg, param_dtype=param_dtype)
+        spec_tree = model.param_specs()
+        n_params = count_params(spec_tree)
+        n_active = active_param_count(spec_tree, cfg)
+        compiled, t_lower, t_compile = _compile_step(
+            cfg, model, shape, mesh, rules, variant)
+        ma = compiled.memory_analysis()
+        mem = {}
+        if ma is not None:
+            mem = {k: int(getattr(ma, k)) for k in
+                   ("argument_size_in_bytes", "output_size_in_bytes",
+                    "temp_size_in_bytes", "alias_size_in_bytes")}
+        del compiled
+
+        # ---- 2. roofline accounting: unrolled reduced-depth compiles ------
+        groups, enc = make_layer_plan(cfg)
+        real = {f"g{i}": c for i, (_, c) in enumerate(groups)}
+        if enc is not None:
+            real.update({f"e{i}": c for i, (_, c) in enumerate(enc)})
+
+        def reduced_model(bump_key=None):
+            counts = {i: (2 if bump_key == f"g{i}" else 1)
+                      for i in range(len(groups))}
+            ecounts = ({i: (2 if bump_key == f"e{i}" else 1)
+                        for i in range(len(enc))} if enc is not None else None)
+            return build(cfg, param_dtype=param_dtype, counts=counts,
+                         enc_counts=ecounts)
+
+        tf.SCAN_UNROLL = True
+        try:
+            c0, _, _ = _compile_step(cfg, reduced_model(), shape, mesh,
+                                     rules, variant)
+            base_cost = _cost_of(c0)
+            del c0
+            bumps = {}
+            for g, c in real.items():
+                if c > 1:
+                    cg, _, _ = _compile_step(cfg, reduced_model(g), shape,
+                                             mesh, rules, variant)
+                    bumps[g] = _cost_of(cg)
+                    del cg
+        finally:
+            tf.SCAN_UNROLL = False
+        cost = _combine(base_cost, bumps, real)
+
+        chips = mesh.devices.size
+        tokens = (shape.global_batch * shape.seq_len
+                  if kind in ("train", "prefill") else shape.global_batch)
+        rl = Roofline(
+            chips=chips,
+            flops_per_device=cost["flops"],
+            bytes_per_device=cost["bytes"],
+            collective_per_device=cost["coll"].get("total", 0.0),
+            model_flops=model_flops_estimate(n_params, n_active, tokens,
+                                             kind),
+        )
+        return {
+            "status": "ok",
+            "arch": arch, "shape": shape_name,
+            "mesh": "2x16x16" if multi_pod else "16x16",
+            "variant": variant.name,
+            "chips": chips,
+            "num_params": n_params,
+            "active_params": n_active,
+            "tokens_per_step": tokens,
+            "roofline": rl.to_dict(),
+            "collective_bytes": cost["coll"],
+            "collective_counts": cost["coll_counts"],
+            "memory_analysis": mem,
+            "lower_s": round(t_lower, 1),
+            "compile_s": round(t_compile, 1),
+        }
+    finally:
+        shd.set_ctx(None)
+
+
+def cell_path(arch, shape, multi_pod, variant) -> str:
+    mesh = "2x16x16" if multi_pod else "16x16"
+    return os.path.join(RESULTS_DIR, f"{arch}__{shape}__{mesh}__{variant}.json")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="both")
+    ap.add_argument("--variant", default="base")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    from repro.configs import ALIASES, ARCH_IDS
+    archs = ([ALIASES.get(args.arch, args.arch)] if args.arch else ARCH_IDS)
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+    variant = VARIANTS[args.variant]
+
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    n_ok = n_skip = n_fail = 0
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                path = cell_path(arch, shape, mp, variant.name)
+                if os.path.exists(path) and not args.force:
+                    with open(path) as f:
+                        prev = json.load(f)
+                    if prev.get("status") != "failed":
+                        print(f"[cached] {path}")
+                        continue
+                tag = f"{arch} × {shape} × {'2x16x16' if mp else '16x16'}" \
+                      f" × {variant.name}"
+                print(f"[dryrun] {tag} ...", flush=True)
+                try:
+                    res = run_cell(arch, shape, mp, variant)
+                except Exception as e:
+                    res = {"status": "failed", "error": f"{type(e).__name__}: {e}",
+                           "traceback": traceback.format_exc()[-3000:]}
+                res.setdefault("arch", arch)
+                res.setdefault("shape", shape)
+                res.setdefault("mesh", "2x16x16" if mp else "16x16")
+                res.setdefault("variant", variant.name)
+                with open(path, "w") as f:
+                    json.dump(res, f, indent=1)
+                st = res["status"]
+                n_ok += st == "ok"
+                n_skip += st == "skipped"
+                n_fail += st == "failed"
+                if st == "ok":
+                    r = res["roofline"]
+                    print(f"  ok: bottleneck={r['bottleneck']} "
+                          f"frac={r['roofline_fraction']:.3f} "
+                          f"compile={res['compile_s']}s", flush=True)
+                else:
+                    print(f"  {st}: {res.get('reason', res.get('error'))}",
+                          flush=True)
+    print(f"done: {n_ok} ok, {n_skip} skipped, {n_fail} failed")
+
+
+if __name__ == "__main__":
+    main()

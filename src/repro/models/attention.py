@@ -1,0 +1,278 @@
+"""Attention variants: GQA (+qk-norm, sliding window) and MLA (DeepSeek-V2).
+
+All projections route through ``linear_spec`` so the paper's TT technique
+applies uniformly ("attn" family).  MLA's down/up projections are excluded
+from TT by construction — MLA *is already* a low-rank factorization of the
+KV path (DESIGN.md §5); TT composes with it on q/o only.
+
+Cache contract (serving/kv_cache.py builds the buffers):
+  full  : k,v [B, S_max, KV, hd], write at ``pos``
+  ring  : k,v [B, W, KV, hd], write at ``pos % W`` (SWA / gemma3 local)
+  mla   : ckv [B, S_max, kv_lora], krope [B, S_max, rope_hd]
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import model_axis_size, shard_act
+from .layers import (head_rmsnorm_apply, linear_apply, linear_spec,
+                     rmsnorm_spec, rmsnorm_apply, rope)
+from .spec import ParamSpec
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# GQA
+# ---------------------------------------------------------------------------
+
+def gqa_spec(cfg: ModelConfig, dtype=jnp.float32) -> dict:
+    d, q_dim, kv_dim = cfg.d_model, cfg.q_dim, cfg.kv_dim
+    out = {
+        "q": linear_spec(d, q_dim, cfg.tt, "attn", ("embed", "heads"), dtype),
+        "k": linear_spec(d, kv_dim, cfg.tt, "attn", ("embed", "heads"), dtype),
+        "v": linear_spec(d, kv_dim, cfg.tt, "attn", ("embed", "heads"), dtype),
+        "o": linear_spec(q_dim, d, cfg.tt, "attn", ("heads", "embed"), dtype),
+    }
+    if cfg.qk_norm:
+        out["q_norm"] = ParamSpec((cfg.head_dim,), (None,), "ones", dtype=dtype)
+        out["k_norm"] = ParamSpec((cfg.head_dim,), (None,), "ones", dtype=dtype)
+    return out
+
+
+def _qkv(p, cfg: ModelConfig, x, positions, theta, backend):
+    """Returns (q, k, v, heads_ok).  TP strategy: if H divides the model
+    axis, attention tensors shard on heads; otherwise the query-sequence dim
+    is sharded and k/v replicated across 'model' (GSPMD otherwise replicates
+    the O(S²) score tensors — measured 100× collective blow-up)."""
+    B, S, _ = x.shape
+    H, KV, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q = linear_apply(p["q"], x, backend).reshape(B, S, H, hd)
+    k = linear_apply(p["k"], x, backend).reshape(B, S, KV, hd)
+    v = linear_apply(p["v"], x, backend).reshape(B, S, KV, hd)
+    if cfg.qk_norm:
+        q = head_rmsnorm_apply(p["q_norm"], q, cfg.norm_eps)
+        k = head_rmsnorm_apply(p["k_norm"], k, cfg.norm_eps)
+    q = rope(q, positions, theta)
+    k = rope(k, positions, theta)
+    msize = model_axis_size()
+    heads_ok = H % msize == 0 and H >= msize
+    if heads_ok:
+        q = shard_act(q, ("act_batch", None, "act_heads", None))
+    else:
+        q = shard_act(q, ("act_batch", "act_seq", None, None))
+    return q, k, v, heads_ok
+
+
+def _expand_and_shard_kv(cfg, k, v, heads_ok):
+    """Full-seq path: expand GQA k/v to H heads when heads shard cleanly so
+    every attention tensor splits 16-way (no score-tensor replication)."""
+    H, KV = cfg.num_heads, cfg.num_kv_heads
+    if heads_ok:
+        if KV < H:
+            k = jnp.repeat(k, H // KV, axis=2)
+            v = jnp.repeat(v, H // KV, axis=2)
+        k = shard_act(k, ("act_batch", None, "act_heads", None))
+        v = shard_act(v, ("act_batch", None, "act_heads", None))
+    else:
+        k = shard_act(k, ("act_batch", None, None, None))
+        v = shard_act(v, ("act_batch", None, None, None))
+    return k, v
+
+
+def _gqa_scores_ctx(q, k, v, mask, scale):
+    """q [B,S,H,hd], k/v [B,T,KV,hd], mask [B,1,1,S,T] or broadcastable."""
+    B, S, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    qg = q.reshape(B, S, KV, G, hd)
+    scores = jnp.einsum("bskgh,btkh->bkgst", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    scores = jnp.where(mask, scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    ctx = jnp.einsum("bkgst,btkh->bskgh", probs, v.astype(jnp.float32))
+    return ctx.reshape(B, S, H * hd).astype(q.dtype)
+
+
+def gqa_self_attn(p, cfg: ModelConfig, x, positions, *, window: int = 0,
+                  theta: float | None = None, backend: str = "xla",
+                  causal: bool = True):
+    """Full-sequence self-attention (train / prefill / encoder)."""
+    B, S, _ = x.shape
+    theta = cfg.rope_theta if theta is None else theta
+    q, k, v, heads_ok = _qkv(p, cfg, x, positions, theta, backend)
+    k_cache, v_cache = k, v                       # pre-expansion, [B,S,KV,hd]
+    k, v = _expand_and_shard_kv(cfg, k, v, heads_ok)
+    i = positions[:, :, None]                     # [B,S,1] query pos
+    j = positions[:, None, :]                     # [B,1,T] key pos
+    mask = (j <= i) if causal else jnp.ones((B, S, S), bool)
+    if window:
+        mask = mask & (j > i - window)
+    mask = mask[:, None, None]                    # [B,1,1,S,T]
+    ctx = _gqa_scores_ctx(q, k, v, mask, 1.0 / np.sqrt(cfg.head_dim))
+    y = linear_apply(p["o"], ctx, backend)
+    return y, (k_cache, v_cache)
+
+
+def gqa_decode_attn(p, cfg: ModelConfig, x, cache_k, cache_v, pos, *,
+                    window: int = 0, theta: float | None = None,
+                    backend: str = "xla"):
+    """One-token decode against a full or ring cache.
+
+    x [B,1,d]; cache_k/v [B, T, KV, hd] (T = S_max or window W);
+    pos: scalar int32 — current absolute position.
+    Returns (y [B,1,d], new_k, new_v).
+    """
+    B = x.shape[0]
+    T = cache_k.shape[1]
+    theta = cfg.rope_theta if theta is None else theta
+    positions = jnp.full((B, 1), pos, jnp.int32)
+    q, k, v, _ = _qkv(p, cfg, x, positions, theta, backend)
+    slot = pos % T if window else pos
+    cache_k = jax.lax.dynamic_update_slice_in_dim(cache_k, k, slot, axis=1)
+    cache_v = jax.lax.dynamic_update_slice_in_dim(cache_v, v, slot, axis=1)
+    idx = jnp.arange(T)
+    if window:
+        # ring buffer: slot s holds absolute position pos - ((pos - s) mod T)
+        abs_pos = pos - jnp.mod(pos - idx, T)
+        valid = abs_pos >= 0
+    else:
+        valid = idx <= pos
+    mask = valid[None, None, None, None, :]       # [1,1,1,1,T]
+    ctx = _gqa_scores_ctx(q, cache_k, cache_v, mask,
+                          1.0 / np.sqrt(cfg.head_dim))
+    y = linear_apply(p["o"], ctx, backend)
+    return y, cache_k, cache_v
+
+
+# ---------------------------------------------------------------------------
+# Cross-attention (seamless decoder)
+# ---------------------------------------------------------------------------
+
+def cross_attn_spec(cfg: ModelConfig, dtype=jnp.float32) -> dict:
+    return gqa_spec(cfg, dtype)
+
+
+def cross_attn(p, cfg: ModelConfig, x, enc_k, enc_v, backend="xla"):
+    """x [B,S,d] attends to precomputed encoder k/v [B,T,KV,hd]."""
+    B, S, _ = x.shape
+    H, hd = cfg.num_heads, cfg.head_dim
+    q = linear_apply(p["q"], x, backend).reshape(B, S, H, hd)
+    mask = jnp.ones((1, 1, 1, 1, enc_k.shape[1]), bool)
+    ctx = _gqa_scores_ctx(q, enc_k, enc_v, mask, 1.0 / np.sqrt(hd))
+    return linear_apply(p["o"], ctx, backend)
+
+
+def cross_kv(p, cfg: ModelConfig, enc_out, backend="xla"):
+    B, T, _ = enc_out.shape
+    KV, hd = cfg.num_kv_heads, cfg.head_dim
+    k = linear_apply(p["k"], enc_out, backend).reshape(B, T, KV, hd)
+    v = linear_apply(p["v"], enc_out, backend).reshape(B, T, KV, hd)
+    return k, v
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek-V2 multi-head latent attention)
+# ---------------------------------------------------------------------------
+
+def mla_spec(cfg: ModelConfig, dtype=jnp.float32) -> dict:
+    m = cfg.mla
+    d, H = cfg.d_model, cfg.num_heads
+    qk_head = m.nope_head_dim + m.rope_head_dim
+    return {
+        "q": linear_spec(d, H * qk_head, cfg.tt, "attn",
+                         ("embed", "heads"), dtype),
+        # low-rank KV path: dense by construction (already factorized)
+        "kv_down": linear_spec(d, m.kv_lora + m.rope_head_dim, None, "mla",
+                               ("embed", None), dtype),
+        "kv_norm": rmsnorm_spec(m.kv_lora, None, dtype),
+        "kv_up": linear_spec(m.kv_lora,
+                             H * (m.nope_head_dim + m.v_head_dim), None,
+                             "mla", (None, "heads"), dtype),
+        "o": linear_spec(H * m.v_head_dim, d, cfg.tt, "attn",
+                         ("heads", "embed"), dtype),
+    }
+
+
+def _mla_q(p, cfg, x, positions, backend):
+    m = cfg.mla
+    B, S, _ = x.shape
+    H = cfg.num_heads
+    qk_head = m.nope_head_dim + m.rope_head_dim
+    q = linear_apply(p["q"], x, backend).reshape(B, S, H, qk_head)
+    q_nope, q_rope = jnp.split(q, [m.nope_head_dim], axis=-1)
+    q_rope = rope(q_rope, positions, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def _mla_compress(p, cfg, x, positions, backend):
+    m = cfg.mla
+    c = linear_apply(p["kv_down"], x, backend)
+    ckv, krope = jnp.split(c, [m.kv_lora], axis=-1)
+    ckv = rmsnorm_apply(p["kv_norm"], ckv, cfg.norm_eps)
+    krope = rope(krope[:, :, None, :], positions,
+                 cfg.rope_theta)[:, :, 0, :]
+    return ckv, krope
+
+
+def mla_self_attn(p, cfg: ModelConfig, x, positions, backend="xla"):
+    """Expanded-form MLA for train/prefill.  Returns (y, (ckv, krope))."""
+    m = cfg.mla
+    B, S, _ = x.shape
+    H = cfg.num_heads
+    q_nope, q_rope = _mla_q(p, cfg, x, positions, backend)
+    ckv, krope = _mla_compress(p, cfg, x, positions, backend)
+    kv = linear_apply(p["kv_up"], ckv, backend).reshape(
+        B, S, H, m.nope_head_dim + m.v_head_dim)
+    k_nope, v = jnp.split(kv, [m.nope_head_dim], axis=-1)
+    scale = 1.0 / np.sqrt(m.nope_head_dim + m.rope_head_dim)
+    i, j = positions[:, :, None], positions[:, None, :]
+    mask = (j <= i)[:, None]                      # [B,1,S,T]
+    s = (jnp.einsum("bshn,bthn->bhst", q_nope.astype(jnp.float32),
+                    k_nope.astype(jnp.float32))
+         + jnp.einsum("bshr,btr->bhst", q_rope.astype(jnp.float32),
+                      krope.astype(jnp.float32))) * scale
+    probs = jax.nn.softmax(jnp.where(mask, s, NEG_INF), axis=-1)
+    ctx = jnp.einsum("bhst,bthv->bshv", probs, v.astype(jnp.float32))
+    y = linear_apply(p["o"], ctx.reshape(B, S, -1).astype(x.dtype), backend)
+    return y, (ckv, krope)
+
+
+def mla_decode_attn(p, cfg: ModelConfig, x, cache_ckv, cache_krope, pos,
+                    backend="xla"):
+    """Absorbed-form MLA decode: scores/context live in the latent space, so
+    per-step cost is O(T·kv_lora) not O(T·H·head_dim) — the production path.
+
+    cache_ckv [B, S_max, kv_lora], cache_krope [B, S_max, rope_hd].
+    """
+    m = cfg.mla
+    B = x.shape[0]
+    H = cfg.num_heads
+    positions = jnp.full((B, 1), pos, jnp.int32)
+    q_nope, q_rope = _mla_q(p, cfg, x, positions, backend)
+    ckv, krope = _mla_compress(p, cfg, x, positions, backend)
+    cache_ckv = jax.lax.dynamic_update_slice_in_dim(cache_ckv, ckv, pos, 1)
+    cache_krope = jax.lax.dynamic_update_slice_in_dim(
+        cache_krope, krope, pos, 1)
+    # absorb kv_up into the query / output sides
+    w_up = p["kv_up"]["w"].reshape(m.kv_lora, H,
+                                   m.nope_head_dim + m.v_head_dim)
+    w_uk, w_uv = jnp.split(w_up, [m.nope_head_dim], axis=-1)
+    q_eff = jnp.einsum("bshn,lhn->bshl", q_nope.astype(jnp.float32),
+                       w_uk.astype(jnp.float32))          # [B,1,H,kv_lora]
+    scale = 1.0 / np.sqrt(m.nope_head_dim + m.rope_head_dim)
+    s = (jnp.einsum("bshl,btl->bhst", q_eff,
+                    cache_ckv.astype(jnp.float32))
+         + jnp.einsum("bshr,btr->bhst", q_rope.astype(jnp.float32),
+                      cache_krope.astype(jnp.float32))) * scale
+    T = cache_ckv.shape[1]
+    valid = (jnp.arange(T) <= pos)[None, None, None, :]
+    probs = jax.nn.softmax(jnp.where(valid, s, NEG_INF), axis=-1)
+    ctx_l = jnp.einsum("bhst,btl->bshl", probs,
+                       cache_ckv.astype(jnp.float32))     # latent context
+    ctx = jnp.einsum("bshl,lhv->bshv", ctx_l, w_uv.astype(jnp.float32))
+    y = linear_apply(p["o"], ctx.reshape(B, 1, -1).astype(x.dtype), backend)
+    return y, cache_ckv, cache_krope

@@ -1,0 +1,158 @@
+"""Elementary layers: norms, RoPE, dense/TT linear, GLU MLP, embeddings.
+
+Every projection goes through ``linear_spec``/``linear_apply`` which consult
+the model's ``TTConfig`` — the paper's technique is a first-class, uniformly
+available feature rather than a bolt-on (DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import TTConfig
+from repro.core.dse import DSEConfig, explore
+from repro.core.flops import prod
+from repro.core.tt import TTPlan
+from repro.kernels.ops import tt_forward
+from .spec import ParamSpec
+
+
+# ---------------------------------------------------------------------------
+# TT planning (offline, cached — the paper's design-tool step)
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=None)
+def plan_for(M: int, N: int, rank: int, length: int, min_factor: int
+             ) -> TTPlan | None:
+    cfg = DSEConfig(vl=rank, rank_step=rank, rank_cap=rank,
+                    min_factor=min_factor, max_d=max(length, 4))
+    res = explore(M, N, cfg, with_counts=False)
+    sol = res.best(length=length, rank=rank) or res.best(rank=rank)
+    return sol.plan if sol else None
+
+
+def _tt_core_specs(plan: TTPlan, dtype) -> dict[str, ParamSpec]:
+    """Core ParamSpecs with the variance-preserving init of core.tt.tt_init."""
+    target_std = float(np.sqrt(2.0 / (plan.M + plan.N)))
+    rank_prod = prod(plan.ranks[1:-1]) if plan.d > 1 else 1
+    sigma = (target_std ** 2 / max(rank_prod, 1)) ** (1.0 / (2 * plan.d))
+    return {f"c{t}": ParamSpec(shape, ("tt_r", "tt_n", "tt_m", "tt_r"),
+                               "normal", sigma, dtype)
+            for t, shape in enumerate(plan.core_shapes)}
+
+
+# ---------------------------------------------------------------------------
+# Linear (dense or TT) — N in, M out
+# ---------------------------------------------------------------------------
+
+def linear_spec(in_dim: int, out_dim: int, tt: TTConfig | None,
+                family: str, axes=("embed", "ff"), dtype=jnp.float32,
+                bias: bool = False) -> dict:
+    """Build the spec dict of one projection.  If the TTConfig covers this
+    ``family`` and the DSE finds a surviving plan, emit TT cores instead of
+    a dense weight."""
+    use_tt = (tt is not None and tt.enabled and family in tt.families)
+    if use_tt:
+        plan = plan_for(out_dim, in_dim, tt.rank, tt.length, tt.min_factor)
+        if plan is not None:
+            out = {"tt": _tt_core_specs(plan, dtype)}
+            if bias:
+                out["b"] = ParamSpec((out_dim,), (axes[1],), "zeros",
+                                     dtype=dtype)
+            return out
+    out = {"w": ParamSpec((in_dim, out_dim), tuple(axes), "normal",
+                          1.0 / np.sqrt(in_dim), dtype)}
+    if bias:
+        out["b"] = ParamSpec((out_dim,), (axes[1],), "zeros", dtype=dtype)
+    return out
+
+
+def linear_apply(params: dict, x: jax.Array, backend: str = "xla"
+                 ) -> jax.Array:
+    if "tt" in params:
+        cores = [params["tt"][f"c{t}"] for t in range(len(params["tt"]))]
+        y = tt_forward(cores, x, backend=backend)
+    else:
+        y = x @ params["w"]
+    if "b" in params:
+        y = y + params["b"]
+    return y
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm_spec(dim: int, axis: str = "embed", dtype=jnp.float32) -> dict:
+    return {"scale": ParamSpec((dim,), (axis,), "ones", dtype=dtype)}
+
+
+def rmsnorm_apply(params: dict, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps) * params["scale"]).astype(dt)
+
+
+def head_rmsnorm_apply(scale: jax.Array, x: jax.Array,
+                       eps: float = 1e-6) -> jax.Array:
+    """qk-norm: RMS over the head dim of [..., heads, head_dim]."""
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps) * scale).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embedding
+# ---------------------------------------------------------------------------
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x [..., S, H, hd], positions [..., S] → rotated x (pairwise halves)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    ang = positions.astype(jnp.float32)[..., None] * freqs      # [..., S, half]
+    cos = jnp.cos(ang)[..., None, :]                            # [..., S, 1, half]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], -1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# GLU MLP
+# ---------------------------------------------------------------------------
+
+def mlp_spec(d: int, ff: int, tt: TTConfig | None, dtype=jnp.float32) -> dict:
+    return {
+        "gate": linear_spec(d, ff, tt, "ffn", ("embed", "ff"), dtype),
+        "up": linear_spec(d, ff, tt, "ffn", ("embed", "ff"), dtype),
+        "down": linear_spec(ff, d, tt, "ffn", ("ff", "embed"), dtype),
+    }
+
+
+def mlp_apply(params: dict, x: jax.Array, backend: str = "xla") -> jax.Array:
+    g = linear_apply(params["gate"], x, backend)
+    u = linear_apply(params["up"], x, backend)
+    return linear_apply(params["down"], jax.nn.silu(g) * u, backend)
+
+
+# ---------------------------------------------------------------------------
+# Embeddings
+# ---------------------------------------------------------------------------
+
+def embed_spec(vocab: int, d: int, dtype=jnp.float32) -> dict:
+    return {"table": ParamSpec((vocab, d), ("vocab", "embed"), "normal",
+                               1.0 / np.sqrt(d), dtype)}
+
+
+def embed_apply(params: dict, tokens: jax.Array, d: int,
+                scale: bool = False) -> jax.Array:
+    out = params["table"][tokens]
+    if scale:                       # gemma-style sqrt(d) input scaling
+        out = out * jnp.asarray(np.sqrt(d), out.dtype)
+    return out

@@ -1,0 +1,188 @@
+"""Model facade: one object per architecture exposing the four entry points
+the launcher lowers — ``loss`` (train), ``prefill``, ``decode_step`` and
+``init_cache`` — plus param-spec/init plumbing.
+
+The layer plan (groups of scanned periods) comes from the arch config
+(configs/<arch>.py::layer_plan); multimodal frontends are stubs operating on
+precomputed embeddings supplied by input_specs (per the assignment brief).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import shard_act
+from .layers import (embed_apply, embed_spec, linear_apply, linear_spec,
+                     rmsnorm_apply, rmsnorm_spec)
+from .spec import ParamSpec, abstract_tree, count_params, init_tree
+from .transformer import (BlockDef, Group, block_cache_shape, group_decode,
+                          group_fwd, group_spec)
+
+
+@dataclasses.dataclass
+class Model:
+    cfg: ModelConfig
+    groups: list[Group]                  # decoder (or only) stack
+    enc_groups: list[Group] | None = None
+    param_dtype: Any = jnp.float32
+
+    # ------------------------------------------------------------------ specs
+    def param_specs(self) -> dict:
+        cfg, dt = self.cfg, self.param_dtype
+        specs: dict = {"embed": embed_spec(cfg.vocab_size, cfg.d_model, dt),
+                       "final_norm": rmsnorm_spec(cfg.d_model, "embed", dt)}
+        if not cfg.tie_embeddings:
+            specs["lm_head"] = linear_spec(cfg.d_model, cfg.vocab_size,
+                                           cfg.tt, "lm_head",
+                                           ("embed", "vocab"), dt)
+        for gi, g in enumerate(self.groups):
+            specs[f"g{gi}"] = group_spec(cfg, g, dt)
+        if self.enc_groups is not None:
+            specs["enc_norm"] = rmsnorm_spec(cfg.d_model, "embed", dt)
+            for gi, g in enumerate(self.enc_groups):
+                specs[f"enc_g{gi}"] = group_spec(cfg, g, dt)
+        if cfg.frontend == "vit":
+            specs["projector"] = linear_spec(cfg.frontend_dim, cfg.d_model,
+                                             None, "frontend",
+                                             (None, "embed"), dt)
+        if cfg.frontend == "speech":
+            specs["frontend_proj"] = linear_spec(cfg.frontend_dim,
+                                                 cfg.d_model, None,
+                                                 "frontend", (None, "embed"),
+                                                 dt)
+        return specs
+
+    def init(self, key: jax.Array) -> dict:
+        return init_tree(key, self.param_specs())
+
+    def abstract_params(self) -> dict:
+        return abstract_tree(self.param_specs())
+
+    def num_params(self) -> int:
+        return count_params(self.param_specs())
+
+    # -------------------------------------------------------------- embedding
+    def _embed_inputs(self, params, batch) -> tuple[jax.Array, jax.Array]:
+        """Returns (x [B,S,d], loss_mask [B,S])."""
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        x = embed_apply(params["embed"], tokens, cfg.d_model,
+                        scale=cfg.tie_embeddings)
+        mask = jnp.ones(tokens.shape, bool)
+        if cfg.frontend == "vit":
+            img = linear_apply(params["projector"], batch["image_embeds"])
+            x = jnp.concatenate([img.astype(x.dtype), x], axis=1)
+            mask = jnp.concatenate(
+                [jnp.zeros(img.shape[:2], bool), mask], axis=1)
+        return x, mask
+
+    def _encode(self, params, batch) -> jax.Array:
+        """Seamless encoder over precomputed speech-frame embeddings."""
+        cfg = self.cfg
+        frames = batch["speech_embeds"]
+        x = linear_apply(params["frontend_proj"], frames)
+        B, S, _ = x.shape
+        positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+        for gi, g in enumerate(self.enc_groups):
+            x, _ = group_fwd(params[f"enc_g{gi}"], cfg, g, x, positions,
+                             want_cache=False)
+        return rmsnorm_apply(params["enc_norm"], x, cfg.norm_eps)
+
+    def _logits(self, params, x) -> jax.Array:
+        cfg = self.cfg
+        x = rmsnorm_apply(params["final_norm"], x, cfg.norm_eps)
+        if cfg.tie_embeddings:
+            logits = x @ params["embed"]["table"].T
+        else:
+            logits = linear_apply(params["lm_head"], x, cfg.tt.backend)
+        return shard_act(logits.astype(jnp.float32),
+                         ("act_batch", None, "act_vocab"))
+
+    # ------------------------------------------------------------------ train
+    def loss(self, params, batch, remat: bool = True) -> jax.Array:
+        cfg = self.cfg
+        enc_out = self._encode(params, batch) if cfg.enc_dec else None
+        x, mask = self._embed_inputs(params, batch)
+        B, S, _ = x.shape
+        x = shard_act(x, ("act_batch", "act_seq", "act_embed"))
+        positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+        for gi, g in enumerate(self.groups):
+            x, _ = group_fwd(params[f"g{gi}"], cfg, g, x, positions,
+                             enc_out=enc_out, want_cache=False, remat=remat)
+        logits = self._logits(params, x)
+        tokens = batch["tokens"]
+        off = S - tokens.shape[1]                    # frontend prefix length
+        lg = logits[:, off:, :][:, :-1]
+        tgt = tokens[:, 1:]
+        msk = mask[:, off:][:, 1:]
+        lse = jax.nn.logsumexp(lg, axis=-1)
+        ll = jnp.take_along_axis(lg, tgt[..., None], axis=-1)[..., 0]
+        nll = (lse - ll) * msk
+        return jnp.sum(nll) / jnp.maximum(jnp.sum(msk), 1)
+
+    # ---------------------------------------------------------------- serving
+    def prefill(self, params, batch) -> tuple[jax.Array, dict]:
+        """Process the full prompt; return (last-token logits, cache)."""
+        cfg = self.cfg
+        enc_out = self._encode(params, batch) if cfg.enc_dec else None
+        x, _ = self._embed_inputs(params, batch)
+        B, S, _ = x.shape
+        positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+        cache: dict = {"pos": jnp.asarray(S, jnp.int32)}
+        T = batch.get("cache_len", S)
+        for gi, g in enumerate(self.groups):
+            x, c = group_fwd(params[f"g{gi}"], cfg, g, x, positions,
+                             enc_out=enc_out, want_cache=True, T_cache=T)
+            cache[f"g{gi}"] = c
+        logits = self._logits(params, x[:, -1:, :])
+        return logits, cache
+
+    def decode_step(self, params, cache: dict, token: jax.Array
+                    ) -> tuple[jax.Array, dict]:
+        """token [B,1] int32 → (logits [B,1,V], updated cache)."""
+        cfg = self.cfg
+        pos = cache["pos"]
+        x = embed_apply(params["embed"], token, cfg.d_model,
+                        scale=cfg.tie_embeddings)
+        new_cache = {"pos": pos + 1}
+        for gi, g in enumerate(self.groups):
+            x, c = group_decode(params[f"g{gi}"], cfg, g, x,
+                                cache[f"g{gi}"], pos)
+            new_cache[f"g{gi}"] = c
+        logits = self._logits(params, x)
+        return logits, new_cache
+
+    # --------------------------------------------------------------- caching
+    def cache_shapes(self, B: int, T: int, enc_T: int = 0,
+                     dtype=jnp.bfloat16) -> dict:
+        """ShapeDtypeStruct tree of a decode cache at context length T."""
+        cfg = self.cfg
+        out: dict = {"pos": jax.ShapeDtypeStruct((), jnp.int32)}
+        for gi, (period, count) in enumerate(self.groups):
+            g = {}
+            for i, bd in enumerate(period):
+                g[f"b{i}"] = block_cache_shape(cfg, bd, B, T, enc_T, dtype)
+            out[f"g{gi}"] = jax.tree.map(
+                lambda s: jax.ShapeDtypeStruct((count,) + s.shape, s.dtype),
+                g)
+        return out
+
+    def init_cache(self, B: int, T: int, enc_T: int = 0,
+                   dtype=jnp.bfloat16) -> dict:
+        shapes = self.cache_shapes(B, T, enc_T, dtype)
+        return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), shapes)
+
+
+# ---------------------------------------------------------------------------
+# Builders
+# ---------------------------------------------------------------------------
+
+def build_model(cfg: ModelConfig, layer_plan: list[Group],
+                enc_plan: list[Group] | None = None,
+                param_dtype=jnp.float32) -> Model:
+    return Model(cfg, layer_plan, enc_plan, param_dtype)

@@ -1,0 +1,190 @@
+"""Mamba-2 (SSD — state-space duality) block.
+
+Forward = chunked SSD (quadratic within chunks, linear recurrence across
+chunks — the production algorithm); decode = O(1) recurrent update on a
+persistent [B, H, N, P] state.  The in/out projections route through
+``linear_spec`` — the paper's TT technique applies to the FC parts of the
+block while the scan itself is untouched (DESIGN.md §5, mamba2 row).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import shard_act
+from .layers import linear_spec, linear_apply, rmsnorm_spec, rmsnorm_apply
+from .spec import ParamSpec
+
+
+def ssm_dims(cfg: ModelConfig):
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    heads = d_inner // s.head_dim
+    conv_dim = d_inner + 2 * s.n_groups * s.d_state
+    return d_inner, heads, conv_dim
+
+
+def ssm_spec(cfg: ModelConfig, dtype=jnp.float32) -> dict:
+    s = cfg.ssm
+    d = cfg.d_model
+    d_inner, heads, conv_dim = ssm_dims(cfg)
+    in_dim = 2 * d_inner + 2 * s.n_groups * s.d_state + heads
+    return {
+        "in_proj": linear_spec(d, in_dim, cfg.tt, "ffn",
+                               ("embed", "ssm_inner"), dtype),
+        "conv_w": ParamSpec((s.d_conv, conv_dim), ("conv", "ssm_inner"),
+                            "normal", 1.0 / np.sqrt(s.d_conv), dtype),
+        "conv_b": ParamSpec((conv_dim,), ("ssm_inner",), "zeros", dtype=dtype),
+        "A_log": ParamSpec((heads,), ("ssm_heads",), "zeros", dtype=dtype),
+        "D": ParamSpec((heads,), ("ssm_heads",), "ones", dtype=dtype),
+        "dt_bias": ParamSpec((heads,), ("ssm_heads",), "zeros", dtype=dtype),
+        "norm": rmsnorm_spec(d_inner, "ssm_inner", dtype),
+        "out_proj": linear_spec(d_inner, d, cfg.tt, "ffn",
+                                ("ssm_inner", "embed"), dtype),
+    }
+
+
+def _split_in(cfg, zxbcdt):
+    s = cfg.ssm
+    d_inner, heads, _ = ssm_dims(cfg)
+    gN = s.n_groups * s.d_state
+    z, xc, Bc, Cc, dt = jnp.split(
+        zxbcdt, np.cumsum([d_inner, d_inner, gN, gN]).tolist(), axis=-1)
+    return z, xc, Bc, Cc, dt
+
+
+def _causal_conv(xbc, w, b):
+    """Depthwise causal conv, xbc [B,S,D], w [K,D]."""
+    K = w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (K - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + xbc.shape[1], :] * w[i] for i in range(K))
+    return jax.nn.silu(out + b)
+
+
+def _segsum(a):
+    """a [..., L] → lower-triangular cumulative sums S[i,j] = Σ_{j<k≤i} a_k."""
+    L = a.shape[-1]
+    cs = jnp.cumsum(a, -1)
+    diff = cs[..., :, None] - cs[..., None, :]          # [..., i, j]
+    mask = jnp.tril(jnp.ones((L, L), bool))
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(x, dt, A, Bm, Cm, chunk: int):
+    """Chunked SSD scan.
+
+    x [B,S,H,P], dt [B,S,H] (post-softplus), A [H] (negative),
+    Bm/Cm [B,S,G,N] with G dividing H.  Returns y [B,S,H,P] and the final
+    state [B,H,N,P].
+    """
+    Bsz, S, H, P = x.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    rep = H // G
+    L = min(chunk, S)
+    nc = S // L
+    assert nc * L == S, (S, L)
+    f32 = jnp.float32
+    xc = x.reshape(Bsz, nc, L, H, P).astype(f32)
+    dtc = dt.reshape(Bsz, nc, L, H).astype(f32)
+    Bc = jnp.repeat(Bm.reshape(Bsz, nc, L, G, N), rep, 3).astype(f32)
+    Cc = jnp.repeat(Cm.reshape(Bsz, nc, L, G, N), rep, 3).astype(f32)
+    a = dtc * A.astype(f32)                              # [B,nc,L,H] (log decay)
+    a_t = a.transpose(0, 1, 3, 2)                        # [B,nc,H,L]
+    a_cum = jnp.cumsum(a_t, -1)                          # Σ_{k≤l}
+
+    # --- intra-chunk (quadratic within L) ---
+    Lmat = jnp.exp(_segsum(a_t))                         # [B,nc,H,L,L]
+    xdt = xc * dtc[..., None]
+    Y_intra = jnp.einsum("bclhn,bcshn,bchls,bcshp->bclhp",
+                         Cc, Bc, Lmat, xdt)
+
+    # --- chunk states ---
+    decay_to_end = jnp.exp(a_cum[..., -1:] - a_cum)      # [B,nc,H,L]
+    states = jnp.einsum("bclhn,bchl,bclhp->bchnp", Bc, decay_to_end, xdt)
+
+    # --- inter-chunk recurrence (scan over nc) ---
+    chunk_decay = jnp.exp(a_cum[..., -1])                # [B,nc,H]
+
+    def step(s_prev, inp):
+        st, dec = inp
+        s_new = s_prev * dec[..., None, None] + st
+        return s_new, s_prev
+
+    s0 = jnp.zeros((Bsz, H, N, P), f32)
+    s_final, s_prevs = jax.lax.scan(
+        step, s0, (states.transpose(1, 0, 2, 3, 4),
+                   chunk_decay.transpose(1, 0, 2)))
+    s_prevs = s_prevs.transpose(1, 0, 2, 3, 4)           # [B,nc,H,N,P]
+
+    decay_from_start = jnp.exp(a_cum)                    # [B,nc,H,L]
+    Y_inter = jnp.einsum("bclhn,bchl,bchnp->bclhp",
+                         Cc, decay_from_start, s_prevs)
+    y = (Y_intra + Y_inter).reshape(Bsz, S, H, P)
+    return y.astype(x.dtype), s_final
+
+
+def ssm_forward(p, cfg: ModelConfig, x, backend="xla"):
+    """Full-sequence forward.  x [B,S,d] →
+    (y [B,S,d], final_state, conv_tail [B, K-1, conv_dim]).
+
+    ``conv_tail`` is the last K-1 *pre-conv* inputs — the decode path's conv
+    ring must start from these, not from zeros, for prefill→decode parity.
+    """
+    s = cfg.ssm
+    d_inner, heads, _ = ssm_dims(cfg)
+    zxbcdt = linear_apply(p["in_proj"], x, backend)
+    z, xc, Bc, Cc, dt = _split_in(cfg, zxbcdt)
+    pre = jnp.concatenate([xc, Bc, Cc], -1)              # [B,S,conv_dim]
+    K = s.d_conv
+    if pre.shape[1] >= K - 1:
+        conv_tail = pre[:, pre.shape[1] - (K - 1):]
+    else:
+        conv_tail = jnp.pad(pre, ((0, 0), (K - 1 - pre.shape[1], 0), (0, 0)))
+    xbc = _causal_conv(pre, p["conv_w"], p["conv_b"])
+    xc, Bc, Cc = jnp.split(
+        xbc, np.cumsum([d_inner, s.n_groups * s.d_state]).tolist(), axis=-1)
+    B_, S, _ = x.shape
+    xh = xc.reshape(B_, S, heads, s.head_dim)
+    xh = shard_act(xh, ("act_batch", None, "act_heads", None))
+    dt_ = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    Bm = Bc.reshape(B_, S, s.n_groups, s.d_state)
+    Cm = Cc.reshape(B_, S, s.n_groups, s.d_state)
+    y, state = ssd_chunked(xh, dt_, A, Bm, Cm, cfg.ssm.chunk)
+    y = y + xh * p["D"][:, None]
+    y = y.reshape(B_, S, d_inner)
+    y = rmsnorm_apply(p["norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    return linear_apply(p["out_proj"], y, backend), state, conv_tail
+
+
+def ssm_decode(p, cfg: ModelConfig, x, ssm_state, conv_state, backend="xla"):
+    """One-token decode.  x [B,1,d]; ssm_state [B,H,N,P];
+    conv_state [B, K-1, conv_dim] (ring of the last K-1 pre-conv inputs)."""
+    s = cfg.ssm
+    d_inner, heads, conv_dim = ssm_dims(cfg)
+    B_ = x.shape[0]
+    zxbcdt = linear_apply(p["in_proj"], x, backend)
+    z, xc, Bc, Cc, dt = _split_in(cfg, zxbcdt)
+    xbc_new = jnp.concatenate([xc, Bc, Cc], -1)          # [B,1,conv_dim]
+    hist = jnp.concatenate([conv_state, xbc_new], 1)     # [B,K,conv_dim]
+    out = jnp.einsum("bkc,kc->bc", hist, p["conv_w"]) + p["conv_b"]
+    xbc = jax.nn.silu(out)[:, None, :]
+    conv_state = hist[:, 1:]
+    xc, Bc, Cc = jnp.split(
+        xbc, np.cumsum([d_inner, s.n_groups * s.d_state]).tolist(), axis=-1)
+    xh = xc.reshape(B_, heads, s.head_dim).astype(jnp.float32)
+    dt_ = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + p["dt_bias"])  # [B,H]
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    rep = heads // s.n_groups
+    Bm = jnp.repeat(Bc[:, 0].reshape(B_, s.n_groups, s.d_state), rep, 1)
+    Cm = jnp.repeat(Cc[:, 0].reshape(B_, s.n_groups, s.d_state), rep, 1)
+    dA = jnp.exp(dt_ * A)                                # [B,H]
+    dBx = jnp.einsum("bhn,bhp,bh->bhnp", Bm.astype(jnp.float32), xh, dt_)
+    ssm_state = ssm_state * dA[..., None, None] + dBx
+    y = jnp.einsum("bhn,bhnp->bhp", Cm.astype(jnp.float32), ssm_state)
+    y = y + xh * p["D"][:, None]
+    y = y.reshape(B_, 1, d_inner).astype(x.dtype)
+    y = rmsnorm_apply(p["norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    return linear_apply(p["out_proj"], y, backend), ssm_state, conv_state

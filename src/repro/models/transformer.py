@@ -1,0 +1,248 @@
+"""Block assembly and scanned layer stacks.
+
+A model is a list of *groups*; each group is a (period, count) pair where
+``period`` is a tuple of BlockDefs executed in order and ``count`` is how
+many times the period repeats.  Parameters of a group are stacked on a
+leading 'layers' axis and the period body is scanned — HLO size stays O(1)
+in depth (DESIGN.md §8).  Uniform models have a single (block,) period;
+hybrids (jamba 1:7 attn:mamba, gemma3 5:1 local:global) use longer periods.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import shard_act
+from .attention import (cross_attn, cross_attn_spec, cross_kv,
+                        gqa_decode_attn, gqa_self_attn, gqa_spec,
+                        mla_decode_attn, mla_self_attn, mla_spec)
+from .layers import mlp_apply, mlp_spec, rmsnorm_apply, rmsnorm_spec
+from .moe import moe_apply_ep as moe_apply, moe_spec
+from .spec import stack
+from .ssm import ssm_decode, ssm_dims, ssm_forward, ssm_spec
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockDef:
+    mixer: str = "gqa"        # gqa | mla | ssm
+    window: int = 0           # >0 → sliding-window attention (ring cache)
+    ffn: str = "mlp"          # mlp | moe | none
+    cross: bool = False       # add cross-attention (decoder of enc-dec)
+    causal: bool = True       # False → encoder self-attention
+    theta: float | None = None
+
+
+Group = tuple[tuple[BlockDef, ...], int]
+
+# When True, layer scans fully unroll.  The dry-run's roofline accounting
+# sets this: XLA cost_analysis counts a while-loop body exactly once
+# (verified empirically), so FLOP/byte/collective totals must come from
+# unrolled reduced-depth compiles + linear extrapolation (launch/dryrun.py).
+SCAN_UNROLL = False
+
+
+# ---------------------------------------------------------------------------
+# Specs
+# ---------------------------------------------------------------------------
+
+def block_spec(cfg: ModelConfig, bd: BlockDef, dtype) -> dict:
+    out = {"ln1": rmsnorm_spec(cfg.d_model, "embed", dtype)}
+    if bd.mixer == "gqa":
+        out["attn"] = gqa_spec(cfg, dtype)
+    elif bd.mixer == "mla":
+        out["attn"] = mla_spec(cfg, dtype)
+    elif bd.mixer == "ssm":
+        out["ssm"] = ssm_spec(cfg, dtype)
+    else:
+        raise ValueError(bd.mixer)
+    if bd.cross:
+        out["ln_x"] = rmsnorm_spec(cfg.d_model, "embed", dtype)
+        out["xattn"] = cross_attn_spec(cfg, dtype)
+    if bd.ffn != "none":
+        out["ln2"] = rmsnorm_spec(cfg.d_model, "embed", dtype)
+        if bd.ffn == "moe":
+            out["ffn"] = moe_spec(cfg, dtype)
+        else:
+            ff = cfg.moe.first_dense_ff if (bd.ffn == "dense0" and cfg.moe) \
+                else cfg.d_ff
+            out["ffn"] = mlp_spec(cfg.d_model, ff, cfg.tt, dtype)
+    return out
+
+
+def group_spec(cfg: ModelConfig, group: Group, dtype) -> dict:
+    period, count = group
+    ps = {f"b{i}": block_spec(cfg, bd, dtype) for i, bd in enumerate(period)}
+    return stack(ps, count)
+
+
+# ---------------------------------------------------------------------------
+# Cache structure per block
+# ---------------------------------------------------------------------------
+
+def block_cache_shape(cfg: ModelConfig, bd: BlockDef, B: int, T: int,
+                      enc_T: int, dtype) -> dict:
+    """ShapeDtypeStructs of one block's decode cache."""
+    sd = jax.ShapeDtypeStruct
+    out: dict = {}
+    if bd.mixer == "gqa":
+        W = min(bd.window, T) if bd.window else T
+        kv = (B, W, cfg.num_kv_heads, cfg.head_dim)
+        out["k"], out["v"] = sd(kv, dtype), sd(kv, dtype)
+    elif bd.mixer == "mla":
+        m = cfg.mla
+        out["ckv"] = sd((B, T, m.kv_lora), dtype)
+        out["krope"] = sd((B, T, m.rope_head_dim), dtype)
+    elif bd.mixer == "ssm":
+        s = cfg.ssm
+        d_inner, heads, conv_dim = ssm_dims(cfg)
+        out["state"] = sd((B, heads, s.d_state, s.head_dim), jnp.float32)
+        out["conv"] = sd((B, s.d_conv - 1, conv_dim), dtype)
+    if bd.cross:
+        kv = (B, enc_T, cfg.num_kv_heads, cfg.head_dim)
+        out["xk"], out["xv"] = sd(kv, dtype), sd(kv, dtype)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Block apply — full sequence (train / prefill / encoder)
+# ---------------------------------------------------------------------------
+
+def block_fwd(p, cfg: ModelConfig, bd: BlockDef, x, positions, *,
+              enc_out=None, want_cache: bool, T_cache: int = 0):
+    """Returns (x, cache_dict_or_None)."""
+    backend = cfg.tt.backend
+    cache = {}
+    h = rmsnorm_apply(p["ln1"], x, cfg.norm_eps)
+    if bd.mixer == "gqa":
+        y, (k, v) = gqa_self_attn(p["attn"], cfg, h, positions,
+                                  window=bd.window, theta=bd.theta,
+                                  backend=backend, causal=bd.causal)
+        if want_cache:
+            W = min(bd.window, T_cache) if bd.window else T_cache
+            S = k.shape[1]
+            if S >= W:
+                # ring slots: position p lives at slot p % W
+                ck = jnp.roll(k[:, -W:], S % W, axis=1)
+                cv = jnp.roll(v[:, -W:], S % W, axis=1)
+            else:
+                pad = ((0, 0), (0, W - S), (0, 0), (0, 0))
+                ck, cv = jnp.pad(k, pad), jnp.pad(v, pad)
+            cache.update(k=ck, v=cv)
+    elif bd.mixer == "mla":
+        y, (ckv, krope) = mla_self_attn(p["attn"], cfg, h, positions,
+                                        backend=backend)
+        if want_cache:
+            padlen = T_cache - ckv.shape[1]
+            cache["ckv"] = jnp.pad(ckv, ((0, 0), (0, padlen), (0, 0)))
+            cache["krope"] = jnp.pad(krope, ((0, 0), (0, padlen), (0, 0)))
+    else:  # ssm
+        y, state, conv_tail = ssm_forward(p["ssm"], cfg, h, backend)
+        if want_cache:
+            cache["state"] = state
+            cache["conv"] = conv_tail.astype(x.dtype)
+    x = x + y
+    if bd.cross:
+        h = rmsnorm_apply(p["ln_x"], x, cfg.norm_eps)
+        x = x + cross_attn(p["xattn"], cfg, h, *_enc_kv(p, cfg, bd, enc_out,
+                                                        cache, want_cache),
+                           backend=backend)
+    if bd.ffn != "none":
+        h = rmsnorm_apply(p["ln2"], x, cfg.norm_eps)
+        if bd.ffn == "moe":
+            x = x + moe_apply(p["ffn"], cfg, h, backend)
+        else:
+            x = x + mlp_apply(p["ffn"], h, backend)
+    x = shard_act(x, ("act_batch", "act_seq", "act_embed"))
+    return x, (cache if want_cache else None)
+
+
+def _enc_kv(p, cfg, bd, enc_out, cache, want_cache):
+    k, v = cross_kv(p["xattn"], cfg, enc_out, cfg.tt.backend)
+    if want_cache:
+        cache["xk"], cache["xv"] = k, v
+    return k, v
+
+
+# ---------------------------------------------------------------------------
+# Block apply — single-token decode
+# ---------------------------------------------------------------------------
+
+def block_decode(p, cfg: ModelConfig, bd: BlockDef, x, cache: dict, pos):
+    backend = cfg.tt.backend
+    h = rmsnorm_apply(p["ln1"], x, cfg.norm_eps)
+    new_cache = dict(cache)
+    if bd.mixer == "gqa":
+        y, nk, nv = gqa_decode_attn(p["attn"], cfg, h, cache["k"], cache["v"],
+                                    pos, window=bd.window, theta=bd.theta,
+                                    backend=backend)
+        new_cache.update(k=nk, v=nv)
+    elif bd.mixer == "mla":
+        y, nckv, nkr = mla_decode_attn(p["attn"], cfg, h, cache["ckv"],
+                                       cache["krope"], pos, backend=backend)
+        new_cache.update(ckv=nckv, krope=nkr)
+    else:
+        y, st, cv = ssm_decode(p["ssm"], cfg, h, cache["state"],
+                               cache["conv"], backend)
+        new_cache.update(state=st, conv=cv)
+    x = x + y
+    if bd.cross:
+        h = rmsnorm_apply(p["ln_x"], x, cfg.norm_eps)
+        x = x + cross_attn(p["xattn"], cfg, h, cache["xk"], cache["xv"],
+                           backend=backend)
+    if bd.ffn != "none":
+        h = rmsnorm_apply(p["ln2"], x, cfg.norm_eps)
+        if bd.ffn == "moe":
+            x = x + moe_apply(p["ffn"], cfg, h, backend)
+        else:
+            x = x + mlp_apply(p["ffn"], h, backend)
+    return x, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Group (scanned) application
+# ---------------------------------------------------------------------------
+
+def group_fwd(params, cfg: ModelConfig, group: Group, x, positions, *,
+              enc_out=None, want_cache: bool, T_cache: int = 0,
+              remat: bool = False):
+    """Scan the period body over the group's stacked params.
+    Returns (x, stacked_caches_or_None)."""
+    period, count = group
+
+    def body(x, layer_params):
+        caches = {}
+        for i, bd in enumerate(period):
+            x, c = block_fwd(layer_params[f"b{i}"], cfg, bd, x, positions,
+                             enc_out=enc_out, want_cache=want_cache,
+                             T_cache=T_cache)
+            if want_cache:
+                caches[f"b{i}"] = c
+        return x, (caches if want_cache else None)
+
+    if remat:
+        body = jax.checkpoint(body)
+    x, caches = jax.lax.scan(body, x, params, unroll=SCAN_UNROLL or 1)
+    return x, caches
+
+
+def group_decode(params, cfg: ModelConfig, group: Group, x, caches, pos):
+    """Scan decode over stacked (params, caches).  Returns (x, new_caches)."""
+    period, count = group
+
+    def body(x, inp):
+        layer_params, layer_caches = inp
+        new = {}
+        for i, bd in enumerate(period):
+            x, c = block_decode(layer_params[f"b{i}"], cfg, bd, x,
+                                layer_caches[f"b{i}"], pos)
+            new[f"b{i}"] = c
+        return x, new
+
+    x, new_caches = jax.lax.scan(body, x, (params, caches),
+                                 unroll=SCAN_UNROLL or 1)
+    return x, new_caches

@@ -1,0 +1,61 @@
+"""Batched serving engine: prefill + greedy/temperature decode loop.
+
+The per-token step is one jitted function (model.decode_step) whose cache is
+donated; the Python loop only feeds tokens — standard continuous-batching
+inner loop, minus the scheduler (requests arrive pre-batched here).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.model import Model
+
+
+@dataclasses.dataclass
+class GenerateResult:
+    tokens: jax.Array          # [B, steps]
+    logprobs: jax.Array        # [B, steps]
+
+
+def generate(model: Model, params, batch: dict, steps: int,
+             temperature: float = 0.0, key: jax.Array | None = None
+             ) -> GenerateResult:
+    # cache_len is a *static* shape (it sizes the KV cache): close over it
+    # rather than letting jit trace it.
+    cache_len = batch.get("cache_len")
+    arrays = {k: v for k, v in batch.items() if k != "cache_len"}
+
+    def prefill(p, b):
+        bb = dict(b, cache_len=cache_len) if cache_len is not None else b
+        return model.prefill(p, bb)
+
+    logits, cache = jax.jit(prefill)(params, arrays)
+
+    step_fn = jax.jit(model.decode_step, donate_argnums=(1,))
+
+    def pick(logits, key):
+        lg = logits[:, -1, :]
+        if temperature == 0.0:
+            tok = jnp.argmax(lg, -1)
+        else:
+            tok = jax.random.categorical(key, lg / temperature, -1)
+        lp = jax.nn.log_softmax(lg, -1)
+        return tok.astype(jnp.int32), jnp.take_along_axis(
+            lp, tok[:, None], -1)[:, 0]
+
+    key = key if key is not None else jax.random.PRNGKey(0)
+    toks, lps = [], []
+    key, sub = jax.random.split(key)
+    tok, lp = pick(logits, sub)
+    toks.append(tok)
+    lps.append(lp)
+    for _ in range(steps - 1):
+        logits, cache = step_fn(params, cache, tok[:, None])
+        key, sub = jax.random.split(key)
+        tok, lp = pick(logits, sub)
+        toks.append(tok)
+        lps.append(lp)
+    return GenerateResult(jnp.stack(toks, 1), jnp.stack(lps, 1))

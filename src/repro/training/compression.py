@@ -1,0 +1,62 @@
+"""Gradient compression for the slow (cross-pod) hop.
+
+int8 uniform quantization with error feedback: the quantization residual is
+carried in an fp32 state and added back before the next step's quantization,
+so the scheme is unbiased over time (1-bit-Adam family result).
+
+Two integration points:
+
+* ``ef_compress_tree`` — quantize/dequantize grads inside the train step
+  (models the wire format; used by default so the numerics are always
+  exercised, hardware or not).
+* ``compressed_psum`` — a shard_map collective that actually moves int8
+  across the 'pod' mesh axis: quantize → all_gather(int8) → dequant-sum.
+  Cross-pod bytes drop 4× vs fp32 (2× vs bf16); the intra-pod reduction
+  stays full precision.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+def quantize(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    scale = jnp.max(jnp.abs(x)) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def ef_init(params):
+    return jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+
+
+def ef_compress_tree(grads, ef_state):
+    """Error-feedback int8 round-trip on every gradient leaf.
+    Returns (compressed-then-restored grads, new ef state)."""
+    def one(g, e):
+        target = g.astype(jnp.float32) + e
+        q, s = quantize(target)
+        restored = dequantize(q, s)
+        return restored.astype(g.dtype), target - restored
+    flat_g, tdef = jax.tree.flatten(grads)
+    flat_e = jax.tree.leaves(ef_state)
+    out = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    return (jax.tree.unflatten(tdef, [o[0] for o in out]),
+            jax.tree.unflatten(tdef, [o[1] for o in out]))
+
+
+def compressed_psum(x: jax.Array, axis_name: str) -> jax.Array:
+    """Quantized sum across one mesh axis (inside shard_map): each member
+    contributes an int8 tensor + fp32 scale; the sum is done after dequant
+    so precision loss is bounded by one quantization per member."""
+    q, s = quantize(x.astype(jnp.float32))
+    qs = jax.lax.all_gather(q, axis_name)            # [n, ...] int8 on wire
+    ss = jax.lax.all_gather(s, axis_name)            # [n] fp32 (negligible)
+    return jnp.tensordot(ss, qs.astype(jnp.float32), axes=1)

@@ -1,0 +1,76 @@
+"""Train step assembly: mixed precision, microbatch accumulation, optional
+gradient compression; data parallelism is expressed through shardings and
+realized by GSPMD (pjit), so one function serves 1 chip and 512 chips.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.model import Model
+from repro.models.spec import cast_tree
+from .compression import ef_compress_tree, ef_init
+from .optimizer import OptConfig, adamw_init, adamw_update
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    opt: OptConfig = OptConfig()
+    micro_batches: int = 1
+    compute_dtype: Any = jnp.bfloat16
+    remat: bool = True
+    grad_compression: bool = False
+
+
+def init_train_state(model: Model, key: jax.Array,
+                     tcfg: TrainConfig) -> dict:
+    params = model.init(key)
+    state = {"params": params, "opt": adamw_init(params)}
+    if tcfg.grad_compression:
+        state["ef"] = ef_init(params)
+    return state
+
+
+def make_train_step(model: Model, tcfg: TrainConfig):
+    """Returns train_step(state, batch) → (state, metrics).  Pure function
+    of its arguments — safe to jit/pjit with donated state."""
+
+    def loss_fn(params, batch):
+        cparams = cast_tree(params, tcfg.compute_dtype)
+        return model.loss(cparams, batch, remat=tcfg.remat)
+
+    def grads_of(params, batch):
+        if tcfg.micro_batches == 1:
+            return jax.value_and_grad(loss_fn)(params, batch)
+        # microbatch accumulation over the leading batch axis
+        mb = tcfg.micro_batches
+        split = jax.tree.map(
+            lambda x: x.reshape((mb, x.shape[0] // mb) + x.shape[1:]), batch)
+
+        def body(acc, micro):
+            l, g = jax.value_and_grad(loss_fn)(params, micro)
+            return (acc[0] + l, jax.tree.map(jnp.add, acc[1], g)), None
+
+        zero = (jnp.zeros(()),
+                jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                             params))
+        (l, g), _ = jax.lax.scan(body, zero, split)
+        scale = 1.0 / mb
+        return l * scale, jax.tree.map(lambda x: x * scale, g)
+
+    def train_step(state: dict, batch: dict) -> tuple[dict, dict]:
+        params = state["params"]
+        loss, grads = grads_of(params, batch)
+        new_state = dict(state)
+        if tcfg.grad_compression:
+            grads, new_state["ef"] = ef_compress_tree(grads, state["ef"])
+        new_params, new_opt, metrics = adamw_update(
+            grads, state["opt"], params, tcfg.opt)
+        new_state.update(params=new_params, opt=new_opt)
+        metrics["loss"] = loss
+        return new_state, metrics
+
+    return train_step

@@ -1,0 +1,14 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS here — smoke tests and benches must
+see 1 device (the 512-device override belongs to repro.launch.dryrun only).
+"""
+import os
+import sys
+
+# Allow `pytest tests/` without PYTHONPATH=src.
+_SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+if os.path.abspath(_SRC) not in [os.path.abspath(p) for p in sys.path]:
+    sys.path.insert(0, os.path.abspath(_SRC))
+
+import jax  # noqa: E402
+
+jax.config.update("jax_enable_x64", False)

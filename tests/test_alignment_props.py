@@ -1,0 +1,104 @@
+"""Property tests (hypothesis) for the paper's §4.1 alignment strategy.
+
+The paper's central empirical claim (Fig. 7): over 374k configurations the
+aligned permutation is ALWAYS FLOPs-optimal (ratio ≡ 1.0) and
+near-memory-optimal.  We verify the FLOPs claim *exhaustively over all
+permutations* for randomized factor shapes — a stronger statement than the
+paper's sampled benchmark.
+"""
+import itertools
+
+from hypothesis import given, settings, strategies as st
+
+from repro.core.dse import aligned_pair
+from repro.core.flops import (clip_ranks, num_permutations_aligned,
+                              tt_flops, tt_params)
+
+factor = st.integers(min_value=2, max_value=14)
+dims = st.integers(min_value=2, max_value=4)         # d ≤ 4: (4!)² ≤ 576 perms
+
+
+@st.composite
+def shape_pair(draw):
+    d = draw(dims)
+    ms = tuple(draw(factor) for _ in range(d))
+    ns = tuple(draw(factor) for _ in range(d))
+    rank = draw(st.sampled_from([2, 4, 8, 16]))
+    ranks = tuple([1] + [rank] * (d - 1) + [1])
+    return ms, ns, ranks, rank
+
+
+def _all_perm_values(ms, ns, ranks):
+    """FLOPs/params at the SAME rank list for every permutation.
+
+    Proposition 3 compares permutations at a fixed rank list.  (Clipping the
+    ranks per-permutation — footnote 5 — can let the aligned shape admit a
+    *larger* feasible rank and hence more FLOPs; hypothesis found that
+    counterexample, recorded in EXPERIMENTS.md §Validation.)"""
+    vals = []
+    for pm in set(itertools.permutations(ms)):
+        for pn in set(itertools.permutations(ns)):
+            vals.append((tt_flops(pm, pn, ranks, bias=False),
+                         tt_params(pm, pn, ranks, bias=False)))
+    return vals
+
+
+@given(shape_pair())
+@settings(max_examples=60, deadline=None)
+def test_aligned_is_flops_optimal_over_all_permutations(sp):
+    """Fig. 7 FLOPs ratio ≡ 1.0: aligned == min over every permutation."""
+    ms, ns, ranks, rank = sp
+    ams, ans = aligned_pair(ms, ns)
+    aligned_flops = tt_flops(ams, ans, ranks, bias=False)
+    min_flops = min(f for f, _ in _all_perm_values(ms, ns, ranks))
+    assert aligned_flops == min_flops
+
+
+@given(shape_pair())
+@settings(max_examples=40, deadline=None)
+def test_aligned_memory_within_permutation_range(sp):
+    """Fig. 8: aligned memory lies within [min, max] over permutations and
+    is far below the max (ratio_Memory is concentrated near 1)."""
+    ms, ns, ranks, rank = sp
+    ams, ans = aligned_pair(ms, ns)
+    amem = tt_params(ams, ans, ranks, bias=False)
+    mems = [p for _, p in _all_perm_values(ms, ns, ranks)]
+    assert min(mems) <= amem <= max(mems)
+
+
+@given(shape_pair())
+@settings(max_examples=60, deadline=None)
+def test_prop4_counts_distinct_permutations(sp):
+    """Prop. 4 formula == the literal number of distinct (m-perm, n-perm)
+    pairs."""
+    ms, ns, _, _ = sp
+    n_perms = (len(set(itertools.permutations(ms)))
+               * len(set(itertools.permutations(ns))))
+    assert num_permutations_aligned(ms, ns) == n_perms
+
+
+@given(shape_pair())
+@settings(max_examples=60, deadline=None)
+def test_alignment_definition(sp):
+    """Definition 1: m non-increasing, n non-decreasing; products preserved."""
+    ms, ns, _, _ = sp
+    ams, ans = aligned_pair(ms, ns)
+    assert all(ams[i] >= ams[i + 1] for i in range(len(ams) - 1))
+    assert all(ans[i] <= ans[i + 1] for i in range(len(ans) - 1))
+    import math
+    assert math.prod(ams) == math.prod(ms)
+    assert math.prod(ans) == math.prod(ns)
+
+
+@given(shape_pair())
+@settings(max_examples=60, deadline=None)
+def test_rank_clipping_invariants(sp):
+    """Clipped ranks: boundary 1s, never above requested, never above the
+    unfolding bound (footnote 5)."""
+    ms, ns, _, rank = sp
+    from repro.core.flops import max_tt_rank_at_cut
+    ranks = clip_ranks(ms, ns, [1] + [rank] * (len(ms) - 1) + [1])
+    assert ranks[0] == ranks[-1] == 1
+    for t in range(1, len(ms)):
+        assert ranks[t] <= rank
+        assert ranks[t] <= max_tt_rank_at_cut(ms, ns, t)

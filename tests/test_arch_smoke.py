@@ -1,0 +1,154 @@
+"""Per-architecture smoke tests (assignment requirement): reduced config of
+the same family, one forward/train step on CPU, shape + finiteness asserts.
+
+Every arch runs with the paper's technique ENABLED (TT on FFN projections in
+the smoke configs) so the TT path is exercised inside every model family.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, build, get_config
+from repro.configs.shapes import concrete_batch
+from repro.models.spec import is_spec
+from repro.training.optimizer import OptConfig
+from repro.training.train_loop import (TrainConfig, init_train_state,
+                                       make_train_step)
+
+B, S = 2, 16
+
+
+def _finite(tree) -> bool:
+    return all(bool(jnp.all(jnp.isfinite(x))) for x in jax.tree.leaves(tree)
+               if jnp.issubdtype(x.dtype, jnp.floating))
+
+
+@pytest.fixture(scope="module")
+def built():
+    """Build + init each smoke model once per module."""
+    cache = {}
+
+    def get(arch):
+        if arch not in cache:
+            cfg = get_config(arch, "smoke")
+            model = build(cfg)
+            params = model.init(jax.random.PRNGKey(0))
+            cache[arch] = (cfg, model, params)
+        return cache[arch]
+
+    return get
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_forward_loss(arch, built):
+    cfg, model, params = built(arch)
+    batch = concrete_batch(cfg, B, S)
+    loss = model.loss(params, batch, remat=False)
+    assert loss.shape == ()
+    assert bool(jnp.isfinite(loss))
+    # a random model over vocab V should sit near ln(V)
+    assert 0.1 * np.log(cfg.vocab_size) < float(loss) \
+        < 3.0 * np.log(cfg.vocab_size)
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_one_train_step(arch, built):
+    cfg, model, params = built(arch)
+    tcfg = TrainConfig(opt=OptConfig(lr=1e-3, warmup_steps=0), remat=False,
+                       compute_dtype=jnp.float32)
+    state = {"params": params,
+             "opt": {"m": jax.tree.map(jnp.zeros_like, params),
+                     "v": jax.tree.map(jnp.zeros_like, params),
+                     "step": jnp.zeros((), jnp.int32)}}
+    step = make_train_step(model, tcfg)
+    batch = concrete_batch(cfg, B, S)
+    new_state, metrics = jax.jit(step)(state, batch)
+    assert bool(jnp.isfinite(metrics["loss"]))
+    assert _finite(new_state["params"])
+    # params actually moved
+    diffs = jax.tree.map(lambda a, b: float(jnp.max(jnp.abs(a - b))),
+                         state["params"], new_state["params"])
+    assert max(jax.tree.leaves(diffs)) > 0
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_prefill_and_decode_shapes(arch, built):
+    cfg, model, params = built(arch)
+    params_h = jax.tree.map(
+        lambda x: x.astype(jnp.bfloat16)
+        if jnp.issubdtype(x.dtype, jnp.floating) else x, params)
+    batch = dict(concrete_batch(cfg, B, S))
+    batch["cache_len"] = S + 4
+    logits, cache = model.prefill(params_h, batch)
+    assert logits.shape == (B, 1, cfg.vocab_size)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+    tok = jnp.argmax(logits[:, -1, :], -1).astype(jnp.int32)[:, None]
+    logits2, cache2 = model.decode_step(params_h, cache, tok)
+    assert logits2.shape == (B, 1, cfg.vocab_size)
+    assert bool(jnp.all(jnp.isfinite(logits2)))
+    assert int(cache2["pos"]) == int(cache["pos"]) + 1
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_param_specs_have_logical_axes(arch, built):
+    cfg, model, _ = built(arch)
+    specs = model.param_specs()
+    leaves = jax.tree.leaves(specs, is_leaf=is_spec)
+    assert leaves
+    for s in leaves:
+        assert len(s.axes) == len(s.shape)
+    assert model.num_params() > 1000
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_uses_tt_somewhere(arch, built):
+    """The smoke configs enable the paper's technique — verify TT cores are
+    actually present in the parameter tree (DSE found a surviving plan)."""
+    cfg, model, params = built(arch)
+    if not cfg.tt.enabled:
+        pytest.skip("smoke config has TT disabled")
+    flat = jax.tree_util.tree_flatten_with_path(params)[0]
+    keys = {"/".join(str(getattr(p, "key", p)) for p in path)
+            for path, _ in flat}
+    assert any("/tt/" in k or k.endswith("/tt") or "tt/c0" in k
+               for k in keys), f"no TT cores in {arch} params"
+
+
+def test_full_configs_match_assignment():
+    """Spot-check the assigned full configs against the brief's table."""
+    spec = {
+        "qwen3_32b": dict(num_layers=64, d_model=5120, num_heads=64,
+                          num_kv_heads=8, d_ff=25600, vocab_size=151936),
+        "gemma3_4b": dict(num_layers=34, d_model=2560, num_heads=8,
+                          num_kv_heads=4, d_ff=10240, vocab_size=262144),
+        "deepseek_7b": dict(num_layers=30, d_model=4096, num_heads=32,
+                            num_kv_heads=32, d_ff=11008, vocab_size=102400),
+        "granite_8b": dict(num_layers=36, d_model=4096, num_heads=32,
+                           num_kv_heads=8, d_ff=14336, vocab_size=49152),
+        "jamba_v0_1_52b": dict(num_layers=32, d_model=4096, num_heads=32,
+                               num_kv_heads=8, d_ff=14336, vocab_size=65536),
+        "deepseek_v2_lite_16b": dict(num_layers=27, d_model=2048,
+                                     num_heads=16, vocab_size=102400),
+        "mixtral_8x7b": dict(num_layers=32, d_model=4096, num_heads=32,
+                             num_kv_heads=8, d_ff=14336, vocab_size=32000),
+        "internvl2_2b": dict(num_layers=24, d_model=2048, num_heads=16,
+                             num_kv_heads=8, d_ff=8192, vocab_size=92553),
+        "mamba2_2p7b": dict(num_layers=64, d_model=2560, vocab_size=50280),
+        "seamless_m4t_large_v2": dict(num_layers=24, d_model=1024,
+                                      num_heads=16, num_kv_heads=16,
+                                      d_ff=8192, vocab_size=256206),
+    }
+    for arch, fields in spec.items():
+        cfg = get_config(arch, "full")
+        for k, v in fields.items():
+            assert getattr(cfg, k) == v, f"{arch}.{k}: {getattr(cfg, k)} != {v}"
+    # MoE structure
+    assert get_config("mixtral_8x7b", "full").moe.num_experts == 8
+    assert get_config("mixtral_8x7b", "full").moe.top_k == 2
+    assert get_config("jamba_v0_1_52b", "full").moe.num_experts == 16
+    assert get_config("deepseek_v2_lite_16b", "full").moe.num_experts == 64
+    assert get_config("deepseek_v2_lite_16b", "full").moe.top_k == 6
+    assert get_config("deepseek_v2_lite_16b", "full").mla.kv_lora == 512
+    assert get_config("mamba2_2p7b", "full").ssm.d_state == 128
+    assert get_config("seamless_m4t_large_v2", "full").enc_dec

@@ -1,0 +1,123 @@
+"""Checkpoint atomicity + fault-tolerance manager (restart / elastic)."""
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.training import checkpoint as ckpt
+from repro.training.fault import CheckpointManager, restore_or_init
+
+
+def _state(seed=0):
+    k = jax.random.PRNGKey(seed)
+    return {"params": {"w": jax.random.normal(k, (4, 3)),
+                       "tt": {"c0": jnp.arange(6.0).reshape(2, 3)}},
+            "opt": {"step": jnp.asarray(7, jnp.int32)}}
+
+
+def test_save_restore_roundtrip(tmp_path):
+    s = _state()
+    ckpt.save(str(tmp_path), s, step=7)
+    restored, manifest = ckpt.restore(str(tmp_path), s)
+    assert manifest["step"] == 7
+    for a, b in zip(jax.tree.leaves(s), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_restore_latest_and_specific(tmp_path):
+    s = _state()
+    for step in (1, 5, 9):
+        s["opt"]["step"] = jnp.asarray(step, jnp.int32)
+        ckpt.save(str(tmp_path), s, step=step)
+    assert ckpt.available_steps(str(tmp_path)) == [1, 5, 9]
+    r, m = ckpt.restore(str(tmp_path), s)
+    assert m["step"] == 9
+    r, m = ckpt.restore(str(tmp_path), s, step=5)
+    assert int(r["opt"]["step"]) == 5
+
+
+def test_structure_mismatch_rejected(tmp_path):
+    ckpt.save(str(tmp_path), _state(), step=1)
+    wrong = {"params": {"w": jnp.zeros((4, 3))}}
+    with pytest.raises(ValueError, match="mismatch"):
+        ckpt.restore(str(tmp_path), wrong)
+
+
+def test_torn_write_never_restored(tmp_path):
+    """A crashed save (leftover .tmp dir) must be invisible to restore."""
+    s = _state()
+    ckpt.save(str(tmp_path), s, step=1)
+    torn = os.path.join(str(tmp_path), "step_00000002.tmp.999")
+    os.makedirs(torn)
+    with open(os.path.join(torn, "manifest.json"), "w") as f:
+        json.dump({"step": 2}, f)
+    assert ckpt.available_steps(str(tmp_path)) == [1]
+    _, m = ckpt.restore(str(tmp_path), s)
+    assert m["step"] == 1
+
+
+def test_prune_keeps_newest(tmp_path):
+    s = _state()
+    for step in range(6):
+        ckpt.save(str(tmp_path), s, step=step)
+    ckpt.prune(str(tmp_path), keep=3)
+    assert ckpt.available_steps(str(tmp_path)) == [3, 4, 5]
+
+
+def test_manager_save_every_and_restore(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), save_every=10, keep=2)
+    s = _state()
+    saved = []
+    for step in range(25):
+        if mgr.should_save(step):
+            mgr.save(s, step)
+            saved.append(step)
+    assert saved == [10, 20]          # step 0 never saved (nothing learned)
+    assert mgr.latest_step() == 20
+    restored, data_state = mgr.restore(s)
+    assert data_state is not None or True   # manifest extra may be empty
+    assert ckpt.available_steps(str(tmp_path)) == [10, 20]
+
+
+def test_restore_or_init_cold_and_warm(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), save_every=1)
+    calls = []
+
+    def init_fn():
+        calls.append(1)
+        return _state()
+
+    template = _state()
+    # cold start: no checkpoint → init_fn used
+    state, step, _ = restore_or_init(mgr, init_fn, template)
+    assert step == 0 and len(calls) == 1
+    # save then warm start: restored, init_fn NOT called again
+    mgr.save(state, 42)
+    state2, step2, _ = restore_or_init(mgr, init_fn, template)
+    assert step2 == 42 and len(calls) == 1
+    np.testing.assert_array_equal(np.asarray(state2["params"]["w"]),
+                                  np.asarray(state["params"]["w"]))
+
+
+def test_checkpoint_includes_data_iterator_state(tmp_path):
+    """Fault tolerance covers the input pipeline: iterator state rides in
+    the manifest so a restart resumes the exact batch sequence."""
+    from repro.configs import get_config
+    from repro.data.pipeline import DataIterator, DataState
+    mgr = CheckpointManager(str(tmp_path), save_every=1)
+    cfg = get_config("deepseek_7b", "smoke")
+    it = DataIterator(cfg, B=2, S=8)
+    b3 = [next(it) for _ in range(3)][-1]           # consume 3 batches
+    mgr.save(_state(), 3, data_state=it.state.as_dict())
+    _, data_state = mgr.restore(_state())
+    it2 = DataIterator(cfg, B=2, S=8,
+                       state=DataState.from_dict(data_state))
+    # continues after batch 3 — matches a fresh iterator's 4th batch
+    it_ref = DataIterator(cfg, B=2, S=8)
+    for _ in range(3):
+        next(it_ref)
+    np.testing.assert_array_equal(np.asarray(next(it2)["tokens"]),
+                                  np.asarray(next(it_ref)["tokens"]))

@@ -1,0 +1,142 @@
+"""The 4-stage DSE pipeline (paper §4, Fig. 4, Tables 1–2)."""
+import pytest
+
+from repro.core.dse import (DSEConfig, TPU_DSE, aligned_combination_shapes,
+                            best_plan, count_stages, explore,
+                            multiplicative_partitions, select_threads)
+from repro.core.flops import dense_flops, dense_params, prod
+
+
+def test_multiplicative_partitions():
+    parts = multiplicative_partitions(12)
+    assert set(parts) == {(12,), (2, 6), (3, 4), (2, 2, 3)}
+    assert multiplicative_partitions(7) == ((7,),)
+    # every partition multiplies back and is ascending
+    for p in multiplicative_partitions(512):
+        assert prod(p) == 512
+        assert list(p) == sorted(p)
+
+
+def test_aligned_combination_shapes_cover_paper_example():
+    """The §2 LeNet300 shapes (M=300, N=784, d=5) must appear."""
+    shapes = aligned_combination_shapes(300, 784, max_d=5, min_d=5)
+    assert ((5, 5, 3, 2, 2), (2, 2, 2, 7, 14)) in shapes
+
+
+def test_stage_counts_monotone_decreasing():
+    """Each pruning stage only removes solutions (Tables 1–2 columns)."""
+    c = count_stages(120, 84, DSEConfig())            # paper Fig. 2 layer
+    assert c["all_initial"] >= c["aligned"] >= c["vectorized"] > 0
+
+
+def test_table1_lenet5_magnitudes():
+    """Table 1 row [120, 84]: all≈5.4e6, aligned≈1.1e5, vectorized≈3.3e2.
+    We assert the order of magnitude (the paper prints 2 significant
+    digits)."""
+    c = count_stages(84, 120, DSEConfig(vl=8))
+    import math
+    assert 5.5 <= math.log10(c["all_initial"]) <= 7.5
+    assert 4.0 <= math.log10(c["aligned"]) <= 6.0
+    assert 2.0 <= math.log10(c["vectorized"]) <= 3.5
+
+
+def test_vectorization_constraint():
+    """§4.2.1: all surviving ranks are multiples of vl."""
+    res = explore(300, 784, DSEConfig(vl=8, rank_step=8, rank_cap=64))
+    assert res.solutions
+    for s in res.solutions:
+        for r in s.plan.ranks[1:-1]:
+            assert r % 8 == 0
+
+
+def test_initial_layer_constraint():
+    """§4.2.2: every survivor beats the dense layer on FLOPs AND params."""
+    M, N = 300, 784
+    res = explore(M, N, DSEConfig(vl=8, rank_step=8, rank_cap=64))
+    for s in res.solutions:
+        assert s.flops < dense_flops(M, N)
+        assert s.params < dense_params(M, N)
+
+
+def test_scalability_constraint():
+    """§4.2.3: no survivor has d > max_scalable_d with heaviest einsum below
+    the workload floor."""
+    cfg = DSEConfig(vl=8, rank_step=8, rank_cap=32)
+    res = explore(2048, 2048, cfg)
+    for s in res.solutions:
+        if s.d > cfg.max_scalable_d:
+            assert s.max_einsum_flops >= cfg.heavy_flops_min
+
+
+def test_thread_table_fig9():
+    """Fig. 9 workload → thread-count boundaries."""
+    cfg = DSEConfig()
+    assert select_threads(1e6, cfg) == 1
+    assert select_threads(3e6, cfg) == 2
+    assert select_threads(6e6, cfg) == 3
+    assert select_threads(9e6, cfg) == 4
+
+
+def test_solutions_sorted_and_best_filters():
+    res = explore(512, 512, DSEConfig(vl=8, rank_step=8, rank_cap=32))
+    flops = [s.flops for s in res.solutions]
+    assert flops == sorted(flops)
+    b2 = res.best(length=2)
+    assert b2 is not None and b2.d == 2
+    b8 = res.best(rank=8)
+    assert all(r in (1, 8) for r in b8.plan.ranks)
+
+
+def test_paper_64_picks_are_survivors():
+    """§6.4's deployed factorizations are *among* our survivors (the paper
+    emits a list, not a single solution).  Note: the quoted picks are not
+    the Eq.(11) minimum — our min-FLOPs survivor is strictly cheaper, which
+    we also assert (EXPERIMENTS.md discusses the gap)."""
+    from repro.core.flops import tt_flops, clip_ranks
+    cases = [
+        # (M, N, paper ns, paper ms)  — "FC [N_in, M_out] factorized into
+        # [n1×n2, m1×m2]" per §6.4 listing, rank 8
+        (1000, 2048, (32, 64), (100, 10)),       # ResNet
+        (512, 512, (16, 32), (32, 16)),          # VGG fc
+        (1000, 1024, (16, 64), (40, 25)),        # GoogleNet
+        (2048, 4096, (64, 64), (64, 32)),        # AlexNet fc1
+    ]
+    for M, N, ns, ms in cases:
+        res = explore(M, N, DSEConfig(vl=8, rank_step=8, rank_cap=8))
+        found = [s for s in res.solutions
+                 if s.plan.ms == ms and s.plan.ns == ns]
+        assert found, f"paper pick {ms}x{ns} pruned for [{M},{N}]"
+        paper_flops = tt_flops(ms, ns, clip_ranks(ms, ns, (1, 8, 1)),
+                               bias=False)
+        assert res.solutions[0].flops <= paper_flops + M
+
+
+def test_best_plan_entry_point():
+    p = best_plan(1000, 2048, rank=8, length=2)
+    assert p is not None and p.d == 2
+    assert p.M == 1000 and p.N == 2048
+    assert p.params < dense_params(1000, 2048, bias=False)
+
+
+def test_tpu_mode_min_factor():
+    """TPU DSE mode: every factor ≥ 8 so each einsum dim can fill the
+    8-sublane register file (DESIGN.md §2)."""
+    cfg = TPU_DSE
+    res = explore(4096, 4096,
+                  DSEConfig(vl=128, rank_step=128, rank_cap=256,
+                            min_factor=8))
+    assert res.solutions
+    for s in res.solutions:
+        assert min(s.plan.ms) >= 8 and min(s.plan.ns) >= 8
+        for r in s.plan.ranks[1:-1]:
+            assert r % 128 == 0
+    assert cfg.vl == 128
+
+
+def test_ds_reduction_factor_bounds():
+    """Alignment reduces the DS by (d!)²/Πk! per shape — overall reduction
+    for a realistic layer must be in the paper's x2.1–x92 band (Tables
+    1–2 report the *aggregate* over shapes; we check the aggregate)."""
+    c = count_stages(1024, 1024, DSEConfig())
+    red = c["all_initial"] / c["aligned"]
+    assert red > 2.0

@@ -1,0 +1,119 @@
+"""Eq. (4)/(11)/(13) analytic models vs. independent derivations + the
+paper's own worked examples (§2 LeNet300, Prop. 4 permutation count)."""
+import itertools
+import math
+
+import pytest
+
+from repro.core.flops import (clip_ranks, dense_flops, dense_params,
+                              einsum_loop_bounds, max_tt_rank_at_cut,
+                              num_permutations_aligned, prod, tt_flops,
+                              tt_flops_per_einsum, tt_flops_step, tt_params)
+
+# The paper's §2 worked example: LeNet300 FC [N, M] = [784, 300].
+LENET_MS = (5, 5, 3, 2, 2)            # M = 300
+LENET_NS = (2, 2, 2, 7, 14)           # N = 784
+LENET_RANKS = (1, 10, 10, 10, 10, 1)
+
+
+def test_paper_example_core_shapes():
+    """§2: G^0=[1,2,5,10], G^1=[10,2,5,10], G^2=[10,2,3,10],
+    G^3=[10,7,2,10], G^4=[10,14,2,1]  (shape [r_{t-1}, n_t, m_t, r_t])."""
+    from repro.core.tt import TTPlan
+    plan = TTPlan(LENET_MS, LENET_NS, LENET_RANKS)
+    assert plan.core_shapes == [
+        (1, 2, 5, 10), (10, 2, 5, 10), (10, 2, 3, 10),
+        (10, 7, 2, 10), (10, 14, 2, 1)]
+
+
+def test_eq4_params_matches_core_sizes():
+    """Eq. (4) equals the literal sum of core tensor sizes + bias."""
+    core_sizes = sum(
+        LENET_RANKS[t] * LENET_NS[t] * LENET_MS[t] * LENET_RANKS[t + 1]
+        for t in range(5))
+    assert tt_params(LENET_MS, LENET_NS, LENET_RANKS) == core_sizes + 300
+    assert tt_params(LENET_MS, LENET_NS, LENET_RANKS, bias=False) == core_sizes
+
+
+def test_eq11_equals_chain_execution_flops():
+    """Eq. (11) closed form == FLOPs summed over the *executed* chain
+    (Listing 2 loop bounds: 2·mt·bt·nt·rt·rt_1 per einsum).  This is an
+    independent re-derivation of Proposition 2."""
+    cases = [
+        (LENET_MS, LENET_NS, LENET_RANKS),
+        ((100, 10), (32, 64), (1, 8, 1)),          # paper §6.4 ResNet pick
+        ((256, 2), (2, 256), (1, 16, 1)),
+        ((8, 8, 8), (4, 8, 16), (1, 8, 8, 1)),
+        ((12,), (18,), (1, 1)),                     # d=1 degenerate
+    ]
+    for ms, ns, ranks in cases:
+        closed = tt_flops(ms, ns, ranks, bias=False)
+        executed = sum(b["flops"]
+                       for b in einsum_loop_bounds(ms, ns, ranks, batch=1))
+        assert closed == executed, (ms, ns, ranks)
+
+
+def test_eq13_per_step_terms():
+    """FLOPs^(t) = 2·r_t·r_{t-1}·(m_t…m_d)·(n_1…n_t)  — term by term."""
+    ms, ns, ranks = LENET_MS, LENET_NS, LENET_RANKS
+    for t in range(1, 6):
+        expect = (2 * ranks[t] * ranks[t - 1]
+                  * prod(ms[t - 1:]) * prod(ns[:t]))
+        assert tt_flops_step(ms, ns, ranks, t) == expect
+    assert sum(tt_flops_per_einsum(ms, ns, ranks)) \
+        == tt_flops(ms, ns, ranks, bias=False)
+
+
+def test_chain_loop_bounds_telescope():
+    """The running b_t dimension must telescope: each state has size
+    m_t·b_t·r_{t-1} and the final state is exactly M (batch=1)."""
+    bounds = einsum_loop_bounds(LENET_MS, LENET_NS, LENET_RANKS, batch=1)
+    assert bounds[0]["bt"] == 784 // (14 * 1)       # b5 = N/(n5·r5)
+    last = bounds[-1]
+    assert last["mt"] * last["bt"] * last["rt_1"] == 300
+
+
+def test_first_last_einsum_degenerate_ranks():
+    """First einsum has rt=1 eliminating the r-loop; last has rt_1=1 (§2)."""
+    bounds = einsum_loop_bounds(LENET_MS, LENET_NS, LENET_RANKS)
+    assert bounds[0]["rt"] == 1                      # executes core d first
+    assert bounds[-1]["rt_1"] == 1
+
+
+def test_prop4_permutation_count_paper_example():
+    """Prop. 4 example: d=5, ms=[5,5,3,2,2], ns=[2,2,2,7,14] → (5!)²/(2!2!3!)
+    = 600 permutations collapse onto the aligned representative."""
+    assert num_permutations_aligned(LENET_MS, LENET_NS) == 600
+
+
+def test_prop4_all_distinct():
+    assert num_permutations_aligned((8, 4, 2), (3, 5, 7)) \
+        == math.factorial(3) ** 2
+
+
+def test_max_rank_at_cut_and_clip():
+    """Footnote 5: r_t bounded by min of unfolding sizes either side."""
+    ms, ns = (4, 3), (2, 4)
+    assert max_tt_rank_at_cut(ms, ns, 1) == min(4 * 2, 3 * 4)
+    assert clip_ranks(ms, ns, [1, 999, 1]) == (1, 8, 1)
+    assert clip_ranks(ms, ns, [1, 5, 1]) == (1, 5, 1)
+
+
+def test_dense_baselines():
+    assert dense_params(300, 784) == 300 * 784 + 300
+    assert dense_flops(300, 784) == 2 * 300 * 784 + 300
+
+
+def test_tt_beats_dense_on_paper_example():
+    """The §2 example is a real compression: fewer params AND FLOPs."""
+    assert tt_params(LENET_MS, LENET_NS, LENET_RANKS) \
+        < dense_params(300, 784)
+    assert tt_flops(LENET_MS, LENET_NS, LENET_RANKS) < dense_flops(300, 784)
+
+
+@pytest.mark.parametrize("batch", [1, 4, 32])
+def test_flops_scale_linearly_in_batch(batch):
+    bounds1 = einsum_loop_bounds(LENET_MS, LENET_NS, LENET_RANKS, batch=1)
+    boundsB = einsum_loop_bounds(LENET_MS, LENET_NS, LENET_RANKS, batch=batch)
+    for b1, bB in zip(bounds1, boundsB):
+        assert bB["flops"] == batch * b1["flops"]

@@ -1,0 +1,141 @@
+"""Pallas kernel sweeps vs. the pure-jnp oracles (interpret mode on CPU).
+
+Per the brief: every kernel is swept over shapes and dtypes and asserted
+allclose against ref.py.  Shapes include the paper's three einsum classes
+(first: rt_1=1; middle: both ranks > 1; final: rt=1) and non-divisible
+extents that exercise the padding path (the paper's 'padding ukernel').
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.packing import BlockPlan, pack_core, select_blocks
+from repro.core.tt import make_plan, tt_init
+from repro.kernels.ops import tt_forward
+from repro.kernels.ref import tt_chain_ref, tt_einsum_step_ref, tt_fused2_ref
+from repro.kernels.tt_contract import tt_fused2_pallas, tt_step_pallas
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _rand(key, shape, dtype):
+    return jax.random.normal(key, shape, jnp.float32).astype(dtype)
+
+
+# (r0, n, m, r1, b) — first einsum r0=1 … wait: execution-order first has
+# rt=1 meaning the LAST core (t=d) has r_d=1 → kernel sees r1=1; the final
+# einsum (t=1) has r0=1.  Cover all three classes + padding extents.
+STEP_SHAPES = [
+    (8, 4, 16, 1, 32),      # paper "first einsum":  rt(=r1 here)=1
+    (8, 7, 24, 8, 16),      # middle einsum, odd n
+    (1, 4, 16, 8, 48),      # final einsum: rt_1(=r0)=1
+    (4, 3, 10, 4, 9),       # nothing divides the default blocks
+    (8, 16, 128, 8, 64),    # MXU-aligned m
+]
+
+
+@pytest.mark.parametrize("r0,n,m,r1,b", STEP_SHAPES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_step_kernel_vs_ref(r0, n, m, r1, b, dtype):
+    k1, k2 = jax.random.split(KEY)
+    G = _rand(k1, (r0, n, m, r1), dtype)
+    X = _rand(k2, (b, n, r1), dtype)
+    plan = select_blocks(m, b, n, r1, r0, itemsize=G.dtype.itemsize)
+    got = tt_step_pallas(G, X, plan, interpret=True)       # fp32 out
+    want = jnp.einsum("rnmk,bnk->mbr", G.astype(jnp.float32),
+                      X.astype(jnp.float32))
+    tol = 1e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=tol, atol=tol)
+
+
+def test_step_kernel_small_blocks_accumulate():
+    """Force a multi-tile grid (incl. n-accumulation) and check it still
+    matches — this exercises the @pl.when init + revisiting output tiles."""
+    r0, n, m, r1, b = 4, 32, 64, 8, 40
+    k1, k2 = jax.random.split(KEY)
+    G = _rand(k1, (r0, n, m, r1), jnp.float32)
+    X = _rand(k2, (b, n, r1), jnp.float32)
+    plan = BlockPlan(bm=16, bb=16, bn=8, traffic_bytes=0, vmem_bytes=0)
+    got = tt_step_pallas(G, X, plan, interpret=True)
+    want = tt_einsum_step_ref(G, X)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+FUSED2_DIMS = [
+    # (n1, n2, m1, m2, r1, B)
+    (4, 8, 10, 5, 8, 16),
+    (2, 16, 32, 8, 4, 33),     # B not divisible by block
+    (8, 8, 16, 16, 16, 8),
+    (16, 64, 100, 10, 8, 12),  # paper §6.4 ResNet-like
+]
+
+
+@pytest.mark.parametrize("n1,n2,m1,m2,r1,B", FUSED2_DIMS)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_fused2_kernel_vs_refs(n1, n2, m1, m2, r1, B, dtype):
+    plan = make_plan((m1, m2), (n1, n2), r1)
+    if plan.ranks != (1, r1, 1):
+        pytest.skip("rank clipped — covered elsewhere")
+    cores = [c.astype(dtype) for c in tt_init(KEY, plan)]
+    x = _rand(jax.random.PRNGKey(7), (B, n1 * n2), dtype)
+    got = tt_fused2_pallas(x, pack_core(cores[1]), pack_core(cores[0]),
+                           dims=(n1, n2, m1, m2, r1), block_b=16,
+                           interpret=True)
+    ref_fused = tt_fused2_ref(cores, x)
+    ref_chain = tt_chain_ref(cores, x)
+    tol = 1e-4 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(ref_fused, np.float32),
+                               rtol=tol, atol=tol)
+    np.testing.assert_allclose(np.asarray(ref_fused, np.float32),
+                               np.asarray(ref_chain, np.float32),
+                               rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("backend", ["xla", "pallas_step", "pallas_fused2"])
+def test_tt_forward_backends_agree_d2(backend):
+    plan = make_plan((16, 8), (4, 16), 8)
+    cores = tt_init(KEY, plan)
+    x = _rand(jax.random.PRNGKey(3), (6, plan.N), jnp.float32)
+    base = tt_forward(cores, x, backend="xla")
+    got = tt_forward(cores, x, backend=backend, interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(base),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_tt_forward_chain_d3_pallas_step():
+    plan = make_plan((8, 4, 2), (2, 4, 8), 4)
+    cores = tt_init(KEY, plan)
+    x = _rand(jax.random.PRNGKey(4), (5, plan.N), jnp.float32)
+    base = tt_forward(cores, x, backend="xla")
+    got = tt_forward(cores, x, backend="pallas_step", interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(base),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_tt_forward_auto_and_bias_and_lead_dims():
+    plan = make_plan((16, 8), (4, 16), 8)
+    cores = tt_init(KEY, plan)
+    bias = jnp.linspace(-1, 1, plan.M)
+    x = _rand(jax.random.PRNGKey(5), (2, 3, plan.N), jnp.float32)
+    y = tt_forward(cores, x, bias=bias, backend="auto", interpret=True)
+    assert y.shape == (2, 3, plan.M)
+    base = tt_forward(cores, x, bias=bias, backend="xla")
+    np.testing.assert_allclose(np.asarray(y), np.asarray(base),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_pack_core_layout():
+    """pack_core: [r0,n,m,r1] → [(n·r1), (m·r0)] such that the step
+    contraction is literally `state2 @ P` — check against the einsum."""
+    G = _rand(KEY, (3, 4, 5, 2), jnp.float32)           # r0,n,m,r1
+    X = _rand(jax.random.PRNGKey(9), (7, 4, 2), jnp.float32)   # b,n,r1
+    P = pack_core(G)
+    assert P.shape == (4 * 2, 5 * 3)
+    want = jnp.einsum("rnmk,bnk->mbr", G, X)            # [m,b,r0]
+    got = (X.reshape(7, 8) @ P).reshape(7, 5, 3)        # [b,m,r0]
+    np.testing.assert_allclose(np.asarray(got.transpose(1, 0, 2)),
+                               np.asarray(want), rtol=1e-5, atol=1e-5)

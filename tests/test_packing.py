@@ -1,0 +1,53 @@
+"""Block-shape selection + VMEM models (paper §4.3.4/§4.3.5 → TPU)."""
+from repro.core import hw
+from repro.core.packing import (BlockPlan, chain_fits_vmem,
+                                fused2_batch_tile, select_blocks)
+
+
+def test_select_blocks_respects_vmem_budget():
+    plan = select_blocks(mt=4096, bt=8192, nt=64, rt=16, rt_1=16)
+    assert plan.vmem_bytes <= hw.VMEM_BUDGET_BYTES
+    assert plan.bm >= 8 and plan.bb >= 8 and plan.bn >= 8
+
+
+def test_select_blocks_traffic_model_consistency():
+    """The chosen plan minimizes the modeled traffic among a few manual
+    alternatives (sanity on the objective, paper step 3)."""
+    mt, bt, nt, rt, rt_1 = 1024, 2048, 32, 8, 8
+    best = select_blocks(mt, bt, nt, rt, rt_1)
+
+    def traffic(bm, bb):
+        it = 4
+        g = mt * nt * rt * rt_1 * it
+        x = bt * nt * rt * it
+        o = mt * bt * rt_1 * it
+        return g * (-(-bt // bb)) + x * (-(-mt // bm)) + o
+
+    assert best.traffic_bytes <= traffic(8, 8)
+    assert best.traffic_bytes <= traffic(128, 128)
+
+
+def test_select_blocks_tiny_problem():
+    plan = select_blocks(mt=4, bt=4, nt=4, rt=1, rt_1=1)
+    assert isinstance(plan, BlockPlan)
+    assert plan.bm <= 8
+
+
+def test_bigger_budget_never_increases_traffic():
+    """Paper Eq. 26→28 intuition: more fast memory → no more HBM traffic."""
+    small = select_blocks(2048, 4096, 64, 8, 8, vmem_budget=1 << 20)
+    large = select_blocks(2048, 4096, 64, 8, 8, vmem_budget=64 << 20)
+    assert large.traffic_bytes <= small.traffic_bytes
+
+
+def test_chain_fits_vmem():
+    assert chain_fits_vmem([1024, 1024])
+    assert not chain_fits_vmem([hw.VMEM_BUDGET_BYTES, hw.VMEM_BUDGET_BYTES])
+
+
+def test_fused2_batch_tile_monotone():
+    t_small = fused2_batch_tile(N=4096, M=4096, mid=8192, weights=1 << 20)
+    t_big = fused2_batch_tile(N=256, M=256, mid=512, weights=1 << 10)
+    assert 8 <= t_small <= t_big <= 1024
+    need = 2 * 4 * (t_small * (4096 + 8192 + 4096)) + 4 * (1 << 20)
+    assert need <= hw.VMEM_BUDGET_BYTES or t_small == 8

@@ -1,0 +1,58 @@
+"""int8 TT cores: size, error bounds, end-to-end drift."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.quant import (dequantize_cores, quantize_cores,
+                              quantized_bytes, tt_apply_int8)
+from repro.core.tt import make_plan, tt_apply, tt_init
+
+
+def _setup(ms, ns, r, seed=0):
+    plan = make_plan(ms, ns, r)
+    cores = tt_init(jax.random.PRNGKey(seed), plan)
+    x = jax.random.normal(jax.random.PRNGKey(seed + 1), (8, plan.N))
+    return plan, cores, x
+
+
+def test_quantize_roundtrip_error():
+    plan, cores, _ = _setup((16, 8), (8, 16), 8)
+    qs, ss = quantize_cores(cores)
+    deq = dequantize_cores(qs, ss, jnp.float32)
+    for G, D, s in zip(cores, deq, ss):
+        assert np.abs(np.asarray(D - G)).max() <= float(s) * 0.5 + 1e-7
+
+
+def test_memory_is_quarter_of_fp32():
+    plan, cores, _ = _setup((16, 8), (8, 16), 8)
+    qs, ss = quantize_cores(cores)
+    fp32 = sum(4 * G.size for G in cores)
+    assert quantized_bytes(qs, ss) < fp32 / 3.5
+
+
+def test_end_to_end_output_drift_small():
+    """int8 chain output within ~1% relative of the fp32 chain, across
+    chain lengths (error grows ~linearly in d)."""
+    for ms, ns, r in [((16, 8), (8, 16), 8), ((8, 4, 4), (4, 4, 8), 4),
+                      ((8, 4, 2, 2), (2, 2, 4, 8), 4)]:
+        plan, cores, x = _setup(ms, ns, r, seed=plan_seed(ms))
+        y = tt_apply(cores, x)
+        qs, ss = quantize_cores(cores)
+        yq = tt_apply_int8(qs, ss, x)
+        rel = float(jnp.linalg.norm(yq - y) / (jnp.linalg.norm(y) + 1e-9))
+        assert rel < 0.015 * len(ms), (ms, rel)
+
+
+def plan_seed(ms):
+    return sum(ms)
+
+
+def test_int8_cores_dtype_and_bias():
+    plan, cores, x = _setup((16, 8), (8, 16), 8)
+    qs, ss = quantize_cores(cores)
+    assert all(q.dtype == jnp.int8 for q in qs)
+    bias = jnp.ones((plan.M,))
+    y = tt_apply_int8(qs, ss, x, bias)
+    y0 = tt_apply_int8(qs, ss, x)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y0) + 1.0,
+                               rtol=1e-5, atol=1e-5)

@@ -1,0 +1,132 @@
+"""Training integration: loss goes down, microbatching is exact, the data
+pipeline is deterministic/resumable."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import build, get_config
+from repro.data.pipeline import DataIterator, DataState, make_batch
+from repro.training.optimizer import OptConfig, adamw_init, adamw_update
+from repro.training.train_loop import TrainConfig, make_train_step
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    cfg = get_config("deepseek_7b", "smoke")
+    model = build(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def test_loss_decreases_over_steps(tiny):
+    """~30 steps on a repeating synthetic batch must reduce the loss —
+    end-to-end gradient correctness through every layer type."""
+    cfg, model, params = tiny
+    tcfg = TrainConfig(opt=OptConfig(lr=3e-3, warmup_steps=5,
+                                     total_steps=50, weight_decay=0.0),
+                       remat=False, compute_dtype=jnp.float32)
+    state = {"params": params, "opt": adamw_init(params)}
+    step_fn = jax.jit(make_train_step(model, tcfg))
+    batch = make_batch(cfg, B=4, S=32, step=0)
+    losses = []
+    for _ in range(30):
+        state, metrics = step_fn(state, batch)
+        losses.append(float(metrics["loss"]))
+    assert losses[-1] < losses[0] * 0.9, losses[::6]
+    assert all(np.isfinite(losses))
+
+
+def test_microbatch_accumulation_matches_full_batch(tiny):
+    """micro_batches=4 must equal the full-batch loss/grad direction
+    (same effective batch, scan-accumulated)."""
+    cfg, model, params = tiny
+    batch = make_batch(cfg, B=8, S=16, step=3)
+    full = TrainConfig(opt=OptConfig(lr=1e-3), remat=False,
+                       compute_dtype=jnp.float32, micro_batches=1)
+    micro = TrainConfig(opt=OptConfig(lr=1e-3), remat=False,
+                        compute_dtype=jnp.float32, micro_batches=4)
+    state = {"params": params, "opt": adamw_init(params)}
+    s_full, m_full = jax.jit(make_train_step(model, full))(state, batch)
+    s_micro, m_micro = jax.jit(make_train_step(model, micro))(state, batch)
+    # losses: full is the batch mean; micro is the mean of per-micro means —
+    # equal when every micro batch has the same token count (it does here)
+    np.testing.assert_allclose(float(m_full["loss"]),
+                               float(m_micro["loss"]), rtol=1e-4)
+    # parameters after one update agree
+    for a, b in zip(jax.tree.leaves(s_full["params"]),
+                    jax.tree.leaves(s_micro["params"])):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=5e-3, atol=5e-5)
+
+
+def test_remat_matches_no_remat(tiny):
+    """Activation rematerialization must not change the math."""
+    cfg, model, params = tiny
+    batch = make_batch(cfg, B=2, S=16, step=0)
+    l0 = model.loss(params, batch, remat=False)
+    l1 = model.loss(params, batch, remat=True)
+    np.testing.assert_allclose(float(l0), float(l1), rtol=1e-5)
+    g0 = jax.grad(lambda p: model.loss(p, batch, remat=False))(params)
+    g1 = jax.grad(lambda p: model.loss(p, batch, remat=True))(params)
+    for a, b in zip(jax.tree.leaves(g0), jax.tree.leaves(g1)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-4, atol=1e-5)
+
+
+def test_adamw_step_and_schedule():
+    params = {"w": jnp.ones((4, 4))}
+    grads = {"w": jnp.full((4, 4), 0.5)}
+    opt = adamw_init(params)
+    cfg = OptConfig(lr=1e-2, warmup_steps=0, grad_clip=1e9,
+                    weight_decay=0.0)
+    p1, o1, met = adamw_update(grads, opt, params, cfg)
+    assert int(o1["step"]) == 1
+    assert float(met["grad_norm"]) == pytest.approx(0.5 * 4, rel=1e-5)
+    # uniform grads → uniform update; direction is -lr·sign(g)
+    upd = np.asarray(p1["w"] - params["w"])
+    assert np.all(upd < 0)
+    assert np.allclose(upd, upd.flat[0])
+
+
+def test_grad_clipping_caps_update():
+    params = {"w": jnp.ones((2,))}
+    opt = adamw_init(params)
+    cfg = OptConfig(lr=1e-2, warmup_steps=0, grad_clip=1.0,
+                    weight_decay=0.0)
+    huge = {"w": jnp.full((2,), 1e6)}
+    p1, _, met = adamw_update(huge, opt, params, cfg)
+    assert float(met["grad_norm"]) > 1e5
+    assert np.all(np.isfinite(np.asarray(p1["w"])))
+    assert np.max(np.abs(np.asarray(p1["w"] - params["w"]))) < 0.1
+
+
+def test_data_pipeline_deterministic_and_resumable():
+    cfg = get_config("deepseek_7b", "smoke")
+    it1 = DataIterator(cfg, B=4, S=16)
+    batches = [next(it1) for _ in range(5)]
+    # restart from a saved state → identical continuation
+    it2 = DataIterator(cfg, B=4, S=16)
+    for _ in range(3):
+        next(it2)
+    saved = DataState.from_dict(it2.state.as_dict())
+    it3 = DataIterator(cfg, B=4, S=16, state=saved)
+    np.testing.assert_array_equal(np.asarray(next(it3)["tokens"]),
+                                  np.asarray(batches[3]["tokens"]))
+    np.testing.assert_array_equal(np.asarray(next(it3)["tokens"]),
+                                  np.asarray(batches[4]["tokens"]))
+    # different steps → different data
+    assert not np.array_equal(np.asarray(batches[0]["tokens"]),
+                              np.asarray(batches[1]["tokens"]))
+
+
+def test_make_batch_shapes_all_frontends():
+    for arch in ("internvl2_2b", "seamless_m4t_large_v2", "qwen3_32b"):
+        cfg = get_config(arch, "smoke")
+        b = make_batch(cfg, B=2, S=16, step=0)
+        assert b["tokens"].dtype == jnp.int32
+        assert int(jnp.max(b["tokens"])) < cfg.vocab_size
+        if cfg.frontend == "vit":
+            assert "image_embeds" in b
+        if cfg.frontend == "speech":
+            assert "speech_embeds" in b

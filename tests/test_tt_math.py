@@ -1,0 +1,132 @@
+"""TT core math: decompose / reconstruct / apply round-trips."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.flops import prod
+from repro.core.tt import (TTPlan, make_plan, tt_apply, tt_apply_chain,
+                           tt_decompose, tt_init, tt_reconstruct)
+
+
+def test_make_plan_scalar_rank_clipping():
+    p = make_plan((4, 3), (2, 4), 999)
+    assert p.ranks == (1, 8, 1)          # min(4·2, 3·4) = 8
+    p2 = make_plan((8, 8, 8), (8, 8, 8), 16)
+    assert p2.ranks == (1, 16, 16, 1)
+
+
+def test_decompose_full_rank_exact():
+    """TT-SVD at max feasible rank reconstructs W exactly."""
+    rng = np.random.default_rng(0)
+    plan = make_plan((4, 3), (2, 4), 8)          # full rank at the only cut
+    W = rng.standard_normal((plan.M, plan.N)).astype(np.float32)
+    cores = tt_decompose(W, plan)
+    W2 = np.asarray(tt_reconstruct([jnp.asarray(c) for c in cores]))
+    np.testing.assert_allclose(W2, W, rtol=1e-4, atol=1e-4)
+
+
+def test_decompose_d3_full_rank_exact():
+    rng = np.random.default_rng(1)
+    plan = make_plan((4, 2, 2), (2, 2, 3), 100)  # clipped to feasible max
+    W = rng.standard_normal((plan.M, plan.N)).astype(np.float32)
+    cores = tt_decompose(W, plan)
+    W2 = np.asarray(tt_reconstruct([jnp.asarray(c) for c in cores]))
+    np.testing.assert_allclose(W2, W, rtol=1e-4, atol=1e-4)
+
+
+def test_truncated_rank_reduces_error_monotonically():
+    """Higher TT rank → no worse reconstruction (SVD truncation)."""
+    rng = np.random.default_rng(2)
+    W = rng.standard_normal((12, 8)).astype(np.float32)
+    errs = []
+    for r in (1, 2, 4, 8):
+        plan = make_plan((4, 3), (2, 4), r)
+        cores = tt_decompose(W, plan)
+        W2 = np.asarray(tt_reconstruct([jnp.asarray(c) for c in cores]))
+        errs.append(float(np.linalg.norm(W2 - W)))
+    assert errs == sorted(errs, reverse=True)
+    assert errs[-1] < 1e-3
+
+
+def test_apply_matches_dense_matvec():
+    """tt_apply(cores, x) == x @ W.T for exactly-decomposed W (y = Wx)."""
+    rng = np.random.default_rng(3)
+    plan = make_plan((4, 3), (2, 4), 8)
+    W = rng.standard_normal((plan.M, plan.N)).astype(np.float32)
+    cores = [jnp.asarray(c) for c in tt_decompose(W, plan)]
+    x = jnp.asarray(rng.standard_normal((5, plan.N)).astype(np.float32))
+    y = tt_apply(cores, x)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(x) @ W.T,
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_apply_chain_matches_reconstructed_dense():
+    """For random cores (not from SVD) the chain must equal the dense
+    product with the reconstructed W — validates the Listing-1 execution
+    order and the final [m, b] → [b, m] layout fix."""
+    key = jax.random.PRNGKey(0)
+    plan = make_plan((5, 3, 2), (2, 3, 4), 4)
+    cores = tt_init(key, plan)
+    W = tt_reconstruct(cores)
+    x = jax.random.normal(jax.random.PRNGKey(1), (7, plan.N))
+    y = tt_apply_chain(cores, x)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(x @ W.T),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_apply_bias_and_leading_dims():
+    key = jax.random.PRNGKey(0)
+    plan = make_plan((4, 3), (2, 4), 4)
+    cores = tt_init(key, plan)
+    bias = jnp.arange(plan.M, dtype=jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 3, plan.N))
+    y = tt_apply(cores, x, bias)
+    assert y.shape == (2, 3, plan.M)
+    y0 = tt_apply(cores, x.reshape(-1, plan.N))
+    np.testing.assert_allclose(np.asarray(y.reshape(-1, plan.M)),
+                               np.asarray(y0 + bias), rtol=1e-5, atol=1e-5)
+
+
+def test_init_variance_targets_glorot():
+    """tt_init: reconstructed dense W has elementwise std ≈ sqrt(2/(M+N))."""
+    key = jax.random.PRNGKey(42)
+    plan = make_plan((16, 8), (8, 16), 8)
+    cores = tt_init(key, plan)
+    W = np.asarray(tt_reconstruct(cores))
+    target = np.sqrt(2.0 / (plan.M + plan.N))
+    assert 0.4 * target < W.std() < 2.5 * target
+
+
+def test_plan_properties():
+    plan = make_plan((100, 10), (32, 64), 8)
+    assert plan.M == 1000 and plan.N == 2048 and plan.d == 2
+    assert plan.compression > 50
+    assert "TT[" in plan.describe()
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_apply_dtypes(dtype):
+    key = jax.random.PRNGKey(0)
+    plan = make_plan((4, 3), (2, 4), 4)
+    cores = [c.astype(dtype) for c in tt_init(key, plan)]
+    x = jax.random.normal(jax.random.PRNGKey(1), (3, plan.N)).astype(dtype)
+    y = tt_apply(cores, x)
+    assert y.dtype == dtype
+    assert bool(jnp.all(jnp.isfinite(y.astype(jnp.float32))))
+
+
+def test_batched_chain_matches_paper_chain():
+    """tt_apply_batched (token axis kept leading, SPMD-friendly) must equal
+    the paper-faithful folded chain exactly — same contraction, different
+    loop nesting (EXPERIMENTS §Perf it. 3)."""
+    from repro.core.tt import tt_apply_batched
+    key = jax.random.PRNGKey(0)
+    for ms, ns, r in [((4, 3), (2, 4), 4), ((5, 3, 2), (2, 3, 4), 4),
+                      ((8, 4, 2, 2), (2, 2, 4, 4), 3), ((12,), (18,), 1)]:
+        plan = make_plan(ms, ns, r)
+        cores = tt_init(jax.random.fold_in(key, plan.M), plan)
+        x = jax.random.normal(jax.random.fold_in(key, 1), (6, plan.N))
+        np.testing.assert_allclose(
+            np.asarray(tt_apply_batched(cores, x)),
+            np.asarray(tt_apply_chain(cores, x)), rtol=1e-5, atol=1e-5)
