@@ -11,19 +11,39 @@ matmul in HBM).  On this CPU container the analogues we can *time* are:
             matmul on pre-packed cores, zero runtime transposes
             (the paper's array-packing insight, MXU-mapped)
 
-The Pallas kernel itself is validated in tests (interpret mode is a Python
-interpreter — timing it is meaningless); its TPU performance is modeled in
-the roofline analysis (EXPERIMENTS.md §Perf).  GFLOP/s here are CPU numbers
-— the *ratio* between the two schedules is the reproduced claim.
+GFLOP/s here are CPU numbers — the *ratio* between schedules is the
+reproduced claim.
+
+The second half benchmarks the WHOLE einsum chain (paper Fig. 10 explores
+lengths 2–12; §6.4 deploys d=2) across tt_forward backends:
+
+  xla          — einsum chain lowered by XLA (baseline)
+  pallas_step  — one blocked Pallas kernel per step, intermediates
+                 round-trip through HBM
+  fused        — single pallas_call for the whole chain (fused2 for d=2,
+                 tt_fused_chain_pallas for d≥3), intermediates in VMEM
+
+each with analytical ('off') and measured ('measure') block plans, and
+emits ``results/BENCH_kernels.json`` so the perf trajectory is tracked
+across PRs.  Launch counts are recorded to prove the fused path issues
+exactly ONE pallas_call per forward (zero per-step HBM intermediates).
+Pallas timings on CPU run the interpreter — relative ranking, not absolute
+GFLOP/s, is the signal.
 """
 from __future__ import annotations
 
 import functools
+import json
+import os
+import time
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.flops import prod
+from repro.core.tt import make_plan, tt_init
+from repro.kernels import autotune, tt_contract
+from repro.kernels.ops import tt_forward
 
 from .common import header, row, time_fn
 
@@ -74,11 +94,97 @@ def _bench_class(name, sizes, kind):
                   f"{t_naive/t_packed:.2f}"))
 
 
-def run(quick: bool = False) -> None:
+# ---------------------------------------------------------------------------
+# Whole-chain comparison: xla vs pallas_step vs fused, d = 2/3/4
+# ---------------------------------------------------------------------------
+
+# deployed-style layer shapes (aligned m desc / n asc, rank 8 — the paper's
+# §6.4 operating point), one per chain length the fused kernel covers
+CHAINS = [
+    ("d2", (32, 16), (16, 32), 8),
+    ("d3", (8, 8, 8), (8, 8, 8), 8),
+    ("d4", (8, 4, 4, 4), (4, 4, 4, 8), 8),
+]
+
+_FUSED_FOR_D = {2: "pallas_fused2", 3: "pallas_fused", 4: "pallas_fused"}
+
+
+def _count_launches(cores, x, backend, tune):
+    """pallas_call launches of ONE un-jitted forward (python wrappers run
+    every call, so cached traces still count)."""
+    tt_contract.reset_launch_counts()
+    tt_forward(cores, x, backend=backend, interpret=True, tune=tune)
+    return sum(tt_contract.launch_counts().values())
+
+
+def _bench_chains(quick: bool) -> list[dict]:
+    B = 32 if quick else 128
+    header("Fig 10 / §6.4: whole TT chain, xla vs pallas_step vs fused "
+           f"(B={B})",
+           ["chain", "backend", "tune", "ms", "gflops", "pallas_calls",
+            "vs_step"])
+    out: list[dict] = []
+    for name, ms_, ns_, R in CHAINS:
+        plan = make_plan(ms_, ns_, R)
+        cores = tt_init(jax.random.PRNGKey(0), plan)
+        x = jax.random.normal(jax.random.PRNGKey(1), (B, plan.N),
+                              jnp.float32)
+        flops = B * plan.flops
+        fused = _FUSED_FOR_D[plan.d]
+        t_by: dict[tuple[str, str], float] = {}
+        for backend, tune in [("xla", "off"),
+                              ("pallas_step", "off"),
+                              ("pallas_step", "measure"),
+                              (fused, "off"),
+                              (fused, "measure")]:
+            fn = jax.jit(functools.partial(
+                tt_forward, backend=backend, interpret=True, tune=tune))
+            t = time_fn(fn, cores, x)
+            launches = (0 if backend == "xla" else
+                        _count_launches(cores, x, backend, tune))
+            t_by[(backend, tune)] = t
+            rec = {"chain": name, "d": plan.d, "ms": list(plan.ms),
+                   "ns": list(plan.ns), "rank": R, "batch": B,
+                   "backend": backend, "tune": tune,
+                   "time_s": t, "gflops": flops / t / 1e9,
+                   "pallas_calls": launches}
+            out.append(rec)
+            t_step = t_by.get(("pallas_step", "off"))
+            ratio = f"{t_step / t:.2f}" if t_step else "-"
+            print(row(name, backend, tune, f"{t*1e3:.3f}",
+                      f"{rec['gflops']:.2f}", launches, ratio))
+    return out
+
+
+def run(quick: bool = False,
+        out_path: str = "results/BENCH_kernels.json") -> None:
     n = 3 if quick else 8
     _bench_class("first", FIRST[:n], "first")
     _bench_class("middle", MIDDLE[:n], "middle")
     _bench_class("final", FINAL[:n], "final")
+
+    os.environ.setdefault("REPRO_AUTOTUNE_CACHE",
+                          "results/autotune_cache.json")
+    chains = _bench_chains(quick)
+
+    payload = {
+        "meta": {"jax_backend": jax.default_backend(),
+                 "interpret_mode": jax.default_backend() != "tpu",
+                 "quick": quick,
+                 "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S")},
+        "chains": chains,
+    }
+    os.makedirs(os.path.dirname(out_path) or ".", exist_ok=True)
+    with open(out_path, "w") as f:
+        json.dump(payload, f, indent=1)
+    print(f"\nwrote {out_path} ({len(chains)} chain records)")
+
+    # regression tripwires (interpret mode ⇒ relative, not absolute)
+    for d in (3, 4):
+        fused = [c for c in chains
+                 if c["d"] == d and c["backend"] == "pallas_fused"]
+        assert all(c["pallas_calls"] == 1 for c in fused), \
+            f"fused d={d} chain must be a single pallas_call"
 
 
 if __name__ == "__main__":

@@ -20,7 +20,20 @@ class TTConfig:
     rank: int = 16
     length: int = 2                          # paper §6.4 deploys length-2
     min_factor: int = 8                      # TPU MXU-utilization constraint
-    backend: str = "xla"                     # xla | pallas_step | pallas_fused2 | auto
+    backend: str = "xla"                     # xla | pallas_step | pallas_fused2
+                                             #     | pallas_fused | auto
+    autotune: str = "cached"                 # off | cached | measure — tile
+                                             # selection mode of the measured
+                                             # block-plan autotuner
+
+    @property
+    def backend_spec(self) -> str:
+        """Backend string handed to tt_forward, with the tune mode folded
+        in (``"auto:measure"``) so it threads through the existing
+        backend plumbing unchanged."""
+        if self.autotune == "cached":
+            return self.backend
+        return f"{self.backend}:{self.autotune}"
 
 
 @dataclasses.dataclass(frozen=True)

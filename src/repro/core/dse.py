@@ -214,8 +214,12 @@ def _uniform_rank_grid(ms, ns, cfg: DSEConfig) -> Iterable[int]:
 
 
 def explore(M: int, N: int, cfg: DSEConfig = DSEConfig(),
-            with_counts: bool = True) -> DSEResult:
-    """Run the full paper pipeline for one FC layer ``[N → M]``."""
+            with_counts: bool = True, measure_top: int = 0) -> DSEResult:
+    """Run the full paper pipeline for one FC layer ``[N → M]``.
+
+    ``measure_top > 0`` adds stage 4b: re-rank that many of the leading
+    survivors by *measured* kernel time (``rerank_measured``) instead of
+    trusting the static FLOPs/thread-table ordering."""
     counts = count_stages(M, N, cfg) if with_counts else {}
     dense_f, dense_p = dense_flops(M, N), dense_params(M, N)
 
@@ -244,7 +248,45 @@ def explore(M: int, N: int, cfg: DSEConfig = DSEConfig(),
     counts["vectorized_enumerated"] = n_vec
     counts["initial_layer"] = n_init
     counts["scalability"] = len(survivors)
-    return DSEResult(M, N, counts, survivors)
+    res = DSEResult(M, N, counts, survivors)
+    if measure_top > 0:
+        res = rerank_measured(res, batch=max(cfg.batch, 1),
+                              limit=measure_top)
+    return res
+
+
+def rerank_measured(res: DSEResult, batch: int = 32, limit: int = 8,
+                    backend: str = "auto", interpret: bool | None = None,
+                    dtype=None) -> DSEResult:
+    """Stage 4b: re-rank the top-``limit`` survivors by measured kernel
+    time of the deployed TT forward (the fused/step Pallas path chosen by
+    ``backend``), keeping the static ordering for the tail.
+
+    The paper's stage 4 ranks by FLOPs + the Fig. 9 thread table — a static
+    proxy.  On real hardware the einsum chain's cost is layout- and
+    residency-dependent, so the final pick among near-tied survivors is
+    made by running them (interpret-mode timing on CPU containers)."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.kernels.autotune import _median_time
+    from repro.kernels.ops import tt_forward
+    from .tt import tt_init
+
+    dtype = dtype or jnp.float32
+    timed: list[tuple[float, Solution]] = []
+    for i, sol in enumerate(res.solutions[:limit]):
+        cores = [c.astype(dtype) for c in
+                 tt_init(jax.random.PRNGKey(i), sol.plan)]
+        x = jax.random.normal(jax.random.PRNGKey(limit + i),
+                              (batch, sol.plan.N), jnp.float32).astype(dtype)
+        t = _median_time(lambda: tt_forward(cores, x, backend=backend,
+                                            interpret=interpret))
+        timed.append((t, sol))
+    timed.sort(key=lambda tp: tp[0])
+    reranked = [sol for _, sol in timed] + res.solutions[limit:]
+    counts = dict(res.counts, measured_rerank=len(timed))
+    return DSEResult(res.M, res.N, counts, reranked)
 
 
 def best_plan(M: int, N: int, rank: int = 8, length: int | None = 2,
@@ -253,10 +295,9 @@ def best_plan(M: int, N: int, rank: int = 8, length: int | None = 2,
     """The layer-level entry point used by TTLinear: min-FLOPs surviving
     solution at uniform rank ``rank`` (paper §6.4 deploys length-2,
     min-FLOPs solutions)."""
-    cfg = cfg or DSEConfig(vl=min(rank, 8), rank_step=max(rank, 8),
-                           rank_cap=rank)
     # fast path: only enumerate the requested rank
-    cfg = dataclasses.replace(cfg, vl=rank, rank_step=rank, rank_cap=rank)
+    cfg = dataclasses.replace(cfg or DSEConfig(),
+                              vl=rank, rank_step=rank, rank_cap=rank)
     if min_factor is not None:
         cfg = dataclasses.replace(cfg, min_factor=min_factor)
     res = explore(M, N, cfg, with_counts=False)

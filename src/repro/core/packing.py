@@ -73,11 +73,24 @@ def select_blocks(mt: int, bt: int, nt: int, rt: int, rt_1: int,
     Alignment: last dim padded to the 128-lane register shape, second-minor
     to 8 sublanes (the TPU analogue of the paper's vl-multiple rule).
     """
+    cands = select_blocks_candidates(mt, bt, nt, rt, rt_1, itemsize,
+                                     vmem_budget, k=1)
+    return cands[0]
+
+
+def select_blocks_candidates(mt: int, bt: int, nt: int, rt: int, rt_1: int,
+                             itemsize: int = 4,
+                             vmem_budget: int = hw.VMEM_BUDGET_BYTES,
+                             k: int = 4) -> list[BlockPlan]:
+    """Top-``k`` feasible block plans by the analytical traffic model,
+    best first.  The empirical autotuner (kernels.autotune) times these
+    on-device instead of trusting the model's ranking — the measured
+    counterpart of the paper's §4.3.4 'pick the analytical argmin'."""
     g_total = mt * nt * rt * rt_1 * itemsize
     x_total = bt * nt * rt * itemsize
     o_total = mt * bt * rt_1 * itemsize
 
-    best: BlockPlan | None = None
+    cands: list[BlockPlan] = []
     for bm in _divisors_pow2(mt, 8, 512):
         for bb in _divisors_pow2(bt, 8, 1024):
             for bn in _divisors_pow2(nt, 8, 2048):
@@ -88,24 +101,70 @@ def select_blocks(mt: int, bt: int, nt: int, rt: int, rt_1: int,
                 n_mtiles = -(-mt // bm)
                 n_btiles = -(-bt // bb)
                 traffic = (g_total * n_btiles + x_total * n_mtiles + o_total)
-                cand = BlockPlan(bm, bb, bn, traffic, vmem)
-                if best is None or (cand.traffic_bytes, -cand.vmem_bytes) < \
-                        (best.traffic_bytes, -best.vmem_bytes):
-                    best = cand
-    if best is None:      # degenerate tiny problem: single block
-        best = BlockPlan(min(mt, 8), min(bt, 8), min(nt, 8),
-                         g_total + x_total + o_total, 0)
-    return best
+                cands.append(BlockPlan(bm, bb, bn, traffic, vmem))
+    if not cands:         # degenerate tiny problem: single block
+        return [BlockPlan(min(mt, 8), min(bt, 8), min(nt, 8),
+                          g_total + x_total + o_total, 0)]
+    cands.sort(key=lambda c: (c.traffic_bytes, -c.vmem_bytes))
+    return cands[:k]
 
 
 def chain_fits_vmem(plan_sizes: list[int], itemsize: int = 4,
-                    vmem_budget: int = hw.VMEM_BUDGET_BYTES) -> bool:
+                    vmem_budget: int = hw.VMEM_BUDGET_BYTES,
+                    weight_elems: int = 0) -> bool:
     """Paper Eq. (26) analogue: can the whole einsum chain for one batch
-    tile stay resident in VMEM (weights + largest two consecutive states)?"""
+    tile stay resident in VMEM (weights + largest two consecutive states)?
+
+    ``plan_sizes`` are the element counts of the chain states s_0 … s_d for
+    one batch tile; ``weight_elems`` is the total element count of the
+    packed cores (held once, not double-buffered)."""
     peak = 0
     for a, b in zip(plan_sizes, plan_sizes[1:]):
         peak = max(peak, a + b)
-    return peak * itemsize * 2 <= vmem_budget
+    return peak * itemsize * 2 + weight_elems * itemsize <= vmem_budget
+
+
+def chain_state_sizes(ns, ms, ranks) -> list[int]:
+    """Per-batch-element feature sizes of the chain states s_0 … s_d.
+
+    s_0 = N = Π n_t; after the step on core ``t`` (executed d → 1) the state
+    is [m_t, b_t, r_{t-1}] flattened, so s_{d-t+1} = m_t·b_t·r_{t-1};
+    s_d = M.  These are the intermediates the fused kernel keeps in VMEM.
+    """
+    d = len(ns)
+    f = prod(ns)
+    sizes = [f]
+    for t in range(d - 1, -1, -1):
+        bt = f // (ns[t] * ranks[t + 1])
+        f = ms[t] * bt * ranks[t]
+        sizes.append(f)
+    return sizes
+
+
+def chain_weight_elems(ns, ms, ranks) -> int:
+    """Total element count of the packed cores P_1 … P_d."""
+    return sum(ns[t] * ranks[t + 1] * ms[t] * ranks[t]
+               for t in range(len(ns)))
+
+
+def fused_chain_batch_tile(ns, ms, ranks, itemsize: int = 4,
+                           vmem_budget: int = hw.VMEM_BUDGET_BYTES
+                           ) -> int | None:
+    """Largest power-of-two batch tile for which the *whole* chain is
+    VMEM-resident (packed weights + double-buffered peak state pair), or
+    ``None`` when even the minimum 8-row tile does not fit — the caller
+    must then fall back to the per-step kernel.  This is the fused-chain
+    analogue of the paper's L2-fit test (Eq. 26–28), routed through
+    ``chain_fits_vmem``."""
+    sizes = chain_state_sizes(ns, ms, ranks)
+    weights = chain_weight_elems(ns, ms, ranks)
+    bb = 1024
+    while bb >= 8:
+        if chain_fits_vmem([bb * s for s in sizes], itemsize, vmem_budget,
+                           weight_elems=weights):
+            return bb
+        bb //= 2
+    return None
 
 
 def fused2_batch_tile(N: int, M: int, mid: int, weights: int,

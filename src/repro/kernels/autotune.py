@@ -1,0 +1,236 @@
+"""Empirical block-plan autotuner for the TT Pallas kernels (DESIGN.md §2).
+
+The paper picks block shapes with a purely analytical load/store model
+(§4.3.4–4.3.5).  The model ranks candidates well but its constants are
+guesses; this module closes the loop the way production autotuners do:
+
+  1. enumerate a handful of candidates FROM the analytical model
+     (``core.packing``: top-k ``select_blocks_candidates`` for the per-step
+     kernel, the VMEM-fit tile ± one octave for the fused kernels),
+  2. time each candidate on the device actually executing (interpret-mode
+     timing on CPU containers — relative ranking is what transfers),
+  3. persist the winner in a JSON cache keyed by
+     (kernel kind, shape, ranks, dtype, jax backend)
+     so every later call — including in other processes — is a dict lookup.
+
+Tune modes (threaded through ``kernels.ops.tt_forward``):
+
+  'off'      — analytical plan only, never read or write the cache
+  'cached'   — use a persisted winner if present, else analytical (no
+               timing; the default — safe inside jit traces and prod paths)
+  'measure'  — time candidates on miss and persist the winner
+
+The cache file defaults to ``~/.cache/repro/autotune.json`` and is
+overridden by ``$REPRO_AUTOTUNE_CACHE`` or an explicit ``cache_path=``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+from typing import Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.flops import prod
+from repro.core.packing import (BlockPlan, fused_chain_batch_tile,
+                                select_blocks_candidates)
+from .tt_contract import (tt_fused2_pallas, tt_fused_chain_pallas,
+                          tt_step_pallas)
+
+TUNE_MODES = ("off", "cached", "measure")
+
+# number of candidate timings actually executed (tests assert cache hits
+# run zero of these)
+N_MEASUREMENTS = 0
+
+
+def _default_cache_path() -> str:
+    return os.environ.get(
+        "REPRO_AUTOTUNE_CACHE",
+        os.path.join(os.path.expanduser("~"), ".cache", "repro",
+                     "autotune.json"))
+
+
+@dataclasses.dataclass
+class AutotuneCache:
+    """JSON-file-backed plan cache with an in-memory mirror."""
+    path: str
+    entries: dict
+
+    @classmethod
+    def load(cls, path: str) -> "AutotuneCache":
+        entries = {}
+        if os.path.exists(path):
+            try:
+                with open(path) as f:
+                    entries = json.load(f)
+            except (json.JSONDecodeError, OSError):
+                entries = {}
+        return cls(path, entries)
+
+    def get(self, key: str) -> dict | None:
+        return self.entries.get(key)
+
+    def put(self, key: str, value: dict) -> None:
+        self.entries[key] = value
+        os.makedirs(os.path.dirname(self.path) or ".", exist_ok=True)
+        with open(self.path, "w") as f:
+            json.dump(self.entries, f, indent=1, sort_keys=True)
+
+
+_CACHES: dict[str, AutotuneCache] = {}
+
+
+def get_cache(cache_path: str | None = None) -> AutotuneCache:
+    path = cache_path or _default_cache_path()
+    if path not in _CACHES:
+        _CACHES[path] = AutotuneCache.load(path)
+    return _CACHES[path]
+
+
+def clear_memory_caches() -> None:
+    """Drop in-memory mirrors (tests use this to prove disk round-trips)."""
+    _CACHES.clear()
+
+
+def plan_key(kind: str, ns: Sequence[int], ms: Sequence[int],
+             ranks: Sequence[int], dtype, B: int) -> str:
+    return "|".join([
+        kind,
+        "n" + "x".join(map(str, ns)),
+        "m" + "x".join(map(str, ms)),
+        "r" + "x".join(map(str, ranks)),
+        jnp.dtype(dtype).name,
+        f"B{B}",
+        jax.default_backend(),
+    ])
+
+
+# ---------------------------------------------------------------------------
+# Timing
+# ---------------------------------------------------------------------------
+
+def _median_time(fn: Callable[[], jax.Array], warmup: int = 1,
+                 iters: int = 3) -> float:
+    global N_MEASUREMENTS
+    N_MEASUREMENTS += 1
+    for _ in range(warmup):
+        jax.block_until_ready(fn())
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())
+        ts.append(time.perf_counter() - t0)
+    ts.sort()
+    return ts[len(ts) // 2]
+
+
+def _pow2_neighbors(v: int, B: int, lo: int = 8, hi: int = 1024) -> list[int]:
+    """The analytical pick and two octaves below it, clipped to
+    [lo, min(hi, B-ish)].  Never above ``v``: for the fused kernels ``v``
+    is the LARGEST VMEM-feasible tile, so any larger candidate would win
+    interpret-mode timing (no VMEM there) and persist a plan that busts
+    VMEM on real hardware."""
+    cap = min(hi, v, max(lo, 1 << (max(B - 1, 1)).bit_length()))
+    cands = {max(lo, min(c, cap)) for c in (v // 4, v // 2, v)}
+    return sorted(cands)
+
+
+# ---------------------------------------------------------------------------
+# Fused-kernel batch-tile tuning (d=2 and d>=3)
+# ---------------------------------------------------------------------------
+
+def fused_tile(ns: tuple[int, ...], ms: tuple[int, ...],
+               ranks: tuple[int, ...], dtype, B: int,
+               mode: str = "cached", interpret: bool | None = None,
+               cache_path: str | None = None) -> int | None:
+    """Batch tile for the fused chain (any d ≥ 2).  Returns None when the
+    chain is not VMEM-resident at any tile (caller falls back to per-step).
+    """
+    assert mode in TUNE_MODES, mode
+    itemsize = max(jnp.dtype(dtype).itemsize, 4)
+    analytic = fused_chain_batch_tile(ns, ms, ranks, itemsize=itemsize)
+    if analytic is None:
+        return None
+    if mode == "off":
+        return analytic
+
+    key = plan_key("fused_chain", ns, ms, ranks, dtype, B)
+    cache = get_cache(cache_path)
+    hit = cache.get(key)
+    if hit is not None:
+        return int(hit["block_b"])
+    if mode == "cached":
+        return analytic
+
+    # mode == 'measure': time the analytic pick ± one octave
+    d = len(ns)
+    keys = jax.random.split(jax.random.PRNGKey(0), d + 1)
+    x = jax.random.normal(keys[0], (B, prod(ns)), jnp.float32).astype(dtype)
+    packed = [
+        jax.random.normal(
+            keys[1 + j], (ns[t] * ranks[t + 1], ms[t] * ranks[t]),
+            jnp.float32).astype(dtype)
+        for j, t in enumerate(range(d - 1, -1, -1))
+    ]
+    dims = (tuple(ns), tuple(ms), tuple(ranks))
+    timed: dict[str, float] = {}
+    for bb in _pow2_neighbors(analytic, B):
+        if d == 2:
+            n1, n2 = ns
+            m1, m2 = ms
+            fn = lambda bb=bb: tt_fused2_pallas(
+                x, packed[0], packed[1], (n1, n2, m1, m2, ranks[1]),
+                block_b=bb, interpret=interpret)
+        else:
+            fn = lambda bb=bb: tt_fused_chain_pallas(
+                x, packed, dims, block_b=bb, interpret=interpret)
+        timed[str(bb)] = _median_time(fn)
+    best = int(min(timed, key=timed.get))
+    cache.put(key, {"block_b": best, "time_s": timed[str(best)],
+                    "source": "measured", "analytic_block_b": analytic,
+                    "candidates": timed})
+    return best
+
+
+# ---------------------------------------------------------------------------
+# Per-step BlockPlan tuning
+# ---------------------------------------------------------------------------
+
+def step_plan(mt: int, bt: int, nt: int, rt: int, rt_1: int, dtype,
+              mode: str = "cached", interpret: bool | None = None,
+              cache_path: str | None = None, k: int = 4) -> BlockPlan:
+    """Blocked-step plan: analytical argmin, or the measured winner among
+    the analytical top-k (the paper's §4.3.4 selection, but benchmarked)."""
+    assert mode in TUNE_MODES, mode
+    itemsize = max(jnp.dtype(dtype).itemsize, 4)
+    cands = select_blocks_candidates(mt, bt, nt, rt, rt_1, itemsize, k=k)
+    if mode == "off":
+        return cands[0]
+
+    key = plan_key("step", (nt,), (mt,), (rt_1, rt), dtype, bt)
+    cache = get_cache(cache_path)
+    hit = cache.get(key)
+    if hit is not None:
+        return BlockPlan(int(hit["bm"]), int(hit["bb"]), int(hit["bn"]),
+                         int(hit.get("traffic_bytes", 0)),
+                         int(hit.get("vmem_bytes", 0)))
+    if mode == "cached" or len(cands) == 1:
+        return cands[0]
+
+    k1, k2 = jax.random.split(jax.random.PRNGKey(0))
+    G = jax.random.normal(k1, (rt_1, nt, mt, rt), jnp.float32).astype(dtype)
+    X = jax.random.normal(k2, (bt, nt, rt), jnp.float32).astype(dtype)
+    timed = [(_median_time(lambda p=p: tt_step_pallas(
+        G, X, p, interpret=interpret)), p) for p in cands]
+    t_best, best = min(timed, key=lambda tp: tp[0])
+    cache.put(key, {"bm": best.bm, "bb": best.bb, "bn": best.bn,
+                    "traffic_bytes": best.traffic_bytes,
+                    "vmem_bytes": best.vmem_bytes,
+                    "time_s": t_best, "source": "measured",
+                    "candidates": {f"{p.bm}x{p.bb}x{p.bn}": t
+                                   for t, p in timed}})
+    return best

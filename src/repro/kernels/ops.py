@@ -5,9 +5,19 @@
   'xla'           — paper-faithful einsum chain lowered by XLA
                     (the "IREE-class compiler" baseline of Figs. 12–14)
   'pallas_step'   — chain with one blocked Pallas kernel per einsum step
+                    (every intermediate round-trips through HBM)
   'pallas_fused2' — single fused kernel for d=2 plans (paper §6.4 deploys
-                    length-2 solutions; this is the fast path)
-  'auto'          — fused2 when d==2, else pallas_step
+                    length-2 solutions; this is the d=2 fast path)
+  'pallas_fused'  — single fused kernel for ANY depth d ≥ 2: all packed
+                    matmuls + relayouts in VMEM, zero HBM intermediates
+  'auto'          — fused2 when d==2; fused chain when the whole chain is
+                    VMEM-resident (core.packing.fused_chain_batch_tile /
+                    chain_fits_vmem); pallas_step otherwise
+
+A backend string may carry a tune-mode suffix, e.g. ``"auto:measure"`` —
+the mode (off | cached | measure) is handed to the empirical autotuner
+(kernels.autotune), which replaces analytical tile picks with measured,
+JSON-persisted winners.  Default mode is 'cached' (no timing; dict lookup).
 """
 from __future__ import annotations
 
@@ -16,15 +26,26 @@ from typing import Sequence
 import jax
 import jax.numpy as jnp
 
-from repro.core.packing import pack_core, select_blocks
+from repro.core.packing import fused_chain_batch_tile, pack_core
 from repro.core.tt import tt_apply
-from .tt_contract import tt_fused2_pallas, tt_step_pallas
+from . import autotune
+from .tt_contract import (tt_fused2_pallas, tt_fused_chain_pallas,
+                          tt_step_pallas)
 
-BACKENDS = ("xla", "pallas_step", "pallas_fused2", "auto")
+BACKENDS = ("xla", "pallas_step", "pallas_fused2", "pallas_fused", "auto")
+
+
+def chain_dims(cores: Sequence[jax.Array]
+               ) -> tuple[tuple[int, ...], tuple[int, ...], tuple[int, ...]]:
+    """(ns, ms, ranks) signature of a core list (the TTPlan triple)."""
+    ns = tuple(int(G.shape[1]) for G in cores)
+    ms = tuple(int(G.shape[2]) for G in cores)
+    ranks = tuple(int(G.shape[0]) for G in cores) + (int(cores[-1].shape[3]),)
+    return ns, ms, ranks
 
 
 def _chain_with_step_kernel(cores: Sequence[jax.Array], x: jax.Array,
-                            interpret: bool | None) -> jax.Array:
+                            interpret: bool | None, tune: str) -> jax.Array:
     """Paper chain where each einsum runs in the blocked Pallas kernel.
     Layout between steps follows the paper exactly: reshapes only."""
     B = x.shape[0]
@@ -35,7 +56,8 @@ def _chain_with_step_kernel(cores: Sequence[jax.Array], x: jax.Array,
         r0, nt, mt, r1 = G.shape
         bt = b // (nt * r1)
         st = state.reshape(bt, nt, r1)
-        plan = select_blocks(mt, bt, nt, r1, r0)
+        plan = autotune.step_plan(mt, bt, nt, r1, r0, G.dtype,
+                                  mode=tune, interpret=interpret)
         out = tt_step_pallas(G, st, plan, interpret=interpret)   # [m, b, r0]
         state = out.reshape(-1).astype(x.dtype)
         b = state.shape[0]
@@ -45,15 +67,35 @@ def _chain_with_step_kernel(cores: Sequence[jax.Array], x: jax.Array,
 
 def tt_forward(cores: Sequence[jax.Array], x: jax.Array,
                bias: jax.Array | None = None, backend: str = "auto",
-               interpret: bool | None = None) -> jax.Array:
-    """Apply a TT layer to ``x [..., N]`` → ``[..., M]``."""
+               interpret: bool | None = None,
+               tune: str | None = None) -> jax.Array:
+    """Apply a TT layer to ``x [..., N]`` → ``[..., M]``.
+
+    ``backend`` may embed the tune mode as ``"<backend>:<mode>"``; an
+    explicit ``tune=`` argument wins over the suffix.
+    """
+    if ":" in backend:
+        backend, suffix = backend.split(":", 1)
+        tune = tune if tune is not None else suffix
+    tune = tune or "cached"
     assert backend in BACKENDS, backend
+    assert tune in autotune.TUNE_MODES, tune
     d = len(cores)
-    if backend == "auto":
-        backend = "pallas_fused2" if d == 2 else "pallas_step"
+    ns, ms, ranks = chain_dims(cores)
 
     lead, N = x.shape[:-1], x.shape[-1]
     x2 = x.reshape(-1, N)
+    B = x2.shape[0]
+    itemsize = max(x.dtype.itemsize, 4)
+
+    if backend == "auto":
+        if d == 2:
+            backend = "pallas_fused2"
+        elif d > 2 and fused_chain_batch_tile(ns, ms, ranks,
+                                              itemsize=itemsize) is not None:
+            backend = "pallas_fused"
+        else:
+            backend = "pallas_step"
 
     if backend == "xla":
         y = tt_apply(cores, x2)
@@ -62,11 +104,22 @@ def tt_forward(cores: Sequence[jax.Array], x: jax.Array,
         G1, G2 = cores
         _, n1, m1, r1 = G1.shape
         _, n2, m2, _ = G2.shape
+        block_b = autotune.fused_tile(ns, ms, ranks, x.dtype, B,
+                                      mode=tune, interpret=interpret)
         y = tt_fused2_pallas(
             x2, pack_core(G2), pack_core(G1),
-            dims=(n1, n2, m1, m2, r1), interpret=interpret)
+            dims=(n1, n2, m1, m2, r1), block_b=block_b, interpret=interpret)
+    elif backend == "pallas_fused":
+        assert d >= 2, "fused chain backend requires d >= 2"
+        block_b = autotune.fused_tile(ns, ms, ranks, x.dtype, B,
+                                      mode=tune, interpret=interpret)
+        assert block_b is not None, \
+            "chain does not fit VMEM — use pallas_step (or backend='auto')"
+        packed = [pack_core(G) for G in reversed(cores)]
+        y = tt_fused_chain_pallas(x2, packed, (ns, ms, ranks),
+                                  block_b=block_b, interpret=interpret)
     else:
-        y = _chain_with_step_kernel(cores, x2, interpret)
+        y = _chain_with_step_kernel(cores, x2, interpret, tune)
 
     if bias is not None:
         y = y + bias

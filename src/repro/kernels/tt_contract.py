@@ -1,6 +1,6 @@
 """Pallas TPU kernels for the TT einsum chain.
 
-Two kernels (DESIGN.md §2 maps them onto the paper's §4.3 pipeline):
+Three kernels (DESIGN.md §2 maps them onto the paper's §4.3 pipeline):
 
 ``tt_step_kernel``   — one einsum step ``out[m,b,r0] = Σ_{n,r1} G·X`` with
    explicit (bm, bb, bn) VMEM tiling chosen by the analytical model in
@@ -14,18 +14,44 @@ Two kernels (DESIGN.md §2 maps them onto the paper's §4.3 pipeline):
    the paper's IREE critique: IREE's transpose-to-matmul layers live in HBM;
    ours live in vector registers.
 
+``tt_fused_chain_kernel`` — the d≥2 generalization: ONE ``pallas_call``
+   over a batch-tiled grid runs all d packed-core MXU matmuls with every
+   inter-step relayout in VMEM.  Eligibility is decided by the fused-chain
+   VMEM-fit test (``core.packing.fused_chain_batch_tile``, the paper's
+   Eq. 26–28 analogue); chains that do not fit fall back to the per-step
+   kernel, which round-trips intermediates through HBM.
+
+Every public entry increments a module-level launch counter
+(``LAUNCH_COUNTS``) so benchmarks/tests can assert how many ``pallas_call``
+launches a given forward issues (fused d-chain ⇒ exactly one).
+
 Kernels are written for TPU (BlockSpec/VMEM semantics) and validated on CPU
 in interpret mode.
 """
 from __future__ import annotations
 
+import collections
 import functools
+from typing import Sequence
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.core.packing import BlockPlan
+from repro.core.packing import (BlockPlan, fused2_batch_tile,
+                                fused_chain_batch_tile)
+
+# pallas_call launches per kernel kind, counted at the (non-jitted) wrapper
+# level so cached-trace executions are counted too.
+LAUNCH_COUNTS: collections.Counter = collections.Counter()
+
+
+def reset_launch_counts() -> None:
+    LAUNCH_COUNTS.clear()
+
+
+def launch_counts() -> dict[str, int]:
+    return dict(LAUNCH_COUNTS)
 
 
 def _interpret_default() -> bool:
@@ -49,17 +75,8 @@ def _tt_step_body(g_ref, x_ref, o_ref):
 
 
 @functools.partial(jax.jit, static_argnames=("plan", "interpret"))
-def tt_step_pallas(G: jax.Array, X: jax.Array, plan: BlockPlan,
-                   interpret: bool | None = None) -> jax.Array:
-    """``G [r0, n, m, r1]``, ``X [b, n, r1]`` → ``out [m, b, r0]`` (fp32).
-
-    Inputs are zero-padded to block multiples (padding on n contributes 0 to
-    the accumulation; padding on m/b is sliced off), so block shapes never
-    have to divide the problem — the paper's "padding ukernel" (§4.3.4)
-    replaced by masked tiles.
-    """
-    if interpret is None:
-        interpret = _interpret_default()
+def _tt_step_call(G: jax.Array, X: jax.Array, plan: BlockPlan,
+                  interpret: bool) -> jax.Array:
     r0, n, m, r1 = G.shape
     b = X.shape[0]
     bm, bb, bn = min(plan.bm, m), min(plan.bb, b), min(plan.bn, n)
@@ -91,6 +108,21 @@ def tt_step_pallas(G: jax.Array, X: jax.Array, plan: BlockPlan,
     return out[:m, :b, :]
 
 
+def tt_step_pallas(G: jax.Array, X: jax.Array, plan: BlockPlan,
+                   interpret: bool | None = None) -> jax.Array:
+    """``G [r0, n, m, r1]``, ``X [b, n, r1]`` → ``out [m, b, r0]`` (fp32).
+
+    Inputs are zero-padded to block multiples (padding on n contributes 0 to
+    the accumulation; padding on m/b is sliced off), so block shapes never
+    have to divide the problem — the paper's "padding ukernel" (§4.3.4)
+    replaced by masked tiles.
+    """
+    if interpret is None:
+        interpret = _interpret_default()
+    LAUNCH_COUNTS["step"] += 1
+    return _tt_step_call(G, X, plan, interpret)
+
+
 # ---------------------------------------------------------------------------
 # Kernel 2: fused d=2 chain
 # ---------------------------------------------------------------------------
@@ -114,17 +146,9 @@ def _fused2_body(x_ref, p2_ref, p1_ref, o_ref, *, n1, n2, m1, m2, r1):
 
 @functools.partial(jax.jit,
                    static_argnames=("dims", "block_b", "interpret"))
-def tt_fused2_pallas(x: jax.Array, p2: jax.Array, p1: jax.Array,
-                     dims: tuple[int, int, int, int, int],
-                     block_b: int = 64,
-                     interpret: bool | None = None) -> jax.Array:
-    """Fused d=2 TT layer.  ``x [B, n1·n2]`` → ``y [B, m1·m2]``.
-
-    ``p2 [n2, m2·r1]``, ``p1 [n1·r1, m1]`` are the *packed* cores
-    (core.packing.pack_core) — constant layout fixed at compile time.
-    """
-    if interpret is None:
-        interpret = _interpret_default()
+def _tt_fused2_call(x: jax.Array, p2: jax.Array, p1: jax.Array,
+                    dims: tuple[int, int, int, int, int],
+                    block_b: int, interpret: bool) -> jax.Array:
     n1, n2, m1, m2, r1 = dims
     B = x.shape[0]
     bb = min(block_b, B)
@@ -146,3 +170,122 @@ def tt_fused2_pallas(x: jax.Array, p2: jax.Array, p1: jax.Array,
         interpret=interpret,
     )(xp, p2, p1)
     return out[:B]
+
+
+def tt_fused2_pallas(x: jax.Array, p2: jax.Array, p1: jax.Array,
+                     dims: tuple[int, int, int, int, int],
+                     block_b: int | None = None,
+                     interpret: bool | None = None) -> jax.Array:
+    """Fused d=2 TT layer.  ``x [B, n1·n2]`` → ``y [B, m1·m2]``.
+
+    ``p2 [n2, m2·r1]``, ``p1 [n1·r1, m1]`` are the *packed* cores
+    (core.packing.pack_core) — constant layout fixed at compile time.
+    ``block_b=None`` selects the batch tile from the analytical VMEM model
+    (``fused2_batch_tile``); callers with a measured winner (the autotuner)
+    pass it explicitly.
+    """
+    if interpret is None:
+        interpret = _interpret_default()
+    n1, n2, m1, m2, r1 = dims
+    if block_b is None:
+        block_b = fused2_batch_tile(n1 * n2, m1 * m2, n1 * m2 * r1,
+                                    p1.size + p2.size,
+                                    itemsize=max(x.dtype.itemsize, 4))
+    LAUNCH_COUNTS["fused2"] += 1
+    return _tt_fused2_call(x, p2, p1, dims, block_b, interpret)
+
+
+# ---------------------------------------------------------------------------
+# Kernel 3: fused arbitrary-depth chain
+# ---------------------------------------------------------------------------
+
+def _fused_chain_body(*refs, ns, ms, ranks):
+    """All d packed matmuls for one batch tile, relayouts in VMEM.
+
+    State invariant (matches core.tt.tt_apply_batched): after the step on
+    core t the per-row feature layout is [m_t, …, m_d, n_1, …, n_{t-1},
+    r_{t-1}], so the trailing (n_t·r_t) block of the previous state is
+    exactly the contraction dim of packed core P_t — every step is
+    ``state.reshape(bb·b_t, n_t·r_t) @ P_t`` plus one VMEM transpose.
+    """
+    x_ref, *p_refs = refs[:-1]
+    o_ref = refs[-1]
+    d = len(ns)
+    bb = x_ref.shape[0]
+    f32 = jnp.float32
+    state = x_ref[...].astype(f32)              # [bb, N]
+    f = state.shape[1]
+    for j, t in enumerate(range(d - 1, -1, -1)):
+        nt, mt = ns[t], ms[t]
+        rt, rt_1 = ranks[t + 1], ranks[t]
+        bt = f // (nt * rt)
+        # MXU matmul:  [bb·b_t, n_t·r_t] @ [n_t·r_t, m_t·r_{t-1}]
+        a = jnp.dot(state.reshape(bb * bt, nt * rt),
+                    p_refs[j][...].astype(f32), preferred_element_type=f32)
+        # inter-step relayout [bb, b_t, m_t, r_{t-1}] → [bb, m_t, b_t, r_{t-1}]
+        # — the paper's §4.3.2 transpose, kept in VMEM
+        a = a.reshape(bb, bt, mt, rt_1).transpose(0, 2, 1, 3)
+        f = mt * bt * rt_1
+        state = a.reshape(bb, f)
+    o_ref[...] = state.astype(o_ref.dtype)      # [bb, M] m-major
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("dims", "block_b", "interpret"))
+def _tt_fused_chain_call(x: jax.Array, packed: tuple[jax.Array, ...],
+                         dims, block_b: int, interpret: bool) -> jax.Array:
+    ns, ms, ranks = dims
+    d = len(ns)
+    N = x.shape[1]
+    M = 1
+    for m in ms:
+        M *= m
+    B = x.shape[0]
+    bb = min(block_b, B)
+    padB = (-B) % bb
+    xp = jnp.pad(x, ((0, padB), (0, 0))) if padB else x
+    Bp = xp.shape[0]
+
+    body = functools.partial(_fused_chain_body, ns=ns, ms=ms, ranks=ranks)
+    # packed cores in execution order (core d first); each is one whole-array
+    # block so it is resident in VMEM for every grid step.
+    p_specs = [pl.BlockSpec(p.shape, lambda i: (0, 0)) for p in packed]
+    out = pl.pallas_call(
+        body,
+        grid=(Bp // bb,),
+        in_specs=[pl.BlockSpec((bb, N), lambda i: (i, 0))] + p_specs,
+        out_specs=pl.BlockSpec((bb, M), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((Bp, M), x.dtype),
+        interpret=interpret,
+    )(xp, *packed)
+    return out[:B]
+
+
+def tt_fused_chain_pallas(x: jax.Array, packed: Sequence[jax.Array],
+                          dims: tuple[tuple[int, ...], tuple[int, ...],
+                                      tuple[int, ...]],
+                          block_b: int | None = None,
+                          interpret: bool | None = None) -> jax.Array:
+    """Fused arbitrary-depth TT chain.  ``x [B, N] → y [B, M]``.
+
+    ``packed`` are the pack_core() matrices in *execution* order (core d
+    first): ``packed[j] = P_{d-j}`` of shape ``[n_t·r_t, m_t·r_{t-1}]``.
+    ``dims = (ns, ms, ranks)`` is the TTPlan signature.  One ``pallas_call``
+    over batch tiles runs the whole chain; intermediates never leave VMEM.
+
+    ``block_b=None`` takes the analytical VMEM-fit tile
+    (``fused_chain_batch_tile``); the autotuner passes a measured winner.
+    Callers must ensure the chain fits (``fused_chain_batch_tile`` is not
+    None) — the analytical fallback asserts it.
+    """
+    if interpret is None:
+        interpret = _interpret_default()
+    ns, ms, ranks = dims
+    assert len(packed) == len(ns) >= 2, "fused chain needs d >= 2"
+    if block_b is None:
+        block_b = fused_chain_batch_tile(
+            ns, ms, ranks, itemsize=max(x.dtype.itemsize, 4))
+        assert block_b is not None, \
+            "chain does not fit VMEM — use the per-step kernel"
+    LAUNCH_COUNTS["fused_chain"] += 1
+    return _tt_fused_chain_call(x, tuple(packed), dims, block_b, interpret)

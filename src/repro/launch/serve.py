@@ -27,13 +27,17 @@ def main(argv=None) -> dict:
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--tt", default=None)
     ap.add_argument("--tt-rank", type=int, default=16)
+    ap.add_argument("--tt-backend", default="xla")
+    ap.add_argument("--tt-autotune", default="cached",
+                    choices=["off", "cached", "measure"])
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
     tt = None
     if args.tt:
         tt = TTConfig(enabled=True, families=tuple(args.tt.split(",")),
-                      rank=args.tt_rank,
+                      rank=args.tt_rank, backend=args.tt_backend,
+                      autotune=args.tt_autotune,
                       min_factor=2 if args.variant == "smoke" else 8)
     cfg = get_config(args.arch, args.variant, tt=tt)
     model = build(cfg, param_dtype=jnp.bfloat16

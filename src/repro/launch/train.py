@@ -55,6 +55,9 @@ def main(argv=None) -> dict:
                          "'ffn' or 'ffn,attn'); omit for dense")
     ap.add_argument("--tt-rank", type=int, default=16)
     ap.add_argument("--tt-backend", default="xla")
+    ap.add_argument("--tt-autotune", default="cached",
+                    choices=["off", "cached", "measure"],
+                    help="block-plan autotuner mode for the Pallas backends")
     ap.add_argument("--grad-compression", action="store_true")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--save-every", type=int, default=50)
@@ -66,6 +69,7 @@ def main(argv=None) -> dict:
     if args.tt:
         tt = TTConfig(enabled=True, families=tuple(args.tt.split(",")),
                       rank=args.tt_rank, backend=args.tt_backend,
+                      autotune=args.tt_autotune,
                       min_factor=2 if args.variant == "smoke" else 8)
     cfg = get_config(args.arch, args.variant, tt=tt)
     model = build(cfg)

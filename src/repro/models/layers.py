@@ -70,11 +70,14 @@ def linear_spec(in_dim: int, out_dim: int, tt: TTConfig | None,
     return out
 
 
-def linear_apply(params: dict, x: jax.Array, backend: str = "xla"
-                 ) -> jax.Array:
+def linear_apply(params: dict, x: jax.Array, backend: str = "xla",
+                 tune: str | None = None) -> jax.Array:
+    """``backend`` accepts the plain backend names of kernels.ops.BACKENDS
+    or a ``"<backend>:<tune-mode>"`` spec (TTConfig.backend_spec); ``tune``
+    overrides the autotuner mode explicitly."""
     if "tt" in params:
         cores = [params["tt"][f"c{t}"] for t in range(len(params["tt"]))]
-        y = tt_forward(cores, x, backend=backend)
+        y = tt_forward(cores, x, backend=backend, tune=tune)
     else:
         y = x @ params["w"]
     if "b" in params:

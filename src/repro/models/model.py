@@ -30,6 +30,11 @@ class Model:
     groups: list[Group]                  # decoder (or only) stack
     enc_groups: list[Group] | None = None
     param_dtype: Any = jnp.float32
+    # jitted entry-point cache: serving calls generate() repeatedly; the
+    # jit wrappers must be built once per model (not per call) or every
+    # generate() retraces prefill + decode_step from scratch.
+    _jit_cache: dict = dataclasses.field(default_factory=dict, repr=False,
+                                         compare=False)
 
     # ------------------------------------------------------------------ specs
     def param_specs(self) -> dict:
@@ -99,7 +104,7 @@ class Model:
         if cfg.tie_embeddings:
             logits = x @ params["embed"]["table"].T
         else:
-            logits = linear_apply(params["lm_head"], x, cfg.tt.backend)
+            logits = linear_apply(params["lm_head"], x, cfg.tt.backend_spec)
         return shard_act(logits.astype(jnp.float32),
                          ("act_batch", None, "act_vocab"))
 
@@ -156,6 +161,29 @@ class Model:
             new_cache[f"g{gi}"] = c
         logits = self._logits(params, x)
         return logits, new_cache
+
+    # --------------------------------------------------- jitted entry points
+    def jitted_prefill(self, cache_len: int | None = None):
+        """jit(prefill) with the static ``cache_len`` closed over, cached
+        per (model, cache_len) so repeated generate() calls reuse traces."""
+        key = ("prefill", cache_len)
+        fn = self._jit_cache.get(key)
+        if fn is None:
+            def prefill(params, arrays):
+                b = (dict(arrays, cache_len=cache_len)
+                     if cache_len is not None else arrays)
+                return self.prefill(params, b)
+            fn = jax.jit(prefill)
+            self._jit_cache[key] = fn
+        return fn
+
+    def jitted_decode_step(self):
+        """jit(decode_step) with the cache donated, cached per model."""
+        fn = self._jit_cache.get("decode_step")
+        if fn is None:
+            fn = jax.jit(self.decode_step, donate_argnums=(1,))
+            self._jit_cache["decode_step"] = fn
+        return fn
 
     # --------------------------------------------------------------- caching
     def cache_shapes(self, B: int, T: int, enc_T: int = 0,

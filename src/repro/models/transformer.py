@@ -115,7 +115,7 @@ def block_cache_shape(cfg: ModelConfig, bd: BlockDef, B: int, T: int,
 def block_fwd(p, cfg: ModelConfig, bd: BlockDef, x, positions, *,
               enc_out=None, want_cache: bool, T_cache: int = 0):
     """Returns (x, cache_dict_or_None)."""
-    backend = cfg.tt.backend
+    backend = cfg.tt.backend_spec
     cache = {}
     h = rmsnorm_apply(p["ln1"], x, cfg.norm_eps)
     if bd.mixer == "gqa":
@@ -162,7 +162,7 @@ def block_fwd(p, cfg: ModelConfig, bd: BlockDef, x, positions, *,
 
 
 def _enc_kv(p, cfg, bd, enc_out, cache, want_cache):
-    k, v = cross_kv(p["xattn"], cfg, enc_out, cfg.tt.backend)
+    k, v = cross_kv(p["xattn"], cfg, enc_out, cfg.tt.backend_spec)
     if want_cache:
         cache["xk"], cache["xv"] = k, v
     return k, v
@@ -173,7 +173,7 @@ def _enc_kv(p, cfg, bd, enc_out, cache, want_cache):
 # ---------------------------------------------------------------------------
 
 def block_decode(p, cfg: ModelConfig, bd: BlockDef, x, cache: dict, pos):
-    backend = cfg.tt.backend
+    backend = cfg.tt.backend_spec
     h = rmsnorm_apply(p["ln1"], x, cfg.norm_eps)
     new_cache = dict(cache)
     if bd.mixer == "gqa":

@@ -24,17 +24,15 @@ def generate(model: Model, params, batch: dict, steps: int,
              temperature: float = 0.0, key: jax.Array | None = None
              ) -> GenerateResult:
     # cache_len is a *static* shape (it sizes the KV cache): close over it
-    # rather than letting jit trace it.
+    # rather than letting jit trace it.  The jitted callables live on the
+    # Model (jitted_prefill / jitted_decode_step) so repeated generate()
+    # calls hit the trace cache instead of rebuilding jit wrappers.
     cache_len = batch.get("cache_len")
     arrays = {k: v for k, v in batch.items() if k != "cache_len"}
 
-    def prefill(p, b):
-        bb = dict(b, cache_len=cache_len) if cache_len is not None else b
-        return model.prefill(p, bb)
+    logits, cache = model.jitted_prefill(cache_len)(params, arrays)
 
-    logits, cache = jax.jit(prefill)(params, arrays)
-
-    step_fn = jax.jit(model.decode_step, donate_argnums=(1,))
+    step_fn = model.jitted_decode_step()
 
     def pick(logits, key):
         lg = logits[:, -1, :]

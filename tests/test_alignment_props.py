@@ -8,7 +8,11 @@ paper's sampled benchmark.
 """
 import itertools
 
-from hypothesis import given, settings, strategies as st
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="hypothesis not installed in this environment")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core.dse import aligned_pair
 from repro.core.flops import (clip_ranks, num_permutations_aligned,

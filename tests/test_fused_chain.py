@@ -1,0 +1,208 @@
+"""Fused arbitrary-depth chain kernel + measured block-plan autotuner.
+
+Sweeps ``tt_fused_chain_pallas`` (d ∈ {2, 3, 4}, odd/non-pow2 factor
+shapes, bf16 and fp32, batches that do not divide the tile) against the
+``tt_apply`` XLA reference; asserts the ``auto`` backend dispatches
+VMEM-resident d≥3 chains to a SINGLE pallas_call; and round-trips the
+autotuner's JSON cache (second lookup must not re-time)."""
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.packing import (chain_state_sizes, chain_weight_elems,
+                                fused_chain_batch_tile, pack_core,
+                                select_blocks_candidates)
+from repro.core.tt import make_plan, tt_apply, tt_init
+from repro.kernels import autotune, tt_contract
+from repro.kernels.ops import chain_dims, tt_forward
+from repro.kernels.tt_contract import tt_fused_chain_pallas
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _rand(key, shape, dtype):
+    return jax.random.normal(key, shape, jnp.float32).astype(dtype)
+
+
+def _cores_and_x(ms, ns, rank, B, dtype):
+    plan = make_plan(ms, ns, rank)
+    cores = [c.astype(dtype) for c in tt_init(KEY, plan)]
+    x = _rand(jax.random.PRNGKey(7), (B, plan.N), dtype)
+    return plan, cores, x
+
+
+# (ms, ns, rank, B) — d 2–4, odd / non-pow2 factors, ragged batches
+CHAIN_CASES = [
+    ((16, 8), (4, 16), 8, 33),          # d=2, B % tile != 0
+    ((10, 5), (5, 10), 4, 7),           # d=2 odd factors, tiny batch
+    ((8, 4, 4), (4, 4, 8), 4, 19),      # d=3, ragged batch
+    ((9, 5, 7), (3, 7, 5), 4, 12),      # d=3 all-odd factors
+    ((4, 4, 4, 2), (2, 4, 4, 4), 4, 21),  # d=4, ragged batch
+    ((6, 3, 5, 2), (2, 5, 3, 6), 3, 10),  # d=4 non-pow2 everything
+]
+
+
+@pytest.mark.parametrize("ms,ns,rank,B", CHAIN_CASES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_fused_chain_vs_tt_apply(ms, ns, rank, B, dtype):
+    plan, cores, x = _cores_and_x(ms, ns, rank, B, dtype)
+    packed = [pack_core(G) for G in reversed(cores)]
+    got = tt_fused_chain_pallas(x, packed, (plan.ns, plan.ms, plan.ranks),
+                                block_b=8, interpret=True)
+    want = tt_apply([c.astype(jnp.float32) for c in cores],
+                    x.astype(jnp.float32))
+    assert got.shape == (B, plan.M)
+    tol = 1e-4 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want), rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("backend", ["pallas_step", "pallas_fused", "auto"])
+@pytest.mark.parametrize("ms,ns,rank,B",
+                         [((8, 4, 4), (4, 4, 8), 4, 13),
+                          ((4, 4, 4, 2), (2, 4, 4, 4), 4, 9)])
+def test_tt_forward_deep_backends_agree(backend, ms, ns, rank, B):
+    plan, cores, x = _cores_and_x(ms, ns, rank, B, jnp.float32)
+    base = tt_forward(cores, x, backend="xla")
+    got = tt_forward(cores, x, backend=backend, interpret=True, tune="off")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(base),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_auto_dispatches_d3_to_single_fused_launch():
+    """The acceptance bar: backend='auto' on a VMEM-resident d=3 chain must
+    issue exactly ONE pallas_call (no per-step HBM intermediates)."""
+    plan, cores, x = _cores_and_x((8, 4, 4), (4, 4, 8), 4, 16, jnp.float32)
+    assert fused_chain_batch_tile(plan.ns, plan.ms, plan.ranks) is not None
+    tt_contract.reset_launch_counts()
+    tt_forward(cores, x, backend="auto", interpret=True, tune="off")
+    counts = tt_contract.launch_counts()
+    assert counts == {"fused_chain": 1}, counts
+    # the per-step path on the same chain launches one kernel per core
+    tt_contract.reset_launch_counts()
+    tt_forward(cores, x, backend="pallas_step", interpret=True, tune="off")
+    assert tt_contract.launch_counts() == {"step": 3}
+
+
+def test_auto_falls_back_when_chain_busts_vmem(monkeypatch):
+    """A chain whose states cannot double-buffer even at the minimum tile
+    must route through auto to the per-step kernel."""
+    plan, cores, x = _cores_and_x((8, 4, 4), (4, 4, 8), 4, 16, jnp.float32)
+    sizes = chain_state_sizes(plan.ns, plan.ms, plan.ranks)
+    weights = chain_weight_elems(plan.ns, plan.ms, plan.ranks)
+    budget = (max(a + b for a, b in zip(sizes, sizes[1:])) * 8 * 2
+              + weights * 4) // 2
+    assert fused_chain_batch_tile(plan.ns, plan.ms, plan.ranks,
+                                  vmem_budget=budget) is None
+    # shrink the VMEM budget seen by the auto routing so the fit test
+    # fails for real, then drive the public auto path
+    import repro.kernels.ops as ops
+    monkeypatch.setattr(
+        ops, "fused_chain_batch_tile",
+        lambda ns, ms, ranks, **kw: fused_chain_batch_tile(
+            ns, ms, ranks, vmem_budget=budget, **kw))
+    tt_contract.reset_launch_counts()
+    got = tt_forward(cores, x, backend="auto", interpret=True, tune="off")
+    base = tt_forward(cores, x, backend="xla")
+    assert tt_contract.launch_counts() == {"step": 3}, \
+        "auto must fall back to the per-step kernel when VMEM-fit fails"
+    np.testing.assert_allclose(np.asarray(got), np.asarray(base),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_chain_state_sizes_match_kernel_invariant():
+    plan = make_plan((8, 4, 4), (4, 4, 8), 4)
+    sizes = chain_state_sizes(plan.ns, plan.ms, plan.ranks)
+    assert sizes[0] == plan.N and sizes[-1] == plan.M
+    assert len(sizes) == plan.d + 1
+
+
+# ---------------------------------------------------------------------------
+# Autotuner cache behaviour
+# ---------------------------------------------------------------------------
+
+def test_autotune_cache_miss_then_hit(tmp_path):
+    """measure-mode: first call times candidates and persists; the second
+    call (even after dropping in-memory state) returns the identical plan
+    without running a single new measurement."""
+    cache = str(tmp_path / "tune.json")
+    ns, ms, ranks = (4, 4, 8), (8, 4, 4), (1, 4, 4, 1)
+    n0 = autotune.N_MEASUREMENTS
+    bb1 = autotune.fused_tile(ns, ms, ranks, jnp.float32, 32,
+                              mode="measure", interpret=True,
+                              cache_path=cache)
+    n1 = autotune.N_MEASUREMENTS
+    assert n1 > n0, "miss must measure"
+    autotune.clear_memory_caches()          # force the disk round-trip
+    bb2 = autotune.fused_tile(ns, ms, ranks, jnp.float32, 32,
+                              mode="measure", interpret=True,
+                              cache_path=cache)
+    assert bb2 == bb1
+    assert autotune.N_MEASUREMENTS == n1, "hit must not re-time"
+    entry = json.loads((tmp_path / "tune.json").read_text())
+    (key, val), = entry.items()
+    assert key.startswith("fused_chain|") and val["block_b"] == bb1
+    assert val["source"] == "measured"
+
+
+def test_autotune_cached_mode_reads_but_never_writes(tmp_path):
+    cache = str(tmp_path / "tune.json")
+    ns, ms, ranks = (4, 16), (16, 8), (1, 8, 1)
+    n0 = autotune.N_MEASUREMENTS
+    bb = autotune.fused_tile(ns, ms, ranks, jnp.float32, 16,
+                             mode="cached", interpret=True, cache_path=cache)
+    assert bb is not None
+    assert autotune.N_MEASUREMENTS == n0
+    assert not (tmp_path / "tune.json").exists()
+
+
+def test_autotune_step_plan_roundtrip(tmp_path):
+    cache = str(tmp_path / "tune.json")
+    p1 = autotune.step_plan(64, 48, 32, 8, 8, jnp.float32, mode="measure",
+                            interpret=True, cache_path=cache)
+    n1 = autotune.N_MEASUREMENTS
+    autotune.clear_memory_caches()
+    p2 = autotune.step_plan(64, 48, 32, 8, 8, jnp.float32, mode="measure",
+                            interpret=True, cache_path=cache)
+    assert (p1.bm, p1.bb, p1.bn) == (p2.bm, p2.bb, p2.bn)
+    assert autotune.N_MEASUREMENTS == n1
+    # the winner is one of the analytical top-k candidates
+    cands = select_blocks_candidates(64, 48, 32, 8, 8, k=4)
+    assert (p1.bm, p1.bb, p1.bn) in [(c.bm, c.bb, c.bn) for c in cands]
+
+
+def test_tt_forward_measure_mode_end_to_end(tmp_path, monkeypatch):
+    """backend='auto:measure' must produce the XLA answer AND persist a
+    fused-chain winner for the layer's exact signature."""
+    monkeypatch.setenv("REPRO_AUTOTUNE_CACHE", str(tmp_path / "t.json"))
+    autotune.clear_memory_caches()
+    plan, cores, x = _cores_and_x((8, 4, 4), (4, 4, 8), 4, 16, jnp.float32)
+    base = tt_forward(cores, x, backend="xla")
+    got = tt_forward(cores, x, backend="auto:measure", interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(base),
+                               rtol=1e-4, atol=1e-4)
+    entries = json.loads((tmp_path / "t.json").read_text())
+    key = autotune.plan_key("fused_chain", *chain_dims(cores),
+                            jnp.float32, 16)
+    assert key in entries
+    autotune.clear_memory_caches()
+
+
+# ---------------------------------------------------------------------------
+# Serving engine: jitted callables are cached across generate() calls
+# ---------------------------------------------------------------------------
+
+def test_model_jit_cache_reused():
+    from repro.configs import build, get_config
+    cfg = get_config("deepseek_7b", "smoke")
+    model = build(cfg)
+    f1 = model.jitted_decode_step()
+    f2 = model.jitted_decode_step()
+    assert f1 is f2
+    p1 = model.jitted_prefill(16)
+    p2 = model.jitted_prefill(16)
+    p3 = model.jitted_prefill(32)
+    assert p1 is p2 and p1 is not p3
