@@ -1,15 +1,25 @@
-"""Model-level serving comparison: dense vs TT-compressed decode throughput.
+"""Model-level serving comparison: dense vs TT-compressed decode throughput,
+fixed-batch loop vs continuous-batching scheduler, swept over slot counts.
 
 The paper's Fig 15 compares layer-level execution; this bench closes the
-loop at the model level on this host: same smoke architecture served
-dense vs TT(R=8, ffn+attn), measuring decode tokens/s (post-compile) and
-the weight-memory ratio.  On TPU the decode win tracks the weight-byte
-reduction (EXPERIMENTS §Perf it. 3: −25 % step time at qwen3-32b scale,
-KV-cache bound); on CPU with a tiny model it mostly validates the path.
+loop at the model level on this host.  Two decode loops are measured
+post-compile at each slot count B:
+
+  fixed — the lockstep loop (scalar cache position, jitted decode_step)
+  sched — the slot-pool scheduler at full occupancy (vector positions +
+          active mask through the same jitted step)
+
+The sched/fixed ratio isolates the masking overhead of continuous batching
+(it should be ~1: the masked step does the same matmuls plus cheap
+per-row index compares), while dense-vs-TT at growing B shows where the
+batching win compounds with the weight-memory reduction.  Results land in
+``results/BENCH_serve.json``.
 """
 from __future__ import annotations
 
 import dataclasses
+import json
+import pathlib
 import time
 
 import jax
@@ -18,17 +28,19 @@ import jax.numpy as jnp
 from repro.configs import build, get_config
 from repro.configs.base import TTConfig
 from repro.configs.shapes import concrete_batch
+from repro.serving.scheduler import Request, Scheduler
 
 from .common import header, row
 
+RESULTS = pathlib.Path(__file__).resolve().parent.parent / "results"
 
-def _throughput(cfg, B=4, S=32, steps=16):
-    model = build(cfg)
-    params = model.init(jax.random.PRNGKey(0))
-    n_params = model.num_params()
-    batch = dict(concrete_batch(cfg, B, S), cache_len=S + steps)
-    logits, cache = model.prefill(params, batch)
-    step = jax.jit(model.decode_step, donate_argnums=(1,))
+
+def _fixed_throughput(model, params, B, S, steps):
+    """Steady-state decode tok/s of the lockstep loop (post-compile)."""
+    batch = dict(concrete_batch(model.cfg, B, S), cache_len=S + steps + 2)
+    logits, cache = model.jitted_prefill(S + steps + 2)(
+        params, {"tokens": batch["tokens"]})
+    step = model.jitted_decode_step()
     tok = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)[:, None]
     logits, cache = step(params, cache, tok)          # compile
     jax.block_until_ready(logits)
@@ -37,26 +49,64 @@ def _throughput(cfg, B=4, S=32, steps=16):
         tok = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)[:, None]
         logits, cache = step(params, cache, tok)
     jax.block_until_ready(logits)
-    dt = time.perf_counter() - t0
-    return B * steps / dt, n_params
+    return B * steps / (time.perf_counter() - t0)
+
+
+def _sched_throughput(model, params, B, S, steps):
+    """Steady-state decode tok/s of the slot-pool scheduler at full
+    occupancy: B requests admitted, then ``steps`` masked decode steps with
+    no admissions/retirements in the timed window."""
+    budget = steps + 4                     # stays active through the window
+    sched = Scheduler(model, params, num_slots=B,
+                      cache_len=S + budget + 2)
+    for b in range(B):
+        toks = concrete_batch(model.cfg, 1, S, seed=b)["tokens"]
+        sched.submit(Request(uid=b, inputs={"tokens": toks},
+                             max_new_tokens=budget))
+    sched.step()                           # admissions + first masked step
+    sched.step()                           # warm steady step
+    t0 = time.perf_counter()
+    for _ in range(steps):
+        sched.step()
+    return B * steps / (time.perf_counter() - t0)
 
 
 def run(quick: bool = False) -> None:
-    header("model-level serve: dense vs TT (smoke archs, greedy decode)",
-           ["arch", "dense_tok_s", "dense_params", "tt_tok_s", "tt_params",
-            "param_ratio", "tok_s_ratio"])
-    for arch in (["deepseek_7b"] if quick
-                 else ["deepseek_7b", "qwen3_32b", "gemma3_4b"]):
+    S, steps = 16, (8 if quick else 16)
+    slot_counts = [2] if quick else [1, 2, 4, 8]
+    archs = ["deepseek_7b"] if quick else ["deepseek_7b", "qwen3_32b",
+                                           "gemma3_4b"]
+    header("model-level serve: dense vs TT × fixed vs continuous-batching",
+           ["arch", "mode", "slots", "params", "fixed_tok_s", "sched_tok_s",
+            "sched_over_fixed"])
+    records = []
+    for arch in archs:
         base = get_config(arch, "smoke")
-        dense = dataclasses.replace(
-            base, tt=dataclasses.replace(base.tt, enabled=False))
-        tt = dataclasses.replace(
-            base, tt=TTConfig(enabled=True, families=("ffn", "attn"),
-                              rank=4, min_factor=2))
-        tps_d, np_d = _throughput(dense)
-        tps_t, np_t = _throughput(tt)
-        print(row(arch, f"{tps_d:.1f}", np_d, f"{tps_t:.1f}", np_t,
-                  f"{np_d/np_t:.2f}", f"{tps_t/tps_d:.2f}"))
+        variants = {
+            "dense": dataclasses.replace(
+                base, tt=dataclasses.replace(base.tt, enabled=False)),
+            "tt": dataclasses.replace(
+                base, tt=TTConfig(enabled=True, families=("ffn", "attn"),
+                                  rank=4, min_factor=2)),
+        }
+        for mode, cfg in variants.items():
+            model = build(cfg)
+            params = model.init(jax.random.PRNGKey(0))
+            n_params = model.num_params()
+            for B in slot_counts:
+                tps_f = _fixed_throughput(model, params, B, S, steps)
+                tps_s = _sched_throughput(model, params, B, S, steps)
+                print(row(arch, mode, B, n_params, f"{tps_f:.1f}",
+                          f"{tps_s:.1f}", f"{tps_s/tps_f:.2f}"))
+                records.append({"arch": arch, "mode": mode, "slots": B,
+                                "params": n_params,
+                                "fixed_tok_s": tps_f, "sched_tok_s": tps_s,
+                                "prompt_len": S, "steps": steps})
+    RESULTS.mkdir(exist_ok=True)
+    out = RESULTS / "BENCH_serve.json"
+    out.write_text(json.dumps(
+        {"backend": jax.default_backend(), "records": records}, indent=1))
+    print(f"wrote {out}")
 
 
 if __name__ == "__main__":

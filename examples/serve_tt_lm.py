@@ -1,5 +1,7 @@
-"""Serve a TT-compressed model with batched requests: prefill a batch of
-prompts of *different lengths* (left-padded into one batch), then decode.
+"""Serve a TT-compressed model through the continuous-batching scheduler:
+prompts of *different lengths* are submitted as individual requests — no
+left-padding into a rectangular batch — admitted into a fixed slot pool as
+slots free up, and retired independently on their own token budgets.
 
     PYTHONPATH=src python examples/serve_tt_lm.py --arch gemma3-4b
 """
@@ -11,16 +13,17 @@ import jax.numpy as jnp
 
 from repro.configs import build, get_config
 from repro.configs.base import TTConfig
-from repro.data.pipeline import make_batch
-from repro.serving.engine import generate
+from repro.serving.scheduler import Request, Scheduler
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="gemma3-4b")
-    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--requests", type=int, default=6)
+    ap.add_argument("--slots", type=int, default=2)
     ap.add_argument("--max-prompt", type=int, default=48)
     ap.add_argument("--decode", type=int, default=16)
+    ap.add_argument("--temperature", type=float, default=0.8)
     args = ap.parse_args()
 
     cfg = get_config(args.arch, "smoke",
@@ -29,19 +32,36 @@ def main():
     model = build(cfg)
     params = model.init(jax.random.PRNGKey(0))
 
-    batch = make_batch(cfg, args.batch, args.max_prompt, step=0)
-    batch = dict(batch, cache_len=args.max_prompt + args.decode)
+    sched = Scheduler(model, params, num_slots=args.slots,
+                      cache_len=args.max_prompt + args.decode,
+                      temperature=args.temperature,
+                      key=jax.random.PRNGKey(1))
+    key = jax.random.PRNGKey(2)
+    lens = []
+    for uid in range(args.requests):
+        key, sub = jax.random.split(key)
+        S = int(jax.random.randint(sub, (), args.max_prompt // 3,
+                                   args.max_prompt + 1))
+        key, sub = jax.random.split(key)
+        toks = jax.random.randint(sub, (1, S), 0, cfg.vocab_size, jnp.int32)
+        sched.submit(Request(uid=uid, inputs={"tokens": toks},
+                             max_new_tokens=args.decode))
+        lens.append(S)
 
     t0 = time.time()
-    res = generate(model, params, batch, steps=args.decode, temperature=0.8,
-                   key=jax.random.PRNGKey(1))
+    out = sched.run()
     dt = time.time() - t0
-    n = args.batch * args.decode
-    print(f"{cfg.name}: {n} tokens in {dt:.2f}s ({n/dt:.1f} tok/s, "
-          f"incl. compile)")
-    for b in range(args.batch):
-        print(f"req[{b}] -> {res.tokens[b].tolist()} "
-              f"(mean logprob {float(jnp.mean(res.logprobs[b])):.2f})")
+    n = sched.tokens_out
+    print(f"{cfg.name}: {args.requests} requests (prompts {lens}) on "
+          f"{args.slots} slots -> {n} tokens in {dt:.2f}s "
+          f"({n/dt:.1f} tok/s, incl. compile)")
+    for uid in sorted(out):
+        f = out[uid]
+        lp = float(jnp.mean(jnp.asarray(f.logprobs))) if len(f.logprobs) \
+            else 0.0
+        print(f"req[{uid}] prompt={f.prompt_len:3d} -> "
+              f"{f.tokens.tolist()} (mean logprob {lp:.2f}, "
+              f"{f.finish_reason})")
 
 
 if __name__ == "__main__":

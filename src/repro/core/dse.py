@@ -265,7 +265,14 @@ def rerank_measured(res: DSEResult, batch: int = 32, limit: int = 8,
     The paper's stage 4 ranks by FLOPs + the Fig. 9 thread table — a static
     proxy.  On real hardware the einsum chain's cost is layout- and
     residency-dependent, so the final pick among near-tied survivors is
-    made by running them (interpret-mode timing on CPU containers)."""
+    made by running them (interpret-mode timing on CPU containers).
+
+    Each candidate is jitted and warmed up (one untimed call +
+    ``block_until_ready``) before ``_median_time`` sees it, so the ranking
+    reflects steady-state kernel time, never trace+compile — a solution
+    must not lose stage 4b just because it compiled first/slowest."""
+    import functools
+
     import jax
     import jax.numpy as jnp
 
@@ -280,8 +287,10 @@ def rerank_measured(res: DSEResult, batch: int = 32, limit: int = 8,
                  tt_init(jax.random.PRNGKey(i), sol.plan)]
         x = jax.random.normal(jax.random.PRNGKey(limit + i),
                               (batch, sol.plan.N), jnp.float32).astype(dtype)
-        t = _median_time(lambda: tt_forward(cores, x, backend=backend,
-                                            interpret=interpret))
+        fwd = jax.jit(functools.partial(tt_forward, backend=backend,
+                                        interpret=interpret))
+        jax.block_until_ready(fwd(cores, x))       # trace+compile, untimed
+        t = _median_time(lambda: fwd(cores, x), warmup=0)
         timed.append((t, sol))
     timed.sort(key=lambda tp: tp[0])
     reranked = [sol for _, sol in timed] + res.solutions[limit:]

@@ -54,6 +54,12 @@ def _chain_with_step_kernel(cores: Sequence[jax.Array], x: jax.Array,
     for t in range(len(cores) - 1, -1, -1):
         G = cores[t]
         r0, nt, mt, r1 = G.shape
+        if b % (nt * r1) != 0:
+            raise ValueError(
+                f"TT chain/input mismatch at step {t}: state of {b} "
+                f"elements is not divisible by n_{t}·r_{t} = {nt}·{r1} "
+                f"(core shape {tuple(G.shape)}) — the core list is "
+                f"inconsistent with x.shape[-1] or the inter-core ranks")
         bt = b // (nt * r1)
         st = state.reshape(bt, nt, r1)
         plan = autotune.step_plan(mt, bt, nt, r1, r0, G.dtype,
@@ -82,6 +88,18 @@ def tt_forward(cores: Sequence[jax.Array], x: jax.Array,
     assert tune in autotune.TUNE_MODES, tune
     d = len(cores)
     ns, ms, ranks = chain_dims(cores)
+    Nc = 1
+    for n in ns:
+        Nc *= n
+    if Nc != x.shape[-1]:
+        raise ValueError(
+            f"TT core list with input modes {ns} (prod={Nc}) does not "
+            f"match x.shape[-1]={x.shape[-1]}")
+    for t in range(len(cores) - 1):
+        if cores[t].shape[3] != cores[t + 1].shape[0]:
+            raise ValueError(
+                f"TT rank mismatch between cores {t} and {t + 1}: "
+                f"r={cores[t].shape[3]} vs r={cores[t + 1].shape[0]}")
 
     lead, N = x.shape[:-1], x.shape[-1]
     x2 = x.reshape(-1, N)

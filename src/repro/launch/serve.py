@@ -1,7 +1,20 @@
-"""Serving launcher: prefill a batch of synthetic prompts, decode N tokens.
+"""Serving launcher.
+
+Fixed-batch mode (default): prefill a batch of synthetic prompts, decode N
+tokens, reporting compile time and steady-state throughput *separately*
+(the first generate call pays trace+compile; the second is the number that
+scales).
 
   PYTHONPATH=src python -m repro.launch.serve --arch mixtral-8x7b \
       --variant smoke --batch 4 --prompt-len 64 --steps 32
+
+Continuous-batching simulation mode (--arrival-rate): requests arrive as a
+Poisson process into the slot-pool scheduler; reports steady-state tok/s
+and p50/p95 per-request latency, with compile time excluded via a warm-up
+request.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch deepseek-7b \
+      --arrival-rate 4 --max-requests 16 --slots 4 --prompt-len 16 --steps 8
 """
 from __future__ import annotations
 
@@ -10,11 +23,102 @@ import time
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs import build, get_config
 from repro.configs.base import TTConfig
 from repro.configs.shapes import concrete_batch
-from repro.serving.engine import generate
+from repro.serving.engine import generate_fixed
+from repro.serving.scheduler import Request, Scheduler
+
+
+def _percentile(xs: list[float], q: float) -> float:
+    return float(np.percentile(np.asarray(xs), q)) if xs else float("nan")
+
+
+def simulate(model, params, args) -> dict:
+    """Poisson-arrival continuous-batching simulation (wall-clock driven)."""
+    steps = args.steps
+    cache_len = args.prompt_len + steps
+    sched = Scheduler(model, params, num_slots=args.slots,
+                      cache_len=cache_len, eos_id=args.eos_id,
+                      temperature=args.temperature,
+                      key=jax.random.PRNGKey(args.seed + 1))
+
+    def req(uid, seed):
+        toks = concrete_batch(model.cfg, 1, args.prompt_len,
+                              seed=seed)["tokens"]
+        return Request(uid=uid, inputs={"tokens": toks},
+                       max_new_tokens=steps)
+
+    # warm-up: one throwaway request compiles prefill, splice, the masked
+    # decode step and the pick — all shapes the simulation will reuse
+    t0 = time.perf_counter()
+    sched.submit(req(-1, args.seed + 999))
+    sched.run()
+    compile_s = time.perf_counter() - t0
+    sched.finished.clear()
+    sched.tokens_out = sched.steps_run = 0
+
+    rng = np.random.default_rng(args.seed)
+    arrivals = np.cumsum(rng.exponential(1.0 / args.arrival_rate,
+                                         size=args.max_requests))
+    finished: list = []
+    start = time.perf_counter()
+    i = 0
+    while i < args.max_requests or not sched.idle:
+        now = time.perf_counter() - start
+        while i < args.max_requests and arrivals[i] <= now:
+            sched.submit(req(i, args.seed + i),
+                         submit_time=start + arrivals[i])
+            i += 1
+        if sched.idle:                      # ahead of the arrival process
+            time.sleep(max(0.0, arrivals[i] - (time.perf_counter() - start)))
+            continue
+        finished.extend(sched.step())
+    wall = time.perf_counter() - start
+
+    lats = [f.finish_time - f.submit_time for f in finished]
+    tok_s = sched.tokens_out / wall if wall > 0 else float("nan")
+    p50, p95 = _percentile(lats, 50), _percentile(lats, 95)
+    print(f"arch={model.cfg.name} slots={args.slots} "
+          f"arrival_rate={args.arrival_rate}/s requests={len(finished)} "
+          f"prompt={args.prompt_len} max_new={steps}")
+    print(f"compile (warm-up request): {compile_s:.2f}s — excluded below")
+    print(f"steady-state: {sched.tokens_out} tokens in {wall:.2f}s "
+          f"({tok_s:.1f} tok/s), decode steps={sched.steps_run}")
+    print(f"per-request latency: p50={p50*1e3:.1f}ms p95={p95*1e3:.1f}ms")
+    return {"finished": finished, "tok_per_s": tok_s, "p50_s": p50,
+            "p95_s": p95, "compile_s": compile_s}
+
+
+def fixed(model, params, args) -> dict:
+    batch = concrete_batch(model.cfg, args.batch, args.prompt_len,
+                           seed=args.seed)
+    batch = dict(batch, cache_len=args.prompt_len + args.steps)
+    key = jax.random.PRNGKey(args.seed + 1)
+
+    t0 = time.perf_counter()
+    res = generate_fixed(model, params, batch, steps=args.steps,
+                         temperature=args.temperature, key=key)
+    jax.block_until_ready(res.tokens)
+    cold = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    res = generate_fixed(model, params, batch, steps=args.steps,
+                         temperature=args.temperature, key=key)
+    jax.block_until_ready(res.tokens)
+    warm = time.perf_counter() - t0
+
+    toks = args.batch * args.steps
+    compile_s = max(cold - warm, 0.0)
+    print(f"arch={model.cfg.name} batch={args.batch} "
+          f"prompt={args.prompt_len} decode={args.steps}")
+    print(f"compile: {compile_s:.2f}s (cold {cold:.2f}s − warm {warm:.2f}s)")
+    print(f"steady-state: {toks} tokens in {warm:.2f}s "
+          f"({toks/warm:.1f} tok/s incl. prefill, excl. compile)")
+    print("sample tokens[0]:", res.tokens[0].tolist())
+    return {"tokens": res.tokens, "tok_per_s": toks / warm,
+            "compile_s": compile_s}
 
 
 def main(argv=None) -> dict:
@@ -23,7 +127,8 @@ def main(argv=None) -> dict:
     ap.add_argument("--variant", default="smoke", choices=["smoke", "full"])
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=64)
-    ap.add_argument("--steps", type=int, default=32)
+    ap.add_argument("--steps", type=int, default=32,
+                    help="decode budget (max_new_tokens per request)")
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--tt", default=None)
     ap.add_argument("--tt-rank", type=int, default=16)
@@ -31,7 +136,16 @@ def main(argv=None) -> dict:
     ap.add_argument("--tt-autotune", default="cached",
                     choices=["off", "cached", "measure"])
     ap.add_argument("--seed", type=int, default=0)
+    # continuous-batching simulation
+    ap.add_argument("--arrival-rate", type=float, default=None,
+                    help="Poisson arrival rate (req/s); enables simulation")
+    ap.add_argument("--max-requests", type=int, default=16)
+    ap.add_argument("--slots", type=int, default=None,
+                    help="slot-pool size (default: --batch)")
+    ap.add_argument("--eos-id", type=int, default=None)
     args = ap.parse_args(argv)
+    if args.slots is None:
+        args.slots = args.batch
 
     tt = None
     if args.tt:
@@ -44,21 +158,9 @@ def main(argv=None) -> dict:
                   if args.variant == "full" else jnp.float32)
     params = model.init(jax.random.PRNGKey(args.seed))
 
-    batch = concrete_batch(cfg, args.batch, args.prompt_len, seed=args.seed)
-    batch = dict(batch, cache_len=args.prompt_len + args.steps)
-
-    t0 = time.time()
-    res = generate(model, params, batch, steps=args.steps,
-                   temperature=args.temperature,
-                   key=jax.random.PRNGKey(args.seed + 1))
-    dt = time.time() - t0
-    toks = args.batch * args.steps
-    print(f"arch={cfg.name} batch={args.batch} prompt={args.prompt_len} "
-          f"decode={args.steps}")
-    print(f"generated {toks} tokens in {dt:.2f}s "
-          f"({toks/dt:.1f} tok/s incl. prefill+compile)")
-    print("sample tokens[0]:", res.tokens[0].tolist())
-    return {"tokens": res.tokens, "tok_per_s": toks / dt}
+    if args.arrival_rate is not None:
+        return simulate(model, params, args)
+    return fixed(model, params, args)
 
 
 if __name__ == "__main__":

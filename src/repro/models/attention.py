@@ -123,25 +123,47 @@ def gqa_decode_attn(p, cfg: ModelConfig, x, cache_k, cache_v, pos, *,
     """One-token decode against a full or ring cache.
 
     x [B,1,d]; cache_k/v [B, T, KV, hd] (T = S_max or window W);
-    pos: scalar int32 — current absolute position.
+    pos: int32 — current absolute position, either a scalar shared by the
+    whole batch or a per-row vector [B] (continuous-batching slots, each at
+    its own depth).
     Returns (y [B,1,d], new_k, new_v).
     """
     B = x.shape[0]
     T = cache_k.shape[1]
     theta = cfg.rope_theta if theta is None else theta
-    positions = jnp.full((B, 1), pos, jnp.int32)
+    per_slot = jnp.ndim(pos) == 1
+    positions = (pos.astype(jnp.int32)[:, None] if per_slot
+                 else jnp.full((B, 1), pos, jnp.int32))
     q, k, v, _ = _qkv(p, cfg, x, positions, theta, backend)
-    slot = pos % T if window else pos
-    cache_k = jax.lax.dynamic_update_slice_in_dim(cache_k, k, slot, axis=1)
-    cache_v = jax.lax.dynamic_update_slice_in_dim(cache_v, v, slot, axis=1)
     idx = jnp.arange(T)
-    if window:
-        # ring buffer: slot s holds absolute position pos - ((pos - s) mod T)
-        abs_pos = pos - jnp.mod(pos - idx, T)
-        valid = abs_pos >= 0
+    if per_slot:
+        pv = positions[:, 0]                      # [B]
+        slot = pv % T if window else pv
+        # per-row scatter: row b writes its [1,KV,hd] k/v at its own slot
+        # (rows whose slot is out of range — retired/free slots at pos ≥ T —
+        # simply don't write)
+        wr = (idx[None, :] == slot[:, None])[:, :, None, None]
+        cache_k = jnp.where(wr, k, cache_k)
+        cache_v = jnp.where(wr, v, cache_v)
+        if window:
+            abs_pos = pv[:, None] - jnp.mod(pv[:, None] - idx[None, :], T)
+            valid = abs_pos >= 0                  # [B,T]
+        else:
+            valid = idx[None, :] <= pv[:, None]
+        mask = valid[:, None, None, None, :]      # [B,1,1,1,T]
     else:
-        valid = idx <= pos
-    mask = valid[None, None, None, None, :]       # [1,1,1,1,T]
+        slot = pos % T if window else pos
+        cache_k = jax.lax.dynamic_update_slice_in_dim(cache_k, k, slot,
+                                                      axis=1)
+        cache_v = jax.lax.dynamic_update_slice_in_dim(cache_v, v, slot,
+                                                      axis=1)
+        if window:
+            # ring: slot s holds absolute position pos - ((pos - s) mod T)
+            abs_pos = pos - jnp.mod(pos - idx, T)
+            valid = abs_pos >= 0
+        else:
+            valid = idx <= pos
+        mask = valid[None, None, None, None, :]   # [1,1,1,1,T]
     ctx = _gqa_scores_ctx(q, cache_k, cache_v, mask,
                           1.0 / np.sqrt(cfg.head_dim))
     y = linear_apply(p["o"], ctx, backend)
@@ -247,16 +269,26 @@ def mla_decode_attn(p, cfg: ModelConfig, x, cache_ckv, cache_krope, pos,
     per-step cost is O(T·kv_lora) not O(T·H·head_dim) — the production path.
 
     cache_ckv [B, S_max, kv_lora], cache_krope [B, S_max, rope_hd].
+    ``pos`` is a scalar or a per-row vector [B] (see gqa_decode_attn).
     """
     m = cfg.mla
     B = x.shape[0]
     H = cfg.num_heads
-    positions = jnp.full((B, 1), pos, jnp.int32)
+    per_slot = jnp.ndim(pos) == 1
+    positions = (pos.astype(jnp.int32)[:, None] if per_slot
+                 else jnp.full((B, 1), pos, jnp.int32))
     q_nope, q_rope = _mla_q(p, cfg, x, positions, backend)
     ckv, krope = _mla_compress(p, cfg, x, positions, backend)
-    cache_ckv = jax.lax.dynamic_update_slice_in_dim(cache_ckv, ckv, pos, 1)
-    cache_krope = jax.lax.dynamic_update_slice_in_dim(
-        cache_krope, krope, pos, 1)
+    if per_slot:
+        idx = jnp.arange(cache_ckv.shape[1])
+        wr = (idx[None, :] == positions)[:, :, None]    # [B,T,1]
+        cache_ckv = jnp.where(wr, ckv, cache_ckv)
+        cache_krope = jnp.where(wr, krope, cache_krope)
+    else:
+        cache_ckv = jax.lax.dynamic_update_slice_in_dim(
+            cache_ckv, ckv, pos, 1)
+        cache_krope = jax.lax.dynamic_update_slice_in_dim(
+            cache_krope, krope, pos, 1)
     # absorb kv_up into the query / output sides
     w_up = p["kv_up"]["w"].reshape(m.kv_lora, H,
                                    m.nope_head_dim + m.v_head_dim)
@@ -269,7 +301,11 @@ def mla_decode_attn(p, cfg: ModelConfig, x, cache_ckv, cache_krope, pos,
          + jnp.einsum("bshr,btr->bhst", q_rope.astype(jnp.float32),
                       cache_krope.astype(jnp.float32))) * scale
     T = cache_ckv.shape[1]
-    valid = (jnp.arange(T) <= pos)[None, None, None, :]
+    if per_slot:
+        valid = (jnp.arange(T)[None, :]
+                 <= positions)[:, None, None, :]        # [B,1,1,T]
+    else:
+        valid = (jnp.arange(T) <= pos)[None, None, None, :]
     probs = jax.nn.softmax(jnp.where(valid, s, NEG_INF), axis=-1)
     ctx_l = jnp.einsum("bhst,btl->bshl", probs,
                        cache_ckv.astype(jnp.float32))     # latent context

@@ -8,6 +8,7 @@ precomputed embeddings supplied by input_specs (per the assignment brief).
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 from typing import Any
 
@@ -32,9 +33,27 @@ class Model:
     param_dtype: Any = jnp.float32
     # jitted entry-point cache: serving calls generate() repeatedly; the
     # jit wrappers must be built once per model (not per call) or every
-    # generate() retraces prefill + decode_step from scratch.
-    _jit_cache: dict = dataclasses.field(default_factory=dict, repr=False,
-                                         compare=False)
+    # generate() retraces prefill + decode_step from scratch.  The cache is
+    # a bounded LRU: a long-running server sees arbitrarily many distinct
+    # prompt/cache lengths, and every distinct ``cache_len`` keys a separate
+    # jitted prefill (trace + compiled executable) — unbounded, that's a
+    # slow leak.  Decode/splice entries (a handful, shape-stable) share the
+    # same LRU but in practice never fall out of a size-8 window.
+    jit_cache_size: int = 8
+    _jit_cache: collections.OrderedDict = dataclasses.field(
+        default_factory=collections.OrderedDict, repr=False, compare=False)
+
+    def _jit_get(self, key, build):
+        """LRU lookup: hit refreshes recency, miss builds and may evict."""
+        fn = self._jit_cache.get(key)
+        if fn is not None:
+            self._jit_cache.move_to_end(key)
+            return fn
+        fn = build()
+        self._jit_cache[key] = fn
+        while len(self._jit_cache) > max(self.jit_cache_size, 1):
+            self._jit_cache.popitem(last=False)
+        return fn
 
     # ------------------------------------------------------------------ specs
     def param_specs(self) -> dict:
@@ -147,14 +166,24 @@ class Model:
         logits = self._logits(params, x[:, -1:, :])
         return logits, cache
 
-    def decode_step(self, params, cache: dict, token: jax.Array
+    def decode_step(self, params, cache: dict, token: jax.Array,
+                    active: jax.Array | None = None
                     ) -> tuple[jax.Array, dict]:
-        """token [B,1] int32 → (logits [B,1,V], updated cache)."""
+        """token [B,1] int32 → (logits [B,1,V], updated cache).
+
+        ``cache["pos"]`` may be a scalar (classic fixed batch: every row at
+        the same depth) or a per-row vector [B] (continuous-batching slot
+        pool).  With vector positions an optional ``active`` mask [B] bool
+        freezes retired/free slots: their position does not advance, so
+        they re-write the same (dead) cache row every step until an
+        admission splices fresh state over them.
+        """
         cfg = self.cfg
         pos = cache["pos"]
         x = embed_apply(params["embed"], token, cfg.d_model,
                         scale=cfg.tie_embeddings)
-        new_cache = {"pos": pos + 1}
+        inc = 1 if active is None else active.astype(pos.dtype)
+        new_cache = {"pos": pos + inc}
         for gi, g in enumerate(self.groups):
             x, c = group_decode(params[f"g{gi}"], cfg, g, x,
                                 cache[f"g{gi}"], pos)
@@ -162,28 +191,62 @@ class Model:
         logits = self._logits(params, x)
         return logits, new_cache
 
+    def splice_cache(self, cache: dict, row_cache: dict, slot) -> dict:
+        """Write a single-request cache (batch dim 1, same ``cache_len``)
+        into row ``slot`` of a slot-pool cache — the admission path of the
+        continuous-batching scheduler.  Every leaf except ``pos`` is
+        [layers, B, ...] (batch at axis 1); ``pos`` is [B] in the pool and
+        a scalar (the prompt length) in the prefill output."""
+        out = {"pos": cache["pos"].at[slot].set(
+            row_cache["pos"].astype(cache["pos"].dtype))}
+        for k, v in cache.items():
+            if k == "pos":
+                continue
+            out[k] = jax.tree.map(
+                lambda pool, new: pool.at[:, slot].set(
+                    new[:, 0].astype(pool.dtype)), v, row_cache[k])
+        return out
+
     # --------------------------------------------------- jitted entry points
-    def jitted_prefill(self, cache_len: int | None = None):
+    def jitted_prefill(self, cache_len: int | None = None,
+                       shape_key=None):
         """jit(prefill) with the static ``cache_len`` closed over, cached
-        per (model, cache_len) so repeated generate() calls reuse traces."""
-        key = ("prefill", cache_len)
-        fn = self._jit_cache.get(key)
-        if fn is None:
+        per (model, cache_len) so repeated generate() calls reuse traces.
+
+        ``shape_key`` splits the LRU entry further (the scheduler passes
+        the prompt length): a jax.jit wrapper retains one executable per
+        input shape it has seen, so a single long-lived wrapper fed many
+        prompt lengths would accumulate them beyond the LRU's reach —
+        per-length entries make eviction actually free the executables."""
+        def build():
             def prefill(params, arrays):
                 b = (dict(arrays, cache_len=cache_len)
                      if cache_len is not None else arrays)
                 return self.prefill(params, b)
-            fn = jax.jit(prefill)
-            self._jit_cache[key] = fn
-        return fn
+            return jax.jit(prefill)
+        return self._jit_get(("prefill", cache_len, shape_key), build)
 
     def jitted_decode_step(self):
         """jit(decode_step) with the cache donated, cached per model."""
-        fn = self._jit_cache.get("decode_step")
-        if fn is None:
-            fn = jax.jit(self.decode_step, donate_argnums=(1,))
-            self._jit_cache["decode_step"] = fn
-        return fn
+        return self._jit_get(
+            "decode_step",
+            lambda: jax.jit(lambda params, cache, token:
+                            self.decode_step(params, cache, token),
+                            donate_argnums=(1,)))
+
+    def jitted_decode_step_masked(self):
+        """jit(decode_step) with a per-slot ``active`` mask (vector-pos
+        slot-pool cache), cache donated."""
+        return self._jit_get(
+            "decode_step_masked",
+            lambda: jax.jit(self.decode_step, donate_argnums=(1,)))
+
+    def jitted_splice(self):
+        """jit(splice_cache) with the pool cache donated: admission writes
+        one row in place instead of copying the whole pool."""
+        return self._jit_get(
+            "splice",
+            lambda: jax.jit(self.splice_cache, donate_argnums=(0,)))
 
     # --------------------------------------------------------------- caching
     def cache_shapes(self, B: int, T: int, enc_T: int = 0,

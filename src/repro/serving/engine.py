@@ -1,8 +1,15 @@
-"""Batched serving engine: prefill + greedy/temperature decode loop.
+"""Batched serving engine.
 
-The per-token step is one jitted function (model.decode_step) whose cache is
-donated; the Python loop only feeds tokens — standard continuous-batching
-inner loop, minus the scheduler (requests arrive pre-batched here).
+``generate`` is a thin wrapper over the continuous-batching scheduler
+(serving/scheduler.py): the pre-batched input is split into one request per
+row, all submitted at t=0 into a pool with one slot per row, and the
+results are reassembled into the classic ``[B, steps]`` tensors.  Sampling
+uses per-request PRNG streams (``fold_in(key, row)``); greedy decoding
+consumes no randomness, so temperature=0 output is key-independent.
+
+``generate_fixed`` keeps the pre-scheduler fixed-batch loop (scalar
+position, no admission/retirement) as the benchmark baseline the
+continuous-batching path is compared against (benchmarks/bench_serve_tt).
 """
 from __future__ import annotations
 
@@ -10,8 +17,10 @@ import dataclasses
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.models.model import Model
+from .scheduler import Scheduler, make_requests
 
 
 @dataclasses.dataclass
@@ -23,37 +32,65 @@ class GenerateResult:
 def generate(model: Model, params, batch: dict, steps: int,
              temperature: float = 0.0, key: jax.Array | None = None
              ) -> GenerateResult:
-    # cache_len is a *static* shape (it sizes the KV cache): close over it
-    # rather than letting jit trace it.  The jitted callables live on the
-    # Model (jitted_prefill / jitted_decode_step) so repeated generate()
-    # calls hit the trace cache instead of rebuilding jit wrappers.
+    """Decode ``steps`` tokens for every row of ``batch`` (no EOS: fixed
+    budget, so the result is rectangular)."""
+    B = batch["tokens"].shape[0]
+    if steps <= 0:
+        return GenerateResult(jnp.zeros((B, 0), jnp.int32),
+                              jnp.zeros((B, 0), jnp.float32))
+    cache_len = batch.get("cache_len")
+    if cache_len is None:
+        S = batch["tokens"].shape[1]
+        if model.cfg.frontend == "vit":       # image prefix occupies cache
+            S += batch["image_embeds"].shape[1]
+        cache_len = S + steps
+    sched = Scheduler(model, params, num_slots=B, cache_len=cache_len,
+                      temperature=temperature, key=key)
+    for req in make_requests(batch, max_new_tokens=steps, key=key):
+        sched.submit(req)
+    finished = sched.run()
+    toks = np.stack([finished[b].tokens for b in range(B)])
+    lps = np.stack([finished[b].logprobs for b in range(B)])
+    return GenerateResult(jnp.asarray(toks), jnp.asarray(lps))
+
+
+def generate_fixed(model: Model, params, batch: dict, steps: int,
+                   temperature: float = 0.0, key: jax.Array | None = None
+                   ) -> GenerateResult:
+    """Fixed-batch greedy/temperature loop (every row in lockstep, scalar
+    cache position, no request admission) — the baseline decode loop."""
     cache_len = batch.get("cache_len")
     arrays = {k: v for k, v in batch.items() if k != "cache_len"}
+    B = arrays["tokens"].shape[0]
+    if steps <= 0:
+        return GenerateResult(jnp.zeros((B, 0), jnp.int32),
+                              jnp.zeros((B, 0), jnp.float32))
 
     logits, cache = model.jitted_prefill(cache_len)(params, arrays)
-
     step_fn = model.jitted_decode_step()
 
+    key = key if key is not None else jax.random.PRNGKey(0)
+
     def pick(logits, key):
+        """Only splits the stream when actually sampling: the same ``key``
+        must mean the same stream regardless of temperature."""
         lg = logits[:, -1, :]
         if temperature == 0.0:
             tok = jnp.argmax(lg, -1)
         else:
-            tok = jax.random.categorical(key, lg / temperature, -1)
+            key, sub = jax.random.split(key)
+            tok = jax.random.categorical(sub, lg / temperature, -1)
         lp = jax.nn.log_softmax(lg, -1)
         return tok.astype(jnp.int32), jnp.take_along_axis(
-            lp, tok[:, None], -1)[:, 0]
+            lp, tok[:, None], -1)[:, 0], key
 
-    key = key if key is not None else jax.random.PRNGKey(0)
     toks, lps = [], []
-    key, sub = jax.random.split(key)
-    tok, lp = pick(logits, sub)
+    tok, lp, key = pick(logits, key)
     toks.append(tok)
     lps.append(lp)
     for _ in range(steps - 1):
         logits, cache = step_fn(params, cache, tok[:, None])
-        key, sub = jax.random.split(key)
-        tok, lp = pick(logits, sub)
+        tok, lp, key = pick(logits, key)
         toks.append(tok)
         lps.append(lp)
     return GenerateResult(jnp.stack(toks, 1), jnp.stack(lps, 1))

@@ -1,0 +1,296 @@
+"""Continuous-batching scheduler over the jitted prefill/decode entry points.
+
+One preallocated slot-pool KV cache (``Model.init_cache`` layout, batch dim
+= ``num_slots``) is stepped by a single jitted masked decode whose shape
+never changes, so arbitrary request arrival patterns are served without
+retracing.  Per-slot state threads through ``cache["pos"]`` as a vector
+[num_slots]; an ``active`` mask freezes retired/free slots (DESIGN.md §7).
+
+Lifecycle of a request:
+
+  submit() ─→ queue ─→ admission (free slot): single-request jitted prefill
+  at the pool's ``cache_len`` + ``Model.splice_cache`` of the row into the
+  pool (one in-place donated write) ─→ masked decode steps until EOS or the
+  token budget ─→ retirement frees the slot for the next queued request.
+
+The first generated token comes from the prefill logits (same contract as
+``engine.generate``); sampling uses a per-request PRNG stream
+(``fold_in(base_key, uid)``), split once per *sampled* token — greedy
+decoding never consumes randomness, so temperature=0 results are
+key-independent.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.model import Model
+
+
+@dataclasses.dataclass
+class Request:
+    """One generation request.  ``inputs`` are the per-request model inputs
+    with leading batch dim 1 (at minimum ``tokens [1, S]``; multimodal
+    frontends add their embedding arrays)."""
+    uid: int
+    inputs: dict
+    max_new_tokens: int
+    key: jax.Array | None = None          # per-request sampling stream
+
+
+@dataclasses.dataclass
+class FinishedRequest:
+    uid: int
+    tokens: np.ndarray                    # [n_generated] int32
+    logprobs: np.ndarray                  # [n_generated] float32
+    finish_reason: str                    # "eos" | "length"
+    prompt_len: int
+    submit_time: float                    # perf_counter at submit()
+    finish_time: float                    # perf_counter at retirement
+
+
+@dataclasses.dataclass
+class _Queued:
+    req: Request
+    prompt_len: int
+    submit_time: float
+
+
+@dataclasses.dataclass
+class _Slot:
+    uid: int
+    max_new: int
+    key: jax.Array | None
+    prompt_len: int
+    submit_time: float
+    tokens: list[int] = dataclasses.field(default_factory=list)
+    logprobs: list[float] = dataclasses.field(default_factory=list)
+    last_tok: int = 0
+
+
+class Scheduler:
+    """Continuous-batching loop: ``submit()`` any time, ``step()`` advances
+    every active slot by one token and admits queued requests into freed
+    slots, ``run()`` drains."""
+
+    def __init__(self, model: Model, params, num_slots: int, cache_len: int,
+                 *, eos_id: int | None = None, temperature: float = 0.0,
+                 key: jax.Array | None = None):
+        if num_slots < 1:
+            raise ValueError("num_slots must be >= 1")
+        self.model = model
+        self.params = params
+        self.num_slots = num_slots
+        self.cache_len = cache_len
+        self.eos_id = eos_id
+        self.temperature = float(temperature)
+        self.base_key = key
+        self.queue: deque[_Queued] = deque()
+        self.slots: list[_Slot | None] = [None] * num_slots
+        self.cache = None                 # pool; built from first prefill
+        self.finished: list[FinishedRequest] = []
+        self.steps_run = 0                # decode steps executed
+        self.tokens_out = 0               # total generated tokens
+        # shared across Scheduler instances of the same model: a server
+        # creating one Scheduler per batch must not recompile the pick
+        self._pick = model._jit_get(("pick", self.temperature),
+                                    self._build_pick)
+
+    # ------------------------------------------------------------- interface
+    def submit(self, req: Request, submit_time: float | None = None) -> None:
+        S = int(req.inputs["tokens"].shape[1])
+        if self.model.cfg.frontend == "vit":
+            S += int(req.inputs["image_embeds"].shape[1])
+        if req.max_new_tokens < 0:
+            raise ValueError("max_new_tokens must be >= 0")
+        if S + req.max_new_tokens > self.cache_len:
+            raise ValueError(
+                f"request uid={req.uid}: prompt ({S}) + max_new_tokens "
+                f"({req.max_new_tokens}) exceeds cache_len={self.cache_len}")
+        self.queue.append(_Queued(
+            req, S, time.perf_counter() if submit_time is None
+            else submit_time))
+
+    @property
+    def num_active(self) -> int:
+        return sum(s is not None for s in self.slots)
+
+    @property
+    def idle(self) -> bool:
+        return not self.queue and self.num_active == 0
+
+    def step(self) -> list[FinishedRequest]:
+        """Admit into free slots, then run one masked decode step.  Returns
+        the requests retired during this call."""
+        done: list[FinishedRequest] = []
+        for i in range(self.num_slots):
+            if self.slots[i] is None and self.queue:
+                self._admit(self.queue.popleft(), i, done)
+        if self.num_active:
+            self._decode_once(done)
+        self.finished.extend(done)
+        return done
+
+    def run(self) -> dict[int, FinishedRequest]:
+        """Drain queue + active slots; returns {uid: FinishedRequest}."""
+        out = {}
+        while not self.idle:
+            for f in self.step():
+                out[f.uid] = f
+        return out
+
+    # -------------------------------------------------------------- internal
+    def _build_pick(self):
+        temp = self.temperature
+
+        def pick(logits, keys):
+            """logits [B,V]; keys [B,2] uint32 (ignored when greedy) →
+            (tokens [B] int32, logprobs [B] float32)."""
+            lp = jax.nn.log_softmax(logits, -1)
+            if temp == 0.0:
+                tok = jnp.argmax(logits, -1)
+            else:
+                tok = jax.vmap(
+                    lambda k, lg: jax.random.categorical(k, lg / temp)
+                )(keys, logits)
+            tok = tok.astype(jnp.int32)
+            return tok, jnp.take_along_axis(lp, tok[:, None], -1)[:, 0]
+
+        return jax.jit(pick)
+
+    def _req_key(self, req: Request) -> jax.Array | None:
+        if self.temperature == 0.0:
+            return None                   # greedy: no randomness consumed
+        if req.key is not None:
+            return req.key
+        base = (self.base_key if self.base_key is not None
+                else jax.random.PRNGKey(0))
+        return jax.random.fold_in(base, req.uid)
+
+    def _next_key(self, slot: _Slot) -> jax.Array:
+        slot.key, sub = jax.random.split(slot.key)
+        return sub
+
+    def _pick_one(self, logits_row, slot: _Slot) -> tuple[int, float]:
+        """Pick for a single request (admission path): same jitted pick as
+        the batched decode, batch dim 1."""
+        if self.temperature == 0.0:
+            keys = jnp.zeros((1, 2), jnp.uint32)
+        else:
+            keys = self._next_key(slot)[None]
+        tok, lp = self._pick(logits_row[None], keys)
+        return int(tok[0]), float(lp[0])
+
+    def _ensure_pool(self, row_cache: dict) -> None:
+        """Allocate the slot pool from the first prefilled row's cache tree
+        (guarantees dtype/shape agreement with what prefill produces; every
+        leaf except ``pos`` is [layers, 1, ...] → [layers, num_slots, ...])."""
+        if self.cache is not None:
+            return
+        B = self.num_slots
+
+        def expand(leaf):
+            return jnp.zeros(leaf.shape[:1] + (B,) + leaf.shape[2:],
+                             leaf.dtype)
+
+        self.cache = {"pos": jnp.zeros((B,), jnp.int32)}
+        for k, v in row_cache.items():
+            if k != "pos":
+                self.cache[k] = jax.tree.map(expand, v)
+
+    def _admit(self, q: _Queued, slot_idx: int,
+               done: list[FinishedRequest]) -> None:
+        req = q.req
+        if req.max_new_tokens == 0:       # nothing to generate: no prefill
+            done.append(FinishedRequest(
+                uid=req.uid, tokens=np.zeros((0,), np.int32),
+                logprobs=np.zeros((0,), np.float32), finish_reason="length",
+                prompt_len=q.prompt_len, submit_time=q.submit_time,
+                finish_time=time.perf_counter()))
+            return
+        logits, row_cache = self.model.jitted_prefill(
+            self.cache_len, shape_key=q.prompt_len)(self.params, req.inputs)
+        slot = _Slot(uid=req.uid, max_new=req.max_new_tokens,
+                     key=self._req_key(req),
+                     prompt_len=q.prompt_len, submit_time=q.submit_time)
+        tok, lp = self._pick_one(logits[0, -1], slot)
+        slot.tokens.append(tok)
+        slot.logprobs.append(lp)
+        slot.last_tok = tok
+        self.tokens_out += 1
+        if self._finished_reason(slot):
+            done.append(self._retire(slot))
+            return                        # never occupied a decode slot
+        self._ensure_pool(row_cache)
+        self.cache = self.model.jitted_splice()(
+            self.cache, row_cache, jnp.asarray(slot_idx, jnp.int32))
+        self.slots[slot_idx] = slot
+
+    def _decode_once(self, done: list[FinishedRequest]) -> None:
+        B = self.num_slots
+        toks = np.zeros((B, 1), np.int32)
+        active = np.zeros((B,), bool)
+        for i, s in enumerate(self.slots):
+            if s is not None:
+                toks[i, 0] = s.last_tok
+                active[i] = True
+        logits, self.cache = self.model.jitted_decode_step_masked()(
+            self.params, self.cache, jnp.asarray(toks), jnp.asarray(active))
+        if self.temperature == 0.0:
+            keys = jnp.zeros((B, 2), jnp.uint32)
+        else:
+            keys = jnp.stack([
+                self._next_key(s) if s is not None
+                else jnp.zeros((2,), jnp.uint32)
+                for s in self.slots])
+        tok, lp = self._pick(logits[:, 0, :], keys)
+        tok, lp = np.asarray(tok), np.asarray(lp)
+        self.steps_run += 1
+        for i, s in enumerate(self.slots):
+            if s is None:
+                continue
+            s.tokens.append(int(tok[i]))
+            s.logprobs.append(float(lp[i]))
+            s.last_tok = int(tok[i])
+            self.tokens_out += 1
+            if self._finished_reason(s):
+                done.append(self._retire(s))
+                self.slots[i] = None
+
+    def _finished_reason(self, slot: _Slot) -> str | None:
+        if self.eos_id is not None and slot.last_tok == self.eos_id:
+            return "eos"
+        if len(slot.tokens) >= slot.max_new:
+            return "length"
+        return None
+
+    def _retire(self, slot: _Slot) -> FinishedRequest:
+        return FinishedRequest(
+            uid=slot.uid,
+            tokens=np.asarray(slot.tokens, np.int32),
+            logprobs=np.asarray(slot.logprobs, np.float32),
+            finish_reason=self._finished_reason(slot),
+            prompt_len=slot.prompt_len,
+            submit_time=slot.submit_time,
+            finish_time=time.perf_counter())
+
+
+def make_requests(batch: dict, max_new_tokens: int,
+                  key: jax.Array | None = None) -> list[Request]:
+    """Split a pre-batched input dict (engine.generate contract) into one
+    Request per row; row index becomes the uid."""
+    arrays = {k: v for k, v in batch.items() if k != "cache_len"}
+    B = arrays["tokens"].shape[0]
+    out = []
+    for b in range(B):
+        out.append(Request(
+            uid=b,
+            inputs={k: v[b:b + 1] for k, v in arrays.items()},
+            max_new_tokens=max_new_tokens,
+            key=None if key is None else jax.random.fold_in(key, b)))
+    return out

@@ -139,3 +139,20 @@ def test_pack_core_layout():
     got = (X.reshape(7, 8) @ P).reshape(7, 5, 3)        # [b,m,r0]
     np.testing.assert_allclose(np.asarray(got.transpose(1, 0, 2)),
                                np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+def test_tt_forward_rejects_inconsistent_shapes():
+    """A core list inconsistent with x.shape[-1] (or with itself) must be a
+    clear ValueError, not silent shape corruption in the chain reshape."""
+    plan = make_plan((4, 4), (4, 4), 4)
+    cores = tt_init(KEY, plan)
+    good = _rand(jax.random.PRNGKey(11), (3, 16), jnp.float32)
+    for backend in ("xla", "pallas_step"):
+        tt_forward(cores, good, backend=backend, interpret=True)  # sanity
+        with pytest.raises(ValueError, match="does not match"):
+            tt_forward(cores, _rand(KEY, (3, 18), jnp.float32),
+                       backend=backend, interpret=True)
+    bad_rank = [cores[0], jnp.ones((5,) + cores[1].shape[1:],
+                                   cores[1].dtype)]
+    with pytest.raises(ValueError, match="rank mismatch"):
+        tt_forward(bad_rank, good, backend="xla", interpret=True)
