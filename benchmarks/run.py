@@ -13,6 +13,9 @@ Tables/figures covered:
   Fig 15      bench_end_to_end      dense vs TT FC layers (§6.4 picks)
   Fig 16      bench_breakdown       progressive optimization stages
   §Roofline   repro.analysis.roofline --table  (reads results/dryrun)
+  DESIGN §8   bench_quant           int8-resident kernels: weights x
+                                    backend x depth (+ fused-under-int8
+                                    showcase) -> results/BENCH_quant.json
 """
 from __future__ import annotations
 
@@ -23,7 +26,7 @@ import time
 
 BENCHES = ["ds_cloud", "ds_reduction", "alignment", "einsum_kernels",
            "end_to_end", "breakdown", "fc_fraction", "flops_vs_time",
-           "serve_tt"]
+           "serve_tt", "quant"]
 
 
 def main() -> None:

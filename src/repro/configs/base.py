@@ -25,15 +25,22 @@ class TTConfig:
     autotune: str = "cached"                 # off | cached | measure — tile
                                              # selection mode of the measured
                                              # block-plan autotuner
+    weights: str = "fp32"                    # fp32 | int8 — resident core
+                                             # dtype of the kernel path
+                                             # (DESIGN.md §8); int8 keeps the
+                                             # packed cores int8 in VMEM
 
     @property
     def backend_spec(self) -> str:
-        """Backend string handed to tt_forward, with the tune mode folded
-        in (``"auto:measure"``) so it threads through the existing
-        backend plumbing unchanged."""
-        if self.autotune == "cached":
-            return self.backend
-        return f"{self.backend}:{self.autotune}"
+        """Backend string handed to tt_forward, with the tune and weight
+        modes folded in (``"auto:measure:int8"``) so they thread through
+        the existing backend plumbing unchanged."""
+        spec = self.backend
+        if self.autotune != "cached":
+            spec += f":{self.autotune}"
+        if self.weights == "int8":
+            spec += ":int8"
+        return spec
 
 
 @dataclasses.dataclass(frozen=True)

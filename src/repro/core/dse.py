@@ -109,6 +109,12 @@ class DSEConfig:
                                    # dim can feed the 8-sublane register file;
                                    # recovers the paper's §6.4 balanced picks)
     batch: int = 1                 # tokens folded into the chain's b-dim
+    weight_dtypes: tuple[str, ...] = ("fp32",)
+                                   # resident core dtypes enumerated per
+                                   # surviving plan (DESIGN.md §8): adding
+                                   # "int8" emits a mixed-precision twin
+                                   # with the quantized memory footprint
+                                   # and a quantization-error proxy
     # paper Fig. 9: FLOPs → thread count on the SpacemiT K1
     thread_table: tuple[tuple[float, int], ...] = (
         (2e6, 1), (4e6, 2), (8e6, 3), (float("inf"), 4))
@@ -171,6 +177,34 @@ def count_stages(M: int, N: int, cfg: DSEConfig = DSEConfig()) -> dict[str, floa
 # Enumerated pipeline (stages 2–4) → concrete solutions
 # ---------------------------------------------------------------------------
 
+# first-order relative error contributed per core at each resident dtype;
+# the chain is multilinear so the proxy grows linearly in d — matches
+# quant.chain_error_bound's shape.  int8: symmetric 254-step grid
+# (core.quant round-trip bound); bf16: 8-bit significand (7 stored + 1
+# implicit), half-ulp rounding 2^-8 per element.  fp32 is the reference
+# (0) — a nonzero bf16 proxy is what keeps fp32 on the pareto front
+# instead of being spuriously dominated at equal FLOPs.
+CORE_REL_ERR = {"fp32": 0.0, "bf16": 2.0 ** -8, "int8": 1.0 / 254.0}
+
+_WEIGHT_ITEMSIZE = {"fp32": 4, "bf16": 2, "int8": 1}
+
+
+def weight_bytes(core_params: int, d: int, weight_dtype: str) -> int:
+    """Resident byte footprint of the packed TT cores at ``weight_dtype``.
+
+    For int8 this is exactly ``core.quant.quantized_bytes``: one byte per
+    core element plus one fp32 scale per core (unit-tested against it) —
+    the number the dtype-aware VMEM fit model and the serving engine see.
+    """
+    if weight_dtype not in _WEIGHT_ITEMSIZE:
+        raise ValueError(
+            f"unknown weight dtype {weight_dtype!r}: expected one of "
+            f"{tuple(_WEIGHT_ITEMSIZE)}")
+    if weight_dtype == "int8":
+        return core_params + 4 * d
+    return core_params * _WEIGHT_ITEMSIZE[weight_dtype]
+
+
 @dataclasses.dataclass(frozen=True)
 class Solution:
     plan: TTPlan
@@ -178,6 +212,9 @@ class Solution:
     params: int
     threads: tuple[int, ...]       # per einsum, execution order (core d first)
     max_einsum_flops: int
+    weight_dtype: str = "fp32"     # resident core dtype of this candidate
+    bytes: int = 0                 # weight_bytes(core params, d, dtype)
+    quant_rel_err: float = 0.0     # first-order error proxy (0 for fp32)
 
     @property
     def d(self) -> int:
@@ -224,7 +261,7 @@ def explore(M: int, N: int, cfg: DSEConfig = DSEConfig(),
     dense_f, dense_p = dense_flops(M, N), dense_params(M, N)
 
     survivors: list[Solution] = []
-    n_vec = n_init = 0
+    n_vec = n_init = n_scal = 0
     for ms, ns in aligned_combination_shapes(M, N, cfg.max_d, cfg.min_d,
                                              cfg.min_factor):
         for R in _uniform_rank_grid(ms, ns, cfg):
@@ -242,17 +279,60 @@ def explore(M: int, N: int, cfg: DSEConfig = DSEConfig(),
             if plan.d > cfg.max_scalable_d and heaviest < cfg.heavy_flops_min:
                 continue
             threads = tuple(select_threads(b["flops"], cfg) for b in bounds)
-            survivors.append(Solution(plan, f, p, threads, heaviest))
+            n_scal += 1
+            # one candidate per enumerated weight dtype: FLOPs are dtype-
+            # invariant, the memory footprint and the quantization-error
+            # proxy are not — this is what puts mixed-precision solutions
+            # on the pareto front (DESIGN.md §8)
+            for wd in cfg.weight_dtypes:
+                wb = weight_bytes(plan.params, plan.d, wd)  # validates wd
+                survivors.append(Solution(
+                    plan, f, p, threads, heaviest, weight_dtype=wd,
+                    bytes=wb, quant_rel_err=plan.d * CORE_REL_ERR[wd]))
 
-    survivors.sort(key=lambda s: (s.flops, s.params))
+    survivors.sort(key=lambda s: (s.flops, s.params, s.bytes))
     counts["vectorized_enumerated"] = n_vec
     counts["initial_layer"] = n_init
-    counts["scalability"] = len(survivors)
+    # the funnel stage counts PLANS surviving the prune; the weight-dtype
+    # twins are memory-model variants of a plan, not pruning outcomes
+    counts["scalability"] = n_scal
+    counts["dtype_enumerated"] = len(survivors)
     res = DSEResult(M, N, counts, survivors)
     if measure_top > 0:
         res = rerank_measured(res, batch=max(cfg.batch, 1),
                               limit=measure_top)
     return res
+
+
+def _dominates(o: Solution, s: Solution) -> bool:
+    return (o.flops <= s.flops and o.bytes <= s.bytes
+            and o.quant_rel_err <= s.quant_rel_err
+            and (o.flops < s.flops or o.bytes < s.bytes
+                 or o.quant_rel_err < s.quant_rel_err))
+
+
+def pareto_front(solutions: Sequence[Solution]) -> list[Solution]:
+    """Non-dominated set over (flops, bytes, quant_rel_err), all minimized,
+    returned in (flops, bytes, err) order.
+
+    With mixed weight dtypes enumerated (``DSEConfig.weight_dtypes``) the
+    int8 twin of a plan has identical FLOPs, a ~4× smaller byte footprint
+    and a nonzero error proxy — so the front genuinely mixes precisions:
+    int8 candidates win the memory axis, fp32 candidates the accuracy
+    axis, and neither dominates the other.
+
+    Lexicographic-sort scan, O(n·|front|): any dominator of ``s`` sorts
+    strictly before ``s``, and by transitivity a dominated solution is
+    always dominated by some member of the front built so far — so one
+    pass against the accepted front suffices (the survivor lists here are
+    thousands long after dtype enumeration; all-pairs would be O(n²))."""
+    order = sorted(solutions,
+                   key=lambda s: (s.flops, s.bytes, s.quant_rel_err))
+    front: list[Solution] = []
+    for s in order:
+        if not any(_dominates(o, s) for o in front):
+            front.append(s)
+    return front
 
 
 def rerank_measured(res: DSEResult, batch: int = 32, limit: int = 8,
@@ -266,18 +346,22 @@ def rerank_measured(res: DSEResult, batch: int = 32, limit: int = 8,
     proxy.  On real hardware the einsum chain's cost is layout- and
     residency-dependent, so the final pick among near-tied survivors is
     made by running them (interpret-mode timing on CPU containers).
+    Candidates carrying ``weight_dtype='int8'`` are timed on the
+    int8-resident kernel path (pre-quantized cores + scales, exactly what
+    serving runs), so the measured front scores mixed-precision solutions
+    on their own kernels — an int8 twin that newly fits the fused chain
+    beats its step-fallback fp32 sibling here.
 
     Each candidate is jitted and warmed up (one untimed call +
     ``block_until_ready``) before ``_median_time`` sees it, so the ranking
     reflects steady-state kernel time, never trace+compile — a solution
     must not lose stage 4b just because it compiled first/slowest."""
-    import functools
-
     import jax
     import jax.numpy as jnp
 
     from repro.kernels.autotune import _median_time
     from repro.kernels.ops import tt_forward
+    from .quant import quantize_cores
     from .tt import tt_init
 
     dtype = dtype or jnp.float32
@@ -287,10 +371,24 @@ def rerank_measured(res: DSEResult, batch: int = 32, limit: int = 8,
                  tt_init(jax.random.PRNGKey(i), sol.plan)]
         x = jax.random.normal(jax.random.PRNGKey(limit + i),
                               (batch, sol.plan.N), jnp.float32).astype(dtype)
-        fwd = jax.jit(functools.partial(tt_forward, backend=backend,
-                                        interpret=interpret))
-        jax.block_until_ready(fwd(cores, x))       # trace+compile, untimed
-        t = _median_time(lambda: fwd(cores, x), warmup=0)
+        if sol.weight_dtype == "int8":
+            qcores, qscales = quantize_cores(cores)
+            fwd = jax.jit(functools.partial(tt_forward, backend=backend,
+                                            interpret=interpret,
+                                            weights="int8"))
+            call = functools.partial(fwd, qcores, x, scales=qscales)
+        else:
+            if sol.weight_dtype == "bf16":
+                # candidates are timed at their own residency: bf16 cores
+                # route through the dtype-aware fit model (2 B/elem), so a
+                # bf16 twin that newly fits the fused chain ranks on the
+                # fused kernel, not its fp32 sibling's time
+                cores = [c.astype(jnp.bfloat16) for c in cores]
+            fwd = jax.jit(functools.partial(tt_forward, backend=backend,
+                                            interpret=interpret))
+            call = functools.partial(fwd, cores, x)
+        jax.block_until_ready(call())              # trace+compile, untimed
+        t = _median_time(call, warmup=0)
         timed.append((t, sol))
     timed.sort(key=lambda tp: tp[0])
     reranked = [sol for _, sol in timed] + res.solutions[limit:]

@@ -12,6 +12,12 @@ the L/S-instruction objective becomes an HBM-bytes-moved objective; the
 L2-fit test (Eq. 26–28) becomes a VMEM-residency constraint.  The shape of
 the model is identical — minimize memory traffic subject to a fast-memory
 capacity — only the constants changed.
+
+Every fit test takes a *per-operand* itemsize (DESIGN.md §8): ``itemsize``
+prices the activations/states (fp32 accumulation ⇒ 4), ``weight_itemsize``
+prices the resident packed cores (4 fp32, 2 bf16, 1 int8).  Int8-resident
+weights shrink the residency term 4×, which directly enlarges the
+fused-chain eligibility set and the batch tile.
 """
 from __future__ import annotations
 
@@ -58,7 +64,8 @@ def _divisors_pow2(n: int, lo: int, hi: int):
 
 def select_blocks(mt: int, bt: int, nt: int, rt: int, rt_1: int,
                   itemsize: int = 4,
-                  vmem_budget: int = hw.VMEM_BUDGET_BYTES) -> BlockPlan:
+                  vmem_budget: int = hw.VMEM_BUDGET_BYTES,
+                  weight_itemsize: int | None = None) -> BlockPlan:
     """Analytical block-shape selection (paper §4.3.4 step 2–3).
 
     HBM traffic model for grid (m/bm, b/bb, n/bn) with n innermost
@@ -72,21 +79,28 @@ def select_blocks(mt: int, bt: int, nt: int, rt: int, rt_1: int,
       2·(bm·bn·rt·rt_1 + bb·bn·rt + bm·bb·rt_1)·itemsize ≤ budget.
     Alignment: last dim padded to the 128-lane register shape, second-minor
     to 8 sublanes (the TPU analogue of the paper's vl-multiple rule).
+
+    ``weight_itemsize`` prices the resident G tile separately from the
+    activation tiles (int8-resident cores: 1 byte/elem, DESIGN.md §8).
     """
     cands = select_blocks_candidates(mt, bt, nt, rt, rt_1, itemsize,
-                                     vmem_budget, k=1)
+                                     vmem_budget, k=1,
+                                     weight_itemsize=weight_itemsize)
     return cands[0]
 
 
 def select_blocks_candidates(mt: int, bt: int, nt: int, rt: int, rt_1: int,
                              itemsize: int = 4,
                              vmem_budget: int = hw.VMEM_BUDGET_BYTES,
-                             k: int = 4) -> list[BlockPlan]:
+                             k: int = 4,
+                             weight_itemsize: int | None = None
+                             ) -> list[BlockPlan]:
     """Top-``k`` feasible block plans by the analytical traffic model,
     best first.  The empirical autotuner (kernels.autotune) times these
     on-device instead of trusting the model's ranking — the measured
     counterpart of the paper's §4.3.4 'pick the analytical argmin'."""
-    g_total = mt * nt * rt * rt_1 * itemsize
+    w_item = itemsize if weight_itemsize is None else weight_itemsize
+    g_total = mt * nt * rt * rt_1 * w_item
     x_total = bt * nt * rt * itemsize
     o_total = mt * bt * rt_1 * itemsize
 
@@ -94,8 +108,8 @@ def select_blocks_candidates(mt: int, bt: int, nt: int, rt: int, rt_1: int,
     for bm in _divisors_pow2(mt, 8, 512):
         for bb in _divisors_pow2(bt, 8, 1024):
             for bn in _divisors_pow2(nt, 8, 2048):
-                vmem = 2 * itemsize * (bm * bn * rt * rt_1
-                                       + bb * bn * rt + bm * bb * rt_1)
+                vmem = 2 * (w_item * bm * bn * rt * rt_1
+                            + itemsize * (bb * bn * rt + bm * bb * rt_1))
                 if vmem > vmem_budget:
                     continue
                 n_mtiles = -(-mt // bm)
@@ -111,17 +125,21 @@ def select_blocks_candidates(mt: int, bt: int, nt: int, rt: int, rt_1: int,
 
 def chain_fits_vmem(plan_sizes: list[int], itemsize: int = 4,
                     vmem_budget: int = hw.VMEM_BUDGET_BYTES,
-                    weight_elems: int = 0) -> bool:
+                    weight_elems: int = 0,
+                    weight_itemsize: int | None = None) -> bool:
     """Paper Eq. (26) analogue: can the whole einsum chain for one batch
     tile stay resident in VMEM (weights + largest two consecutive states)?
 
     ``plan_sizes`` are the element counts of the chain states s_0 … s_d for
     one batch tile; ``weight_elems`` is the total element count of the
-    packed cores (held once, not double-buffered)."""
+    packed cores (held once, not double-buffered) priced at
+    ``weight_itemsize`` bytes/elem (defaults to ``itemsize``; int8-resident
+    cores pass 1, which is what buys the enlarged eligibility set)."""
+    w_item = itemsize if weight_itemsize is None else weight_itemsize
     peak = 0
     for a, b in zip(plan_sizes, plan_sizes[1:]):
         peak = max(peak, a + b)
-    return peak * itemsize * 2 + weight_elems * itemsize <= vmem_budget
+    return peak * itemsize * 2 + weight_elems * w_item <= vmem_budget
 
 
 def chain_state_sizes(ns, ms, ranks) -> list[int]:
@@ -148,20 +166,23 @@ def chain_weight_elems(ns, ms, ranks) -> int:
 
 
 def fused_chain_batch_tile(ns, ms, ranks, itemsize: int = 4,
-                           vmem_budget: int = hw.VMEM_BUDGET_BYTES
+                           vmem_budget: int = hw.VMEM_BUDGET_BYTES,
+                           weight_itemsize: int | None = None
                            ) -> int | None:
     """Largest power-of-two batch tile for which the *whole* chain is
     VMEM-resident (packed weights + double-buffered peak state pair), or
     ``None`` when even the minimum 8-row tile does not fit — the caller
     must then fall back to the per-step kernel.  This is the fused-chain
     analogue of the paper's L2-fit test (Eq. 26–28), routed through
-    ``chain_fits_vmem``."""
+    ``chain_fits_vmem``.  ``weight_itemsize=1`` (int8-resident cores)
+    admits chains whose fp32 weights alone bust the budget."""
     sizes = chain_state_sizes(ns, ms, ranks)
     weights = chain_weight_elems(ns, ms, ranks)
     bb = 1024
     while bb >= 8:
         if chain_fits_vmem([bb * s for s in sizes], itemsize, vmem_budget,
-                           weight_elems=weights):
+                           weight_elems=weights,
+                           weight_itemsize=weight_itemsize):
             return bb
         bb //= 2
     return None
@@ -169,12 +190,14 @@ def fused_chain_batch_tile(ns, ms, ranks, itemsize: int = 4,
 
 def fused2_batch_tile(N: int, M: int, mid: int, weights: int,
                       itemsize: int = 4,
-                      vmem_budget: int = hw.VMEM_BUDGET_BYTES) -> int:
+                      vmem_budget: int = hw.VMEM_BUDGET_BYTES,
+                      weight_itemsize: int | None = None) -> int:
     """Largest power-of-two batch tile such that X-tile + intermediate +
     Y-tile + packed weights double-buffer in VMEM (fused d=2 kernel)."""
+    w_item = itemsize if weight_itemsize is None else weight_itemsize
     bb = 1024
     while bb > 8:
-        need = 2 * itemsize * (bb * (N + mid + M)) + itemsize * weights
+        need = 2 * itemsize * (bb * (N + mid + M)) + w_item * weights
         if need <= vmem_budget:
             return bb
         bb //= 2

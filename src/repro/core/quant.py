@@ -2,14 +2,22 @@
 
 The paper compresses FC layers ~100–300× via TT; for its edge/embedded
 target the cores can be held in int8 with per-core scales for another
-~4× (vs fp32) / ~2× (vs bf16) of weight memory, dequantized on the fly.
-Because the cores are tiny, dequantization cost is negligible next to the
-chain contraction; because each core's dynamic range is narrow (iid init,
-trained with weight decay), symmetric per-core scaling loses little.
+~4× (vs fp32) / ~2× (vs bf16) of weight memory.  Since PR 3 the packed
+int8 cores reach the Pallas kernels *as int8* (kernels/tt_contract.py:
+dequantization is folded into the matmul epilogue inside VMEM), so the
+4× shrinks the VMEM-residency term of the fused-chain fit test
+(core.packing, DESIGN.md §8) — quantization buys bandwidth and fused
+eligibility, not just checkpoint size.
 
-Error model: per element |ŵ − w| ≤ s/2 with s = max|core|/127; the chain
-multiplies d cores, so the relative output error grows ~linearly in d
-(tests bound it empirically).
+Scale placement: one symmetric scale per core.  Packing
+(``core.packing.pack_core``) is a pure relayout (transpose + reshape), so
+max|G| == max|pack_core(G)| and the per-core scale IS the per-packed-matrix
+scale — ``pack_core_int8`` and ``pack_core(quantize(G))`` commute exactly.
+
+Error model: per element |ŵ − w| ≤ s/2 with s = max|core|/127
+(``roundtrip_bound``); the chain is multilinear in the d cores, so the
+relative output error grows ~linearly in d (``chain_error_bound``; tests
+bound it empirically, including under hypothesis).
 """
 from __future__ import annotations
 
@@ -19,14 +27,30 @@ import jax
 import jax.numpy as jnp
 
 
+def core_scale(G: jax.Array) -> jax.Array:
+    """Symmetric per-core scale, guarded for the all-zero core: an
+    epsilon-sized scale would make the round-trip emit denormal noise
+    (q·1e-12 underflows on some targets), so a zero core quantizes with
+    scale 1 and round-trips to exact zeros."""
+    amax = jnp.max(jnp.abs(G.astype(jnp.float32)))
+    return jnp.where(amax > 0, amax / 127.0, 1.0)
+
+
+def quantize_core(G: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """One core → (int8 core, fp32 scale)."""
+    s = core_scale(G)
+    q = jnp.clip(jnp.round(G.astype(jnp.float32) / s),
+                 -127, 127).astype(jnp.int8)
+    return q, s
+
+
 def quantize_cores(cores: Sequence[jax.Array]
                    ) -> tuple[list[jax.Array], list[jax.Array]]:
     """[G_t] → ([int8 cores], [fp32 scales])."""
     qs, ss = [], []
     for G in cores:
-        s = jnp.max(jnp.abs(G.astype(jnp.float32))) / 127.0 + 1e-12
-        qs.append(jnp.clip(jnp.round(G.astype(jnp.float32) / s),
-                           -127, 127).astype(jnp.int8))
+        q, s = quantize_core(G)
+        qs.append(q)
         ss.append(s)
     return qs, ss
 
@@ -38,12 +62,60 @@ def dequantize_cores(qcores: Sequence[jax.Array],
             for q, s in zip(qcores, scales)]
 
 
+def pack_core_int8(G: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Compile-time pack + quantize of one TT core for the int8 kernels.
+
+    ``G [r_{t-1}, n_t, m_t, r_t]`` → ``(P_q [(n_t·r_t), (m_t·r_{t-1})]
+    int8, scale fp32)`` with ONE scale per packed matrix.  Because packing
+    only permutes elements, quantize-then-pack and pack-then-quantize give
+    bit-identical results; this entry packs first so the quantization grid
+    is defined on exactly the matrix the MXU consumes.
+    """
+    from .packing import pack_core
+    return quantize_core(pack_core(G))
+
+
 def quantized_bytes(qcores, scales) -> int:
     return sum(q.size for q in qcores) + 4 * len(scales)
 
 
+# ---------------------------------------------------------------------------
+# Error bounds (round-trip and chain growth)
+# ---------------------------------------------------------------------------
+
+def roundtrip_bound(G: jax.Array) -> jax.Array:
+    """Elementwise bound on the quantization round-trip error: for every
+    element, |dequant(quant(G)) − G| ≤ scale/2 (nearest-grid-point
+    rounding on the symmetric 254-step grid)."""
+    return core_scale(G) * 0.5
+
+
+def chain_error_bound(cores: Sequence[jax.Array]) -> float:
+    """First-order relative output-error bound of the int8 chain.
+
+    The chain output is multilinear in the d cores, so to first order
+
+      ‖Δy‖/‖y‖ ≲ Σ_t ‖ΔG_t‖/‖G_t‖ ≤ Σ_t (s_t/2)·√(size_t) / ‖G_t‖,
+
+    i.e. error grows ~linearly in d.  This is a *guidance* bound (exact to
+    first order in the perturbation); tests check the measured chain error
+    stays below it with margin.
+    """
+    total = 0.0
+    for G in cores:
+        g32 = G.astype(jnp.float32)
+        norm = float(jnp.linalg.norm(g32))
+        if norm == 0.0:
+            continue                     # zero core round-trips exactly
+        bound = float(roundtrip_bound(G)) * float(jnp.sqrt(G.size))
+        total += bound / norm
+    return total
+
+
 def tt_apply_int8(qcores, scales, x: jax.Array,
                   bias: jax.Array | None = None) -> jax.Array:
-    """Apply a TT layer from int8 cores (dequant-on-the-fly)."""
+    """Apply a TT layer from int8 cores (dequant-on-the-fly, XLA chain —
+    the host-dequant baseline; the kernel path is kernels.ops.tt_forward
+    with ``weights='int8'``)."""
     from .tt import tt_apply
     return tt_apply(dequantize_cores(qcores, scales, x.dtype), x, bias)

@@ -14,10 +14,22 @@
                     VMEM-resident (core.packing.fused_chain_batch_tile /
                     chain_fits_vmem); pallas_step otherwise
 
-A backend string may carry a tune-mode suffix, e.g. ``"auto:measure"`` —
-the mode (off | cached | measure) is handed to the empirical autotuner
-(kernels.autotune), which replaces analytical tile picks with measured,
-JSON-persisted winners.  Default mode is 'cached' (no timing; dict lookup).
+A backend string may carry ``:``-separated suffix tokens, e.g.
+``"auto:measure"`` or ``"auto:measure:int8"``: a tune mode
+(off | cached | measure) is handed to the empirical autotuner
+(kernels.autotune) and a weight mode (fp | int8) selects the resident
+core dtype.  Explicit ``tune=`` / ``weights=`` arguments win over the
+suffix.  Default tune mode is 'cached' (no timing; dict lookup).
+
+``weights='int8'`` (DESIGN.md §8) keeps the packed cores int8 all the way
+into VMEM: the Pallas backends dispatch to the ``*_int8_pallas`` kernel
+variants (in-kernel dequant, fp32 accumulation), and the ``auto`` routing
+re-evaluates fused eligibility under 1-byte weight residency — chains that
+are step-fallback in fp32 can fuse under int8.  Cores may arrive either as
+float (quantized on the fly, symmetric per-core scales) or pre-quantized
+int8 with an explicit ``scales`` sequence (models/layers quantized
+storage).  The fp path prices weight residency at the cores' own itemsize
+(bf16 cores count 2 bytes), so the fit model is dtype-aware throughout.
 """
 from __future__ import annotations
 
@@ -27,12 +39,17 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.packing import fused_chain_batch_tile, pack_core
+from repro.core.quant import dequantize_cores, quantize_cores
 from repro.core.tt import tt_apply
 from . import autotune
-from .tt_contract import (tt_fused2_pallas, tt_fused_chain_pallas,
-                          tt_step_pallas)
+from .tt_contract import (tt_fused2_int8_pallas, tt_fused2_pallas,
+                          tt_fused_chain_int8_pallas, tt_fused_chain_pallas,
+                          tt_step_int8_pallas, tt_step_pallas)
 
 BACKENDS = ("xla", "pallas_step", "pallas_fused2", "pallas_fused", "auto")
+# accepted weight-mode tokens ('fp32' is an alias kept for TTConfig
+# readability; the canonical modes are autotune.WEIGHT_MODES)
+_WEIGHT_ALIASES = {"fp": "fp", "fp32": "fp", "float32": "fp", "int8": "int8"}
 
 
 def chain_dims(cores: Sequence[jax.Array]
@@ -44,10 +61,55 @@ def chain_dims(cores: Sequence[jax.Array]
     return ns, ms, ranks
 
 
+def parse_backend_spec(backend: str, tune: str | None = None,
+                       weights: str | None = None
+                       ) -> tuple[str, str | None, str | None]:
+    """Split ``"<backend>[:<tune>][:<weights>]"`` into its parts.
+
+    Suffix tokens are classified by membership (tune modes vs weight
+    modes) so the order is free; explicit ``tune=``/``weights=`` arguments
+    always win over suffix tokens.  Weight aliases ('fp32', 'float32')
+    normalize to the canonical 'fp' in both positions."""
+    if weights is not None:
+        if weights not in _WEIGHT_ALIASES:
+            raise ValueError(
+                f"unknown weight mode {weights!r}: expected one of "
+                f"{tuple(_WEIGHT_ALIASES)}")
+        weights = _WEIGHT_ALIASES[weights]
+    if ":" in backend:
+        backend, *suffix = backend.split(":")
+        suffix_tune = suffix_weights = None
+        for tok in suffix:
+            if tok in autotune.TUNE_MODES:
+                if suffix_tune is not None:
+                    raise ValueError(
+                        f"conflicting tune-mode suffixes "
+                        f"{suffix_tune!r} and {tok!r} in backend spec")
+                suffix_tune = tok
+            elif tok in _WEIGHT_ALIASES:
+                if suffix_weights is not None:
+                    raise ValueError(
+                        f"conflicting weight-mode suffixes "
+                        f"{suffix_weights!r} and {tok!r} in backend spec")
+                suffix_weights = _WEIGHT_ALIASES[tok]
+            else:
+                raise ValueError(
+                    f"unknown backend suffix {tok!r}: expected a tune mode "
+                    f"{autotune.TUNE_MODES} or a weight mode "
+                    f"{tuple(_WEIGHT_ALIASES)}")
+        tune = tune if tune is not None else suffix_tune
+        weights = weights if weights is not None else suffix_weights
+    return backend, tune, weights
+
+
 def _chain_with_step_kernel(cores: Sequence[jax.Array], x: jax.Array,
-                            interpret: bool | None, tune: str) -> jax.Array:
+                            interpret: bool | None, tune: str,
+                            scales: Sequence[jax.Array] | None = None
+                            ) -> jax.Array:
     """Paper chain where each einsum runs in the blocked Pallas kernel.
-    Layout between steps follows the paper exactly: reshapes only."""
+    Layout between steps follows the paper exactly: reshapes only.
+    With ``scales`` the cores are int8-resident (one launch of the int8
+    step kernel per core)."""
     B = x.shape[0]
     state = x.reshape(-1)
     b = state.shape[0]
@@ -62,10 +124,18 @@ def _chain_with_step_kernel(cores: Sequence[jax.Array], x: jax.Array,
                 f"inconsistent with x.shape[-1] or the inter-core ranks")
         bt = b // (nt * r1)
         st = state.reshape(bt, nt, r1)
-        plan = autotune.step_plan(mt, bt, nt, r1, r0, G.dtype,
-                                  mode=tune, interpret=interpret)
-        out = tt_step_pallas(G, st, plan, interpret=interpret)   # [m, b, r0]
-        state = out.reshape(-1).astype(x.dtype)
+        if scales is not None:
+            plan = autotune.step_plan(mt, bt, nt, r1, r0, x.dtype,
+                                      mode=tune, interpret=interpret,
+                                      weights="int8")
+            out = tt_step_int8_pallas(G, scales[t], st, plan,
+                                      interpret=interpret)
+        else:
+            plan = autotune.step_plan(
+                mt, bt, nt, r1, r0, G.dtype, mode=tune, interpret=interpret,
+                weight_itemsize=jnp.dtype(G.dtype).itemsize)
+            out = tt_step_pallas(G, st, plan, interpret=interpret)
+        state = out.reshape(-1).astype(x.dtype)   # [m, b, r0] flattened
         b = state.shape[0]
     M = b // B
     return state.reshape(M, B).T
@@ -74,18 +144,37 @@ def _chain_with_step_kernel(cores: Sequence[jax.Array], x: jax.Array,
 def tt_forward(cores: Sequence[jax.Array], x: jax.Array,
                bias: jax.Array | None = None, backend: str = "auto",
                interpret: bool | None = None,
-               tune: str | None = None) -> jax.Array:
+               tune: str | None = None,
+               weights: str | None = None,
+               scales: Sequence[jax.Array] | jax.Array | None = None
+               ) -> jax.Array:
     """Apply a TT layer to ``x [..., N]`` → ``[..., M]``.
 
-    ``backend`` may embed the tune mode as ``"<backend>:<mode>"``; an
-    explicit ``tune=`` argument wins over the suffix.
+    ``backend`` may embed the tune and/or weight mode as
+    ``"<backend>:<tune>:<weights>"``; explicit ``tune=`` / ``weights=``
+    arguments win over the suffix.  ``weights='int8'`` runs the
+    int8-resident kernel path: float ``cores`` are quantized on the fly
+    (symmetric per-core scales), pre-quantized int8 ``cores`` require the
+    matching ``scales``.  Int8 cores passed without a weight mode imply
+    ``weights='int8'``.
     """
-    if ":" in backend:
-        backend, suffix = backend.split(":", 1)
-        tune = tune if tune is not None else suffix
+    backend, tune, weights = parse_backend_spec(backend, tune, weights)
     tune = tune or "cached"
-    assert backend in BACKENDS, backend
-    assert tune in autotune.TUNE_MODES, tune
+    if backend not in BACKENDS:
+        raise ValueError(
+            f"unknown backend {backend!r}: expected one of {BACKENDS}")
+    if tune not in autotune.TUNE_MODES:
+        raise ValueError(
+            f"unknown tune mode {tune!r}: expected one of "
+            f"{autotune.TUNE_MODES}")
+    if weights is None and cores[0].dtype == jnp.int8:
+        weights = "int8"
+    weights = weights or "fp"
+    if weights not in autotune.WEIGHT_MODES:
+        raise ValueError(
+            f"unknown weight mode {weights!r}: expected one of "
+            f"{autotune.WEIGHT_MODES}")
+
     d = len(cores)
     ns, ms, ranks = chain_dims(cores)
     Nc = 1
@@ -101,6 +190,35 @@ def tt_forward(cores: Sequence[jax.Array], x: jax.Array,
                 f"TT rank mismatch between cores {t} and {t + 1}: "
                 f"r={cores[t].shape[3]} vs r={cores[t + 1].shape[0]}")
 
+    qcores: list[jax.Array] | None = None
+    qscales: list[jax.Array] | None = None
+    if weights == "int8":
+        if cores[0].dtype == jnp.int8:
+            if scales is None:
+                raise ValueError(
+                    "pre-quantized int8 cores require the matching per-core "
+                    "scales (core.quant.quantize_cores)")
+            qcores, qscales = list(cores), list(scales)
+        else:
+            if scales is not None:
+                raise ValueError(
+                    "scales are only accepted with pre-quantized int8 "
+                    "cores; float cores are quantized on the fly with "
+                    "their own scales — externally calibrated scales "
+                    "would be silently discarded here")
+            qcores, qscales = quantize_cores(cores)
+        w_itemsize = 1
+    elif cores[0].dtype == jnp.int8:
+        raise ValueError(
+            "int8 cores cannot run the float path — pass weights='int8' "
+            "with their scales")
+    else:
+        if scales is not None:
+            raise ValueError(
+                "scales were passed but weights is not 'int8' — they "
+                "would be silently ignored")
+        w_itemsize = jnp.dtype(cores[0].dtype).itemsize
+
     lead, N = x.shape[:-1], x.shape[-1]
     x2 = x.reshape(-1, N)
     B = x2.shape[0]
@@ -109,35 +227,63 @@ def tt_forward(cores: Sequence[jax.Array], x: jax.Array,
     if backend == "auto":
         if d == 2:
             backend = "pallas_fused2"
-        elif d > 2 and fused_chain_batch_tile(ns, ms, ranks,
-                                              itemsize=itemsize) is not None:
+        elif d > 2 and fused_chain_batch_tile(
+                ns, ms, ranks, itemsize=itemsize,
+                weight_itemsize=w_itemsize) is not None:
             backend = "pallas_fused"
         else:
             backend = "pallas_step"
 
     if backend == "xla":
-        y = tt_apply(cores, x2)
+        if weights == "int8":
+            y = tt_apply(dequantize_cores(qcores, qscales, jnp.float32),
+                         x2.astype(jnp.float32))
+        else:
+            y = tt_apply(cores, x2)
     elif backend == "pallas_fused2":
-        assert d == 2, "fused2 backend requires a length-2 plan"
-        G1, G2 = cores
-        _, n1, m1, r1 = G1.shape
-        _, n2, m2, _ = G2.shape
+        if d != 2:
+            raise ValueError(
+                f"fused2 backend requires a length-2 plan, got d={d}")
+        n1, n2 = ns
+        m1, m2 = ms
         block_b = autotune.fused_tile(ns, ms, ranks, x.dtype, B,
-                                      mode=tune, interpret=interpret)
-        y = tt_fused2_pallas(
-            x2, pack_core(G2), pack_core(G1),
-            dims=(n1, n2, m1, m2, r1), block_b=block_b, interpret=interpret)
+                                      mode=tune, interpret=interpret,
+                                      weights=weights,
+                                      weight_itemsize=w_itemsize)
+        dims2 = (n1, n2, m1, m2, ranks[1])
+        if weights == "int8":
+            y = tt_fused2_int8_pallas(
+                x2, pack_core(qcores[1]), pack_core(qcores[0]),
+                [qscales[1], qscales[0]], dims2,
+                block_b=block_b, interpret=interpret)
+        else:
+            y = tt_fused2_pallas(
+                x2, pack_core(cores[1]), pack_core(cores[0]),
+                dims=dims2, block_b=block_b, interpret=interpret)
     elif backend == "pallas_fused":
-        assert d >= 2, "fused chain backend requires d >= 2"
+        if d < 2:
+            raise ValueError(
+                f"fused chain backend requires d >= 2, got d={d}")
         block_b = autotune.fused_tile(ns, ms, ranks, x.dtype, B,
-                                      mode=tune, interpret=interpret)
-        assert block_b is not None, \
-            "chain does not fit VMEM — use pallas_step (or backend='auto')"
-        packed = [pack_core(G) for G in reversed(cores)]
-        y = tt_fused_chain_pallas(x2, packed, (ns, ms, ranks),
-                                  block_b=block_b, interpret=interpret)
+                                      mode=tune, interpret=interpret,
+                                      weights=weights,
+                                      weight_itemsize=w_itemsize)
+        if block_b is None:
+            raise ValueError(
+                "chain does not fit VMEM — use pallas_step (or "
+                "backend='auto')")
+        if weights == "int8":
+            packed = [pack_core(G) for G in reversed(qcores)]
+            y = tt_fused_chain_int8_pallas(
+                x2, packed, list(reversed(qscales)), (ns, ms, ranks),
+                block_b=block_b, interpret=interpret)
+        else:
+            packed = [pack_core(G) for G in reversed(cores)]
+            y = tt_fused_chain_pallas(x2, packed, (ns, ms, ranks),
+                                      block_b=block_b, interpret=interpret)
     else:
-        y = _chain_with_step_kernel(cores, x2, interpret, tune)
+        y = _chain_with_step_kernel(qcores if weights == "int8" else cores,
+                                    x2, interpret, tune, scales=qscales)
 
     if bias is not None:
         y = y + bias

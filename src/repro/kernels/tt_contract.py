@@ -21,6 +21,19 @@ Three kernels (DESIGN.md §2 maps them onto the paper's §4.3 pipeline):
    Eq. 26–28 analogue); chains that do not fit fall back to the per-step
    kernel, which round-trips intermediates through HBM.
 
+Each kernel has an **int8-resident variant** (``*_int8_pallas``, DESIGN.md
+§8): the packed cores arrive as int8 and STAY int8 in VMEM — residency is
+1 byte/elem, so the fit test admits chains whose fp32 weights alone bust
+the VMEM budget.  Per-core fp32 scales ride in SMEM ([d, 1] block);
+dequantization happens inside the kernel body: the int8 block is widened
+to fp32 feeding the MXU and the symmetric per-core scale is folded into
+the matmul epilogue (``(s·Q)·x == s·(Q·x)``, exact — the scale multiplies
+the [bb, m·r] output instead of materializing an fp32 copy of the core).
+Accumulation is fp32 throughout.  Each fp/int8 pair shares ONE jitted call
+(the padding / grid / BlockSpec scaffolding): the int8 trace only appends
+the SMEM scale operand and swaps the body, so a fix to the tiling logic
+can never reach one variant and miss the other.
+
 Every public entry increments a module-level launch counter
 (``LAUNCH_COUNTS``) so benchmarks/tests can assert how many ``pallas_call``
 launches a given forward issues (fused d-chain ⇒ exactly one).
@@ -37,6 +50,7 @@ from typing import Sequence
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.packing import (BlockPlan, fused2_batch_tile,
                                 fused_chain_batch_tile)
@@ -58,6 +72,24 @@ def _interpret_default() -> bool:
     return jax.default_backend() != "tpu"
 
 
+def _scales_smem(scales, d: int) -> jax.Array:
+    """Per-core scales (execution order) → ``[d, 1]`` fp32 array for the
+    SMEM block the int8 kernel bodies index as ``s_ref[j, 0]``."""
+    s = jnp.asarray(scales, jnp.float32).reshape(-1)
+    if s.shape[0] != d:
+        raise ValueError(
+            f"expected {d} per-core scales, got {s.shape[0]}")
+    return s.reshape(d, 1)
+
+
+def _require_int8(arrays, what: str) -> None:
+    for a in arrays:
+        if a.dtype != jnp.int8:
+            raise ValueError(
+                f"{what} must be int8 (got {a.dtype}) — quantize with "
+                f"core.quant.pack_core_int8 / quantize_cores")
+
+
 # ---------------------------------------------------------------------------
 # Kernel 1: single einsum step, blocked + accumulated
 # ---------------------------------------------------------------------------
@@ -74,9 +106,27 @@ def _tt_step_body(g_ref, x_ref, o_ref):
     o_ref[...] += part
 
 
+def _tt_step_int8_body(g_ref, x_ref, s_ref, o_ref):
+    """int8 step: G block stays int8 in VMEM; dequant = widen + epilogue
+    scale from SMEM; fp32 accumulation in the revisited output block."""
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    part = jnp.einsum(
+        "rnmk,bnk->mbr", g_ref[...].astype(jnp.float32),
+        x_ref[...].astype(jnp.float32),
+        preferred_element_type=jnp.float32)
+    o_ref[...] += part * s_ref[0, 0]
+
+
 @functools.partial(jax.jit, static_argnames=("plan", "interpret"))
 def _tt_step_call(G: jax.Array, X: jax.Array, plan: BlockPlan,
-                  interpret: bool) -> jax.Array:
+                  interpret: bool, scale: jax.Array | None = None
+                  ) -> jax.Array:
+    """Shared fp/int8 scaffolding: padding, grid, BlockSpecs.  ``scale``
+    (a [1, 1] fp32 array) selects the int8 body and appends its SMEM
+    operand; the tiling logic is single-sourced for both variants."""
     r0, n, m, r1 = G.shape
     b = X.shape[0]
     bm, bb, bn = min(plan.bm, m), min(plan.bb, b), min(plan.bn, n)
@@ -94,17 +144,27 @@ def _tt_step_call(G: jax.Array, X: jax.Array, plan: BlockPlan,
     mp, np_, bp = Gp.shape[2], Gp.shape[1], Xp.shape[0]
     grid = (mp // bm, bp // bb, np_ // bn)
 
+    in_specs = [
+        pl.BlockSpec((r0, bn, bm, r1), lambda i, j, k: (0, k, i, 0)),
+        pl.BlockSpec((bb, bn, r1), lambda i, j, k: (j, k, 0)),
+    ]
+    args = (Gp, Xp)
+    if scale is None:
+        body = _tt_step_body
+    else:
+        body = _tt_step_int8_body
+        in_specs.append(pl.BlockSpec((1, 1), lambda i, j, k: (0, 0),
+                                     memory_space=pltpu.SMEM))
+        args += (scale,)
+
     out = pl.pallas_call(
-        _tt_step_body,
+        body,
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((r0, bn, bm, r1), lambda i, j, k: (0, k, i, 0)),
-            pl.BlockSpec((bb, bn, r1), lambda i, j, k: (j, k, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((bm, bb, r0), lambda i, j, k: (i, j, 0)),
         out_shape=jax.ShapeDtypeStruct((mp, bp, r0), jnp.float32),
         interpret=interpret,
-    )(Gp, Xp)
+    )(*args)
     return out[:m, :b, :]
 
 
@@ -121,6 +181,21 @@ def tt_step_pallas(G: jax.Array, X: jax.Array, plan: BlockPlan,
         interpret = _interpret_default()
     LAUNCH_COUNTS["step"] += 1
     return _tt_step_call(G, X, plan, interpret)
+
+
+def tt_step_int8_pallas(G: jax.Array, scale, X: jax.Array, plan: BlockPlan,
+                        interpret: bool | None = None) -> jax.Array:
+    """int8 variant of ``tt_step_pallas``: ``G [r0, n, m, r1]`` **int8**
+    with one symmetric fp32 ``scale``, ``X [b, n, r1]`` → ``out [m, b, r0]``
+    (fp32).  G tiles are int8-resident in VMEM (4× the fp32 residency
+    headroom in ``select_blocks``'s fit term); dequantization is the widen
+    + epilogue scale inside the kernel body."""
+    if interpret is None:
+        interpret = _interpret_default()
+    _require_int8([G], "step core G")
+    LAUNCH_COUNTS["step_int8"] += 1
+    return _tt_step_call(G, X, plan, interpret,
+                         scale=_scales_smem([scale], 1))
 
 
 # ---------------------------------------------------------------------------
@@ -144,11 +219,31 @@ def _fused2_body(x_ref, p2_ref, p1_ref, o_ref, *, n1, n2, m1, m2, r1):
     o_ref[...] = y.astype(o_ref.dtype)
 
 
+def _fused2_int8_body(x_ref, p2_ref, p1_ref, s_ref, o_ref,
+                      *, n1, n2, m1, m2, r1):
+    """int8 fused d=2 body: both packed cores int8-resident; each MXU
+    matmul widens its core to fp32 and applies the per-core SMEM scale on
+    the (much smaller) output — exact for symmetric per-core scaling."""
+    bb = x_ref.shape[0]
+    f32 = jnp.float32
+    x = x_ref[...].astype(f32)
+    a = jnp.dot(x.reshape(bb * n1, n2), p2_ref[...].astype(f32),
+                preferred_element_type=f32) * s_ref[0, 0]
+    a = a.reshape(bb, n1, m2, r1).transpose(0, 2, 1, 3)
+    y = jnp.dot(a.reshape(bb * m2, n1 * r1), p1_ref[...].astype(f32),
+                preferred_element_type=f32) * s_ref[1, 0]
+    y = y.reshape(bb, m2, m1).transpose(0, 2, 1).reshape(bb, m1 * m2)
+    o_ref[...] = y.astype(o_ref.dtype)
+
+
 @functools.partial(jax.jit,
                    static_argnames=("dims", "block_b", "interpret"))
 def _tt_fused2_call(x: jax.Array, p2: jax.Array, p1: jax.Array,
                     dims: tuple[int, int, int, int, int],
-                    block_b: int, interpret: bool) -> jax.Array:
+                    block_b: int, interpret: bool,
+                    scales: jax.Array | None = None) -> jax.Array:
+    """Shared fp/int8 scaffolding (padding, grid, BlockSpecs); ``scales``
+    ([2, 1] fp32, execution order) selects the int8 body + SMEM operand."""
     n1, n2, m1, m2, r1 = dims
     B = x.shape[0]
     bb = min(block_b, B)
@@ -156,19 +251,29 @@ def _tt_fused2_call(x: jax.Array, p2: jax.Array, p1: jax.Array,
     xp = jnp.pad(x, ((0, padB), (0, 0))) if padB else x
     Bp = xp.shape[0]
 
-    body = functools.partial(_fused2_body, n1=n1, n2=n2, m1=m1, m2=m2, r1=r1)
+    kw = dict(n1=n1, n2=n2, m1=m1, m2=m2, r1=r1)
+    in_specs = [
+        pl.BlockSpec((bb, n1 * n2), lambda i: (i, 0)),
+        pl.BlockSpec((n2, m2 * r1), lambda i: (0, 0)),
+        pl.BlockSpec((n1 * r1, m1), lambda i: (0, 0)),
+    ]
+    args = (xp, p2, p1)
+    if scales is None:
+        body = functools.partial(_fused2_body, **kw)
+    else:
+        body = functools.partial(_fused2_int8_body, **kw)
+        in_specs.append(pl.BlockSpec((2, 1), lambda i: (0, 0),
+                                     memory_space=pltpu.SMEM))
+        args += (scales,)
+
     out = pl.pallas_call(
         body,
         grid=(Bp // bb,),
-        in_specs=[
-            pl.BlockSpec((bb, n1 * n2), lambda i: (i, 0)),
-            pl.BlockSpec((n2, m2 * r1), lambda i: (0, 0)),
-            pl.BlockSpec((n1 * r1, m1), lambda i: (0, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((bb, m1 * m2), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((Bp, m1 * m2), x.dtype),
         interpret=interpret,
-    )(xp, p2, p1)
+    )(*args)
     return out[:B]
 
 
@@ -193,6 +298,31 @@ def tt_fused2_pallas(x: jax.Array, p2: jax.Array, p1: jax.Array,
                                     itemsize=max(x.dtype.itemsize, 4))
     LAUNCH_COUNTS["fused2"] += 1
     return _tt_fused2_call(x, p2, p1, dims, block_b, interpret)
+
+
+def tt_fused2_int8_pallas(x: jax.Array, p2: jax.Array, p1: jax.Array,
+                          scales,
+                          dims: tuple[int, int, int, int, int],
+                          block_b: int | None = None,
+                          interpret: bool | None = None) -> jax.Array:
+    """int8 fused d=2 TT layer.  ``x [B, n1·n2]`` → ``y [B, m1·m2]``.
+
+    ``p2 [n2, m2·r1]``, ``p1 [n1·r1, m1]`` are **int8** packed cores
+    (core.quant.pack_core_int8); ``scales`` are their fp32 scales in the
+    same (execution) order ``[s2, s1]``.  The cores stay int8 in VMEM, so
+    the analytical tile prices them at 1 byte/elem."""
+    if interpret is None:
+        interpret = _interpret_default()
+    _require_int8([p1, p2], "fused2 packed cores")
+    n1, n2, m1, m2, r1 = dims
+    if block_b is None:
+        block_b = fused2_batch_tile(n1 * n2, m1 * m2, n1 * m2 * r1,
+                                    p1.size + p2.size,
+                                    itemsize=max(x.dtype.itemsize, 4),
+                                    weight_itemsize=1)
+    LAUNCH_COUNTS["fused2_int8"] += 1
+    return _tt_fused2_call(x, p2, p1, dims, block_b, interpret,
+                           scales=_scales_smem(scales, 2))
 
 
 # ---------------------------------------------------------------------------
@@ -230,10 +360,37 @@ def _fused_chain_body(*refs, ns, ms, ranks):
     o_ref[...] = state.astype(o_ref.dtype)      # [bb, M] m-major
 
 
+def _fused_chain_int8_body(*refs, ns, ms, ranks):
+    """int8 chain body: identical state invariant to ``_fused_chain_body``,
+    but the packed cores are int8-resident and every MXU matmul widens its
+    core to fp32 + applies the per-core SMEM scale on the step output."""
+    x_ref, *p_refs = refs[:-2]
+    s_ref, o_ref = refs[-2], refs[-1]
+    d = len(ns)
+    bb = x_ref.shape[0]
+    f32 = jnp.float32
+    state = x_ref[...].astype(f32)              # [bb, N]
+    f = state.shape[1]
+    for j, t in enumerate(range(d - 1, -1, -1)):
+        nt, mt = ns[t], ms[t]
+        rt, rt_1 = ranks[t + 1], ranks[t]
+        bt = f // (nt * rt)
+        a = jnp.dot(state.reshape(bb * bt, nt * rt),
+                    p_refs[j][...].astype(f32),
+                    preferred_element_type=f32) * s_ref[j, 0]
+        a = a.reshape(bb, bt, mt, rt_1).transpose(0, 2, 1, 3)
+        f = mt * bt * rt_1
+        state = a.reshape(bb, f)
+    o_ref[...] = state.astype(o_ref.dtype)      # [bb, M] m-major
+
+
 @functools.partial(jax.jit,
                    static_argnames=("dims", "block_b", "interpret"))
 def _tt_fused_chain_call(x: jax.Array, packed: tuple[jax.Array, ...],
-                         dims, block_b: int, interpret: bool) -> jax.Array:
+                         dims, block_b: int, interpret: bool,
+                         scales: jax.Array | None = None) -> jax.Array:
+    """Shared fp/int8 scaffolding (padding, grid, BlockSpecs); ``scales``
+    ([d, 1] fp32, execution order) selects the int8 body + SMEM operand."""
     ns, ms, ranks = dims
     d = len(ns)
     N = x.shape[1]
@@ -246,19 +403,37 @@ def _tt_fused_chain_call(x: jax.Array, packed: tuple[jax.Array, ...],
     xp = jnp.pad(x, ((0, padB), (0, 0))) if padB else x
     Bp = xp.shape[0]
 
-    body = functools.partial(_fused_chain_body, ns=ns, ms=ms, ranks=ranks)
     # packed cores in execution order (core d first); each is one whole-array
     # block so it is resident in VMEM for every grid step.
     p_specs = [pl.BlockSpec(p.shape, lambda i: (0, 0)) for p in packed]
+    in_specs = [pl.BlockSpec((bb, N), lambda i: (i, 0))] + p_specs
+    args = (xp,) + tuple(packed)
+    if scales is None:
+        body = functools.partial(_fused_chain_body, ns=ns, ms=ms,
+                                 ranks=ranks)
+    else:
+        body = functools.partial(_fused_chain_int8_body, ns=ns, ms=ms,
+                                 ranks=ranks)
+        in_specs.append(pl.BlockSpec((d, 1), lambda i: (0, 0),
+                                     memory_space=pltpu.SMEM))
+        args += (scales,)
+
     out = pl.pallas_call(
         body,
         grid=(Bp // bb,),
-        in_specs=[pl.BlockSpec((bb, N), lambda i: (i, 0))] + p_specs,
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((bb, M), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((Bp, M), x.dtype),
         interpret=interpret,
-    )(xp, *packed)
+    )(*args)
     return out[:B]
+
+
+def _check_chain_args(packed, ns) -> None:
+    if not (len(packed) == len(ns) >= 2):
+        raise ValueError(
+            f"fused chain needs d >= 2 packed cores matching dims "
+            f"(got {len(packed)} cores for {len(ns)} modes)")
 
 
 def tt_fused_chain_pallas(x: jax.Array, packed: Sequence[jax.Array],
@@ -276,16 +451,50 @@ def tt_fused_chain_pallas(x: jax.Array, packed: Sequence[jax.Array],
     ``block_b=None`` takes the analytical VMEM-fit tile
     (``fused_chain_batch_tile``); the autotuner passes a measured winner.
     Callers must ensure the chain fits (``fused_chain_batch_tile`` is not
-    None) — the analytical fallback asserts it.
+    None) — the analytical fallback raises otherwise.
     """
     if interpret is None:
         interpret = _interpret_default()
     ns, ms, ranks = dims
-    assert len(packed) == len(ns) >= 2, "fused chain needs d >= 2"
+    _check_chain_args(packed, ns)
     if block_b is None:
         block_b = fused_chain_batch_tile(
             ns, ms, ranks, itemsize=max(x.dtype.itemsize, 4))
-        assert block_b is not None, \
-            "chain does not fit VMEM — use the per-step kernel"
+        if block_b is None:
+            raise ValueError(
+                "chain does not fit VMEM at any batch tile — use the "
+                "per-step kernel (or backend='auto')")
     LAUNCH_COUNTS["fused_chain"] += 1
     return _tt_fused_chain_call(x, tuple(packed), dims, block_b, interpret)
+
+
+def tt_fused_chain_int8_pallas(x: jax.Array, packed: Sequence[jax.Array],
+                               scales,
+                               dims: tuple[tuple[int, ...], tuple[int, ...],
+                                           tuple[int, ...]],
+                               block_b: int | None = None,
+                               interpret: bool | None = None) -> jax.Array:
+    """int8 fused arbitrary-depth TT chain.  ``x [B, N] → y [B, M]``.
+
+    ``packed`` are **int8** ``pack_core_int8`` matrices in *execution*
+    order (core d first) and ``scales`` their fp32 scales in the same
+    order.  One ``pallas_call`` runs the whole chain; the packed cores are
+    int8-resident in VMEM for every grid step, so the default tile comes
+    from the dtype-aware fit test (``weight_itemsize=1``) — chains whose
+    fp32 weights bust the VMEM budget can still fuse here."""
+    if interpret is None:
+        interpret = _interpret_default()
+    ns, ms, ranks = dims
+    _check_chain_args(packed, ns)
+    _require_int8(packed, "fused chain packed cores")
+    if block_b is None:
+        block_b = fused_chain_batch_tile(
+            ns, ms, ranks, itemsize=max(x.dtype.itemsize, 4),
+            weight_itemsize=1)
+        if block_b is None:
+            raise ValueError(
+                "chain does not fit VMEM at any batch tile even with "
+                "int8-resident cores — use the per-step kernel")
+    LAUNCH_COUNTS["fused_chain_int8"] += 1
+    return _tt_fused_chain_call(x, tuple(packed), dims, block_b, interpret,
+                                scales=_scales_smem(scales, len(ns)))

@@ -135,6 +135,11 @@ def main(argv=None) -> dict:
     ap.add_argument("--tt-backend", default="xla")
     ap.add_argument("--tt-autotune", default="cached",
                     choices=["off", "cached", "measure"])
+    ap.add_argument("--tt-weights", default="fp32",
+                    choices=["fp32", "int8"],
+                    help="resident TT core dtype; int8 quantizes the "
+                         "checkpoint offline and serves the int8-resident "
+                         "kernel path (DESIGN.md §8)")
     ap.add_argument("--seed", type=int, default=0)
     # continuous-batching simulation
     ap.add_argument("--arrival-rate", type=float, default=None,
@@ -151,12 +156,15 @@ def main(argv=None) -> dict:
     if args.tt:
         tt = TTConfig(enabled=True, families=tuple(args.tt.split(",")),
                       rank=args.tt_rank, backend=args.tt_backend,
-                      autotune=args.tt_autotune,
+                      autotune=args.tt_autotune, weights=args.tt_weights,
                       min_factor=2 if args.variant == "smoke" else 8)
     cfg = get_config(args.arch, args.variant, tt=tt)
     model = build(cfg, param_dtype=jnp.bfloat16
                   if args.variant == "full" else jnp.float32)
     params = model.init(jax.random.PRNGKey(args.seed))
+    if args.tt and args.tt_weights == "int8":
+        # offline checkpoint transform: int8 cores + per-core scales
+        params = model.quantize_params(params)
 
     if args.arrival_rate is not None:
         return simulate(model, params, args)

@@ -73,16 +73,76 @@ def linear_spec(in_dim: int, out_dim: int, tt: TTConfig | None,
 def linear_apply(params: dict, x: jax.Array, backend: str = "xla",
                  tune: str | None = None) -> jax.Array:
     """``backend`` accepts the plain backend names of kernels.ops.BACKENDS
-    or a ``"<backend>:<tune-mode>"`` spec (TTConfig.backend_spec); ``tune``
-    overrides the autotuner mode explicitly."""
+    or a ``"<backend>:<tune>[:<weights>]"`` spec (TTConfig.backend_spec);
+    ``tune`` overrides the autotuner mode explicitly.
+
+    TT storage comes in two layouts (DESIGN.md §8): float cores
+    ``{c0..c{d-1}}`` (training / fp serving — a ``:int8`` backend suffix
+    quantizes them on the fly), or the quantized layout
+    ``{c0..c{d-1} int8, scales [d] fp32}`` produced by
+    ``quantize_tt_params`` — the int8 cores are handed to the kernels
+    as-is and stay int8 in VMEM."""
     if "tt" in params:
-        cores = [params["tt"][f"c{t}"] for t in range(len(params["tt"]))]
-        y = tt_forward(cores, x, backend=backend, tune=tune)
+        tt = params["tt"]
+        d = sum(1 for k in tt if k.startswith("c"))
+        cores = [tt[f"c{t}"] for t in range(d)]
+        if cores[0].dtype == jnp.int8:
+            y = tt_forward(cores, x, backend=backend, tune=tune,
+                           weights="int8", scales=list(tt["scales"]))
+        else:
+            y = tt_forward(cores, x, backend=backend, tune=tune)
     else:
         y = x @ params["w"]
     if "b" in params:
         y = y + params["b"]
     return y
+
+
+def quantize_tt_params(params):
+    """Offline weight quantization of a parameter tree: every TT core
+    bundle ``{c0..c{d-1}}`` is replaced by int8 cores + a ``scales [d]``
+    fp32 leaf (``core.quant.quantize_cores``); dense weights, norms and
+    embeddings are untouched.  The result is a drop-in parameter tree for
+    the same ``Model`` — ``linear_apply`` detects the int8 storage and
+    routes through the int8 kernel path (serving engine/scheduler
+    included), so quantization is a checkpoint transform, never a model
+    rebuild."""
+    from repro.core.quant import quantize_core
+
+    def quant_nd(G):
+        """Quantize the trailing [r0, n, m, r1] core, vmapping over any
+        leading stack axes (scan layers, MoE experts) so every per-layer /
+        per-expert slice keeps its own scale — the scan/vmap machinery
+        slices cores and scales consistently."""
+        if G.ndim == 4:
+            return quantize_core(G)
+        return jax.vmap(quant_nd)(G)
+
+    def quantize_bundle(tt: dict) -> dict:
+        if "scales" in tt or tt["c0"].dtype == jnp.int8:
+            # already quantized: re-quantizing the int8 codes would derive
+            # a fresh ~1.0 scale from them and DROP the real per-core
+            # scales — idempotence keeps a reloaded int8 checkpoint (or a
+            # double-applied pipeline) correct instead of silently wrong
+            return tt
+        d = sum(1 for kk in tt if kk.startswith("c"))
+        qs, ss = [], []
+        for t in range(d):
+            q, s = quant_nd(tt[f"c{t}"])
+            qs.append(q)
+            ss.append(jnp.asarray(s, jnp.float32))
+        out = {f"c{t}": q for t, q in enumerate(qs)}
+        out["scales"] = jnp.stack(ss, axis=-1)   # [*stack_axes, d]
+        return out
+
+    def walk(node):
+        if not isinstance(node, dict):
+            return node
+        return {k: quantize_bundle(v) if k == "tt" and isinstance(v, dict)
+                else walk(v)
+                for k, v in node.items()}
+
+    return walk(params)
 
 
 # ---------------------------------------------------------------------------

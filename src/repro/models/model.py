@@ -19,7 +19,7 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.distributed.sharding import shard_act
 from .layers import (embed_apply, embed_spec, linear_apply, linear_spec,
-                     rmsnorm_apply, rmsnorm_spec)
+                     quantize_tt_params, rmsnorm_apply, rmsnorm_spec)
 from .spec import ParamSpec, abstract_tree, count_params, init_tree
 from .transformer import (BlockDef, Group, block_cache_shape, group_decode,
                           group_fwd, group_spec)
@@ -89,6 +89,15 @@ class Model:
 
     def num_params(self) -> int:
         return count_params(self.param_specs())
+
+    def quantize_params(self, params: dict) -> dict:
+        """int8-quantize every TT core bundle of a parameter tree
+        (checkpoint transform, DESIGN.md §8).  The returned tree is served
+        by the same entry points — prefill, decode_step and the
+        continuous-batching scheduler all route through ``linear_apply``,
+        which detects the int8 storage and runs the int8-resident kernel
+        path."""
+        return quantize_tt_params(params)
 
     # -------------------------------------------------------------- embedding
     def _embed_inputs(self, params, batch) -> tuple[jax.Array, jax.Array]:

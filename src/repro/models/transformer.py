@@ -4,7 +4,7 @@ A model is a list of *groups*; each group is a (period, count) pair where
 ``period`` is a tuple of BlockDefs executed in order and ``count`` is how
 many times the period repeats.  Parameters of a group are stacked on a
 leading 'layers' axis and the period body is scanned — HLO size stays O(1)
-in depth (DESIGN.md §8).  Uniform models have a single (block,) period;
+in depth (DESIGN.md §9).  Uniform models have a single (block,) period;
 hybrids (jamba 1:7 attn:mamba, gemma3 5:1 local:global) use longer periods.
 """
 from __future__ import annotations

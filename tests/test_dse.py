@@ -1,10 +1,12 @@
-"""The 4-stage DSE pipeline (paper §4, Fig. 4, Tables 1–2)."""
+"""The 4-stage DSE pipeline (paper §4, Fig. 4, Tables 1–2) + the
+mixed-precision memory model (DESIGN.md §8)."""
 import pytest
 
 from repro.core.dse import (DSEConfig, TPU_DSE, aligned_combination_shapes,
                             best_plan, count_stages, explore,
-                            multiplicative_partitions, select_threads)
-from repro.core.flops import dense_flops, dense_params, prod
+                            multiplicative_partitions, pareto_front,
+                            select_threads, weight_bytes)
+from repro.core.flops import dense_flops, dense_params, prod, tt_params
 
 
 def test_multiplicative_partitions():
@@ -131,6 +133,89 @@ def test_tpu_mode_min_factor():
         for r in s.plan.ranks[1:-1]:
             assert r % 128 == 0
     assert cfg.vl == 128
+
+
+def test_int8_candidates_reduce_memory_footprint():
+    """Mixed-precision enumeration: every surviving plan gets an int8 twin
+    whose byte footprint is exactly ``core.quant.quantized_bytes`` of its
+    quantized cores (1 B/elem + one fp32 scale per core)."""
+    import jax
+
+    from repro.core.quant import quantize_cores, quantized_bytes
+    from repro.core.tt import tt_init
+
+    cfg = DSEConfig(vl=8, rank_step=8, rank_cap=16,
+                    weight_dtypes=("fp32", "int8"))
+    res = explore(256, 256, cfg, with_counts=False)
+    int8 = [s for s in res.solutions if s.weight_dtype == "int8"]
+    fp32 = [s for s in res.solutions if s.weight_dtype == "fp32"]
+    assert int8 and len(int8) == len(fp32)
+    for s in int8[:5]:
+        qs, ss = quantize_cores(tt_init(jax.random.PRNGKey(0), s.plan))
+        assert s.bytes == quantized_bytes(qs, ss)
+        core_p = tt_params(s.plan.ms, s.plan.ns, s.plan.ranks, bias=False)
+        assert s.bytes == weight_bytes(core_p, s.plan.d, "int8")
+    # the fp32 twin of the same plan is exactly 4x the core bytes
+    by_plan = {(s.plan.ms, s.plan.ns, s.plan.ranks): s for s in fp32}
+    for s in int8[:5]:
+        twin = by_plan[(s.plan.ms, s.plan.ns, s.plan.ranks)]
+        assert twin.bytes == 4 * (s.bytes - 4 * s.plan.d)
+        assert twin.flops == s.flops
+        assert twin.quant_rel_err == 0.0 < s.quant_rel_err
+
+
+def test_pareto_front_mixes_precisions():
+    """The (flops, bytes, error) front must contain ALL precisions: lower
+    dtypes win the memory axis at equal FLOPs but carry a nonzero error
+    proxy (bf16 included — half-ulp 2^-8/core), so none dominates
+    another."""
+    cfg = DSEConfig(vl=8, rank_step=8, rank_cap=16,
+                    weight_dtypes=("fp32", "bf16", "int8"))
+    res = explore(256, 256, cfg, with_counts=False)
+    front = pareto_front(res.solutions)
+    kinds = {s.weight_dtype for s in front}
+    assert kinds == {"fp32", "bf16", "int8"}
+    # no member of the front is dominated by any solution
+    for s in front:
+        for o in res.solutions:
+            assert not (o.flops < s.flops and o.bytes < s.bytes
+                        and o.quant_rel_err <= s.quant_rel_err)
+
+
+def test_scalability_count_is_plan_count_not_dtype_twins():
+    """The Fig.-4 funnel counts PLANS surviving the scalability prune;
+    weight-dtype twins are memory-model variants, tallied separately."""
+    cfg = DSEConfig(vl=8, rank_step=8, rank_cap=16,
+                    weight_dtypes=("fp32", "int8"))
+    res = explore(256, 256, cfg, with_counts=True)
+    assert res.counts["dtype_enumerated"] == len(res.solutions)
+    assert res.counts["scalability"] * 2 == res.counts["dtype_enumerated"]
+    base = explore(256, 256, DSEConfig(vl=8, rank_step=8, rank_cap=16),
+                   with_counts=True)
+    assert res.counts["scalability"] == base.counts["scalability"]
+
+
+def test_weight_bytes_model():
+    assert weight_bytes(1000, 3, "fp32") == 4000
+    assert weight_bytes(1000, 3, "bf16") == 2000
+    assert weight_bytes(1000, 3, "int8") == 1012
+    with pytest.raises(ValueError):
+        weight_bytes(1000, 3, "fp8")
+
+
+def test_rerank_measured_times_int8_kernel_path():
+    """Stage 4b must run int8 candidates through the int8 kernels and
+    keep the (plan, dtype) identity of every reranked solution."""
+    from repro.core.dse import rerank_measured
+
+    cfg = DSEConfig(vl=8, rank_step=8, rank_cap=8,
+                    weight_dtypes=("fp32", "int8"))
+    res = explore(128, 128, cfg, with_counts=False)
+    res2 = rerank_measured(res, batch=8, limit=4, interpret=True)
+    assert res2.counts["measured_rerank"] == 4
+    assert sorted(id(s) for s in res2.solutions) == \
+        sorted(id(s) for s in res.solutions)
+    assert {s.weight_dtype for s in res2.solutions[:4]} == {"fp32", "int8"}
 
 
 def test_ds_reduction_factor_bounds():

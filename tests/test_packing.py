@@ -1,7 +1,10 @@
-"""Block-shape selection + VMEM models (paper §4.3.4/§4.3.5 → TPU)."""
+"""Block-shape selection + VMEM models (paper §4.3.4/§4.3.5 → TPU),
+including the per-operand-itemsize (weights vs activations) fit model of
+DESIGN.md §8."""
 from repro.core import hw
 from repro.core.packing import (BlockPlan, chain_fits_vmem,
-                                fused2_batch_tile, select_blocks)
+                                chain_weight_elems, fused2_batch_tile,
+                                fused_chain_batch_tile, select_blocks)
 
 
 def test_select_blocks_respects_vmem_budget():
@@ -51,3 +54,48 @@ def test_fused2_batch_tile_monotone():
     assert 8 <= t_small <= t_big <= 1024
     need = 2 * 4 * (t_small * (4096 + 8192 + 4096)) + 4 * (1 << 20)
     assert need <= hw.VMEM_BUDGET_BYTES or t_small == 8
+
+
+# ---------------------------------------------------------------------------
+# Per-operand itemsize (DESIGN.md §8): int8-resident weights enlarge the
+# eligibility set and never shrink a tile
+# ---------------------------------------------------------------------------
+
+def test_chain_fits_vmem_weight_itemsize():
+    """Weights priced per their own dtype: a weight block that busts the
+    budget at 4 B/elem fits at 1 B/elem with identical states."""
+    w = hw.VMEM_BUDGET_BYTES // 3           # 4w > budget > 1w + states
+    states = [1024, 1024]
+    assert not chain_fits_vmem(states, weight_elems=w, weight_itemsize=4)
+    assert chain_fits_vmem(states, weight_elems=w, weight_itemsize=1)
+    # default (None) keeps the old single-itemsize behavior
+    assert chain_fits_vmem(states, weight_elems=w) == \
+        chain_fits_vmem(states, weight_elems=w, weight_itemsize=4)
+
+
+def test_fused_chain_tile_grows_under_int8_residency():
+    """The dtype-aware fit test: int8 weights never yield a smaller tile,
+    and on a weight-dominated chain they admit a strictly larger one (or
+    flip None → fused-eligible)."""
+    ns, ms, ranks = (4, 32, 32), (32, 32, 4), (1, 128, 128, 1)
+    t_fp = fused_chain_batch_tile(ns, ms, ranks, weight_itemsize=4)
+    t_bf = fused_chain_batch_tile(ns, ms, ranks, weight_itemsize=2)
+    t_q = fused_chain_batch_tile(ns, ms, ranks, weight_itemsize=1)
+    assert t_fp is None and t_bf is None      # 67/34 MB of weights: no fit
+    assert t_q == 8                           # 16.8 MB int8: fused
+    # a smaller chain: tile is monotone non-decreasing as weights shrink
+    ns2, ms2, ranks2 = (8, 8, 8), (8, 8, 8), (1, 8, 8, 1)
+    tiles = [fused_chain_batch_tile(ns2, ms2, ranks2, weight_itemsize=w)
+             for w in (4, 2, 1)]
+    assert all(t is not None for t in tiles)
+    assert tiles[0] <= tiles[1] <= tiles[2]
+
+
+def test_fused2_tile_weight_itemsize():
+    N = M = 2048
+    mid, w = 4096, 6 << 20
+    t4 = fused2_batch_tile(N, M, mid, w, weight_itemsize=4)
+    t1 = fused2_batch_tile(N, M, mid, w, weight_itemsize=1)
+    assert t1 >= t4
+    need = 2 * 4 * (t1 * (N + mid + M)) + 1 * w
+    assert need <= hw.VMEM_BUDGET_BYTES or t1 == 8

@@ -1,10 +1,14 @@
-"""int8 TT cores: size, error bounds, end-to-end drift."""
+"""int8 TT cores: size, error bounds, end-to-end drift, round-trip
+properties (hypothesis) and the all-zero-core guard."""
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
-from repro.core.quant import (dequantize_cores, quantize_cores,
-                              quantized_bytes, tt_apply_int8)
+from repro.core.quant import (chain_error_bound, dequantize_cores,
+                              quantize_core, quantize_cores,
+                              quantized_bytes, roundtrip_bound,
+                              tt_apply_int8)
 from repro.core.tt import make_plan, tt_apply, tt_init
 
 
@@ -56,3 +60,88 @@ def test_int8_cores_dtype_and_bias():
     y0 = tt_apply_int8(qs, ss, x)
     np.testing.assert_allclose(np.asarray(y), np.asarray(y0) + 1.0,
                                rtol=1e-5, atol=1e-5)
+
+
+def test_all_zero_core_roundtrips_to_exact_zeros():
+    """The guard against epsilon scales: a zero core must quantize with a
+    finite O(1) scale and round-trip to EXACT zeros — no denormal noise,
+    and a zero chain output stays exactly zero."""
+    G = jnp.zeros((2, 4, 4, 2))
+    q, s = quantize_core(G)
+    assert float(s) == 1.0
+    assert np.all(np.asarray(q) == 0)
+    deq, = dequantize_cores([q], [s], jnp.float32)
+    assert np.all(np.asarray(deq) == 0.0)
+    # end-to-end: a chain containing a zero core outputs exact zeros
+    plan, cores, x = _setup((8, 4), (4, 8), 4)
+    cores = [cores[0], jnp.zeros_like(cores[1])]
+    qs, ss = quantize_cores(cores)
+    y = tt_apply_int8(qs, ss, x)
+    assert np.all(np.asarray(y) == 0.0)
+    assert np.isfinite(np.asarray(ss, np.float32)).all()
+
+
+def test_roundtrip_bound_holds():
+    plan, cores, _ = _setup((16, 8), (8, 16), 8)
+    for G in cores:
+        q, s = quantize_core(G)
+        deq, = dequantize_cores([q], [s], jnp.float32)
+        err = float(jnp.max(jnp.abs(deq - G)))
+        assert err <= float(roundtrip_bound(G)) + 1e-7
+
+
+# ---------------------------------------------------------------------------
+# Round-trip / chain-growth properties on a deterministic grid; the same
+# properties run under hypothesis search in tests/test_quant_props.py
+# ---------------------------------------------------------------------------
+
+def check_roundtrip_property(ms, ns, rank, seed, mag):
+    """∀ cores (any magnitude): per-element round-trip error ≤ scale/2."""
+    plan = make_plan(ms, ns, rank)
+    cores = [c * mag for c in tt_init(jax.random.PRNGKey(seed), plan)]
+    for G in cores:
+        q, s = quantize_core(G)
+        deq, = dequantize_cores([q], [s], jnp.float32)
+        err = float(jnp.max(jnp.abs(deq - G)))
+        assert err <= float(s) * 0.5 * (1 + 1e-6) + 1e-12
+
+
+def check_chain_error_growth(ms, ns, rank, seed, mag):
+    """Measured relative chain error stays below the first-order bound
+    ``chain_error_bound`` (which grows ~linearly in d) — the property the
+    DSE error proxy and the 5e-2 serving budget rely on."""
+    plan = make_plan(ms, ns, rank)
+    cores = [c * mag for c in tt_init(jax.random.PRNGKey(seed), plan)]
+    x = jax.random.normal(jax.random.PRNGKey(seed + 1), (4, plan.N))
+    y = tt_apply(cores, x)
+    qs, ss = quantize_cores(cores)
+    yq = tt_apply_int8(qs, ss, x.astype(jnp.float32))
+    denom = float(jnp.linalg.norm(y))
+    if denom == 0.0:
+        assert float(jnp.linalg.norm(yq)) == 0.0
+        return
+    rel = float(jnp.linalg.norm(yq - y)) / denom
+    bound = chain_error_bound(cores)
+    assert rel <= bound + 1e-6, (rel, bound, ms, ns, rank)
+    # and the bound itself certifies linear-in-d growth at this rank/shape
+    assert bound <= len(ms) * (np.sqrt(max(G.size for G in cores)) / 254.0
+                               + 1e-6) * 1.01
+
+
+GRID = [
+    ((16, 8), (8, 16), 8), ((8, 4, 4), (4, 4, 8), 4),
+    ((2, 2, 2), (8, 8, 8), 2), ((8, 4, 2, 2), (2, 2, 4, 8), 4),
+    ((4, 4, 4, 4), (4, 4, 4, 4), 8),
+]
+
+
+@pytest.mark.parametrize("ms,ns,rank", GRID)
+@pytest.mark.parametrize("mag", [1e-3, 1.0, 1e3])
+def test_roundtrip_property_grid(ms, ns, rank, mag):
+    check_roundtrip_property(ms, ns, rank, seed=sum(ms), mag=mag)
+
+
+@pytest.mark.parametrize("ms,ns,rank", GRID)
+@pytest.mark.parametrize("mag", [1e-3, 1.0, 1e3])
+def test_chain_error_growth_bounded_in_d_grid(ms, ns, rank, mag):
+    check_chain_error_growth(ms, ns, rank, seed=sum(ns), mag=mag)

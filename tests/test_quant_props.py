@@ -1,0 +1,42 @@
+"""Hypothesis property tests for int8 TT-core quantization.
+
+Searches the (shape, rank, seed, magnitude) space for violations of the
+two quantization invariants that the deterministic grid in
+``test_quant_cores.py`` spot-checks:
+
+  * round-trip: per element |dequant(quant(G)) − G| ≤ scale/2, at any
+    core magnitude (including the all-zero guard path);
+  * chain growth: the measured relative chain error stays below the
+    first-order ``chain_error_bound``, which itself grows ~linearly in d.
+"""
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="hypothesis not installed in this environment")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from test_quant_cores import (check_chain_error_growth,  # noqa: E402
+                              check_roundtrip_property)
+
+
+@st.composite
+def chain_case(draw):
+    d = draw(st.integers(min_value=2, max_value=4))
+    ms = tuple(draw(st.sampled_from([2, 4, 8])) for _ in range(d))
+    ns = tuple(draw(st.sampled_from([2, 4, 8])) for _ in range(d))
+    rank = draw(st.sampled_from([2, 4, 8]))
+    seed = draw(st.integers(min_value=0, max_value=2 ** 16))
+    mag = draw(st.sampled_from([1e-3, 1.0, 1e3]))
+    return ms, ns, rank, seed, mag
+
+
+@settings(max_examples=25, deadline=None)
+@given(chain_case())
+def test_roundtrip_property(case):
+    check_roundtrip_property(*case)
+
+
+@settings(max_examples=20, deadline=None)
+@given(chain_case())
+def test_chain_error_growth_bounded_in_d(case):
+    check_chain_error_growth(*case)

@@ -268,3 +268,100 @@ def test_enc_dec_serving():
     tok = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)[:, None]
     logits2, _ = model.decode_step(params, cache, tok)
     assert bool(jnp.all(jnp.isfinite(logits2)))
+
+
+# ---------------------------------------------------------------------------
+# Quantized TT models through the serving stack (DESIGN.md §8)
+# ---------------------------------------------------------------------------
+
+def _build_tt(weights: str):
+    from repro.configs.base import TTConfig
+    cfg = get_config(
+        "deepseek_7b", "smoke",
+        tt=TTConfig(enabled=True, families=("ffn",), rank=4, min_factor=2,
+                    backend="auto", weights=weights))
+    return cfg, build(cfg)
+
+
+def test_quantized_model_serves_prefill_and_decode():
+    """int8-quantized params are a drop-in tree for the same Model: the
+    prefill/decode logits stay within the chain error budget of fp32, and
+    stored quantization agrees bit-exactly with the on-the-fly ':int8'
+    backend suffix (same quantization grid)."""
+    cfg_fp, model_fp = _build_tt("fp32")
+    cfg_q, model_q = _build_tt("int8")
+    params = model_fp.init(jax.random.PRNGKey(0))
+    qparams = model_q.quantize_params(params)
+    batch = dict(concrete_batch(cfg_fp, 2, 8), cache_len=8 + 4)
+
+    lg_fp, _ = model_fp.prefill(params, batch)
+    lg_q, cache = model_q.prefill(qparams, batch)
+    rel = float(jnp.linalg.norm(lg_q - lg_fp) / jnp.linalg.norm(lg_fp))
+    assert 0 < rel < 5e-2, rel
+
+    # stored int8 == on-the-fly quantization of the float cores
+    lg_fly, _ = model_q.prefill(params, batch)
+    np.testing.assert_array_equal(np.asarray(lg_q), np.asarray(lg_fly))
+
+    tok = jnp.argmax(lg_q[:, -1], -1).astype(jnp.int32)[:, None]
+    lg_d, _ = model_q.decode_step(qparams, cache, tok)
+    assert bool(jnp.all(jnp.isfinite(lg_d)))
+
+
+def test_quantize_params_is_idempotent():
+    """Re-quantizing an already-quantized tree must be a no-op — deriving
+    fresh scales from the int8 codes would silently drop the real ones."""
+    _, model = _build_tt("int8")
+    params = model.init(jax.random.PRNGKey(0))
+    q1 = model.quantize_params(params)
+    q2 = model.quantize_params(q1)
+    flat1 = jax.tree.leaves(q1)
+    flat2 = jax.tree.leaves(q2)
+    assert len(flat1) == len(flat2)
+    for a, b in zip(flat1, flat2):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_quantized_moe_expert_cores_serve():
+    """MoE expert FFN cores are stacked [layers, experts, r0, n, m, r1]:
+    quantization must peel every leading stack axis (per-layer AND
+    per-expert scales) and still serve prefill + decode."""
+    from repro.configs.base import TTConfig
+    cfg = get_config(
+        "mixtral_8x7b", "smoke",
+        tt=TTConfig(enabled=True, families=("ffn",), rank=4, min_factor=2,
+                    backend="auto", weights="int8"))
+    model = build(cfg)
+    qparams = model.quantize_params(model.init(jax.random.PRNGKey(0)))
+    int8_ndims = []
+
+    def walk(node):
+        if isinstance(node, dict):
+            for v in node.values():
+                walk(v)
+        elif hasattr(node, "dtype") and node.dtype == jnp.int8:
+            int8_ndims.append(node.ndim)
+
+    walk(qparams)
+    assert int8_ndims and max(int8_ndims) == 6   # layers x experts x core
+    batch = dict(concrete_batch(cfg, 2, 8), cache_len=8 + 4)
+    lg, cache = model.prefill(qparams, batch)
+    assert bool(jnp.all(jnp.isfinite(lg)))
+    tok = jnp.argmax(lg[:, -1], -1).astype(jnp.int32)[:, None]
+    lg2, _ = model.decode_step(qparams, cache, tok)
+    assert bool(jnp.all(jnp.isfinite(lg2)))
+
+
+def test_scheduler_serves_quantized_model():
+    """The continuous-batching scheduler accepts a quantized param tree:
+    scheduler output is token-identical to the fixed-batch loop on the
+    same quantized params (the scheduler determinism contract is dtype-
+    independent)."""
+    cfg, model = _build_tt("int8")
+    params = model.quantize_params(model.init(jax.random.PRNGKey(0)))
+    batch = dict(concrete_batch(cfg, 3, 8), cache_len=8 + 5)
+    r_sched = generate(model, params, batch, steps=4, temperature=0.0)
+    r_fixed = generate_fixed(model, params, batch, steps=4, temperature=0.0)
+    np.testing.assert_array_equal(np.asarray(r_sched.tokens),
+                                  np.asarray(r_fixed.tokens))
+    assert r_sched.tokens.shape == (3, 4)
