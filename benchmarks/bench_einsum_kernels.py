@@ -44,6 +44,7 @@ from repro.core.flops import prod
 from repro.core.tt import make_plan, tt_init
 from repro.kernels import autotune, tt_contract
 from repro.kernels.ops import tt_forward
+from repro.kernels.plan import plan_tt_forward
 
 from .common import header, row, time_fn
 
@@ -109,11 +110,11 @@ CHAINS = [
 _FUSED_FOR_D = {2: "pallas_fused2", 3: "pallas_fused", 4: "pallas_fused"}
 
 
-def _count_launches(cores, x, backend, tune):
+def _count_launches(cores, x, eplan):
     """pallas_call launches of ONE un-jitted forward (python wrappers run
     every call, so cached traces still count)."""
     tt_contract.reset_launch_counts()
-    tt_forward(cores, x, backend=backend, interpret=True, tune=tune)
+    tt_forward(cores, x, plan=eplan, interpret=True)
     return sum(tt_contract.launch_counts().values())
 
 
@@ -137,15 +138,22 @@ def _bench_chains(quick: bool) -> list[dict]:
                               ("pallas_step", "measure"),
                               (fused, "off"),
                               (fused, "measure")]:
+            # plan-compile-execute: resolution (incl. measure-mode tile
+            # timing) happens ONCE here, outside the timed region — the
+            # timed callable is the pure executor (DESIGN.md §10)
+            eplan = plan_tt_forward(plan.ns, plan.ms, plan.ranks, batch=B,
+                                    backend=backend, tune=tune,
+                                    interpret=True)
             fn = jax.jit(functools.partial(
-                tt_forward, backend=backend, interpret=True, tune=tune))
+                tt_forward, plan=eplan, interpret=True))
             t = time_fn(fn, cores, x)
             launches = (0 if backend == "xla" else
-                        _count_launches(cores, x, backend, tune))
+                        _count_launches(cores, x, eplan))
             t_by[(backend, tune)] = t
             rec = {"chain": name, "d": plan.d, "ms": list(plan.ms),
                    "ns": list(plan.ns), "rank": R, "batch": B,
                    "backend": backend, "tune": tune,
+                   "plan_source": eplan.source,
                    "time_s": t, "gflops": flops / t / 1e9,
                    "pallas_calls": launches}
             out.append(rec)

@@ -45,6 +45,7 @@ from repro.core.quant import quantize_cores
 from repro.core.tt import make_plan, tt_init
 from repro.kernels import tt_contract
 from repro.kernels.ops import tt_forward
+from repro.kernels.plan import plan_tt_forward
 
 from .common import header, row, time_fn
 
@@ -74,23 +75,32 @@ def _count_launches(call) -> int:
 def _bench_one(plan, cores, x, wname: str, backend: str):
     """Returns (timed jitted callable, un-jitted callable for launch
     counting — the python kernel wrappers only run outside cached jit
-    traces — and bytes_resident)."""
+    traces — and bytes_resident).  Dispatch is plan-first (DESIGN.md §10):
+    the execution plan is resolved once per configuration, outside the
+    timed region, and both callables execute it."""
+    B = x.shape[0]
     if wname == "int8":
         qcores, qscales = quantize_cores(cores)
-        fwd = jax.jit(functools.partial(
-            tt_forward, backend=backend, interpret=True, tune="off",
-            weights="int8"))
+        eplan = plan_tt_forward(plan.ns, plan.ms, plan.ranks, batch=B,
+                                backend=backend, tune="off",
+                                weights="int8", interpret=True)
+        fwd = jax.jit(functools.partial(tt_forward, plan=eplan,
+                                        interpret=True))
         call = functools.partial(fwd, qcores, x, scales=qscales)
-        raw = functools.partial(tt_forward, qcores, x, backend=backend,
-                                interpret=True, tune="off", weights="int8",
-                                scales=qscales)
+        raw = functools.partial(tt_forward, qcores, x, plan=eplan,
+                                interpret=True, scales=qscales)
     else:
         wcores = [c.astype(_CAST[wname]) for c in cores]
-        fwd = jax.jit(functools.partial(
-            tt_forward, backend=backend, interpret=True, tune="off"))
+        eplan = plan_tt_forward(
+            plan.ns, plan.ms, plan.ranks, batch=B, backend=backend,
+            tune="off", dtype=x.dtype,
+            weight_itemsize=jnp.dtype(wcores[0].dtype).itemsize,
+            interpret=True)
+        fwd = jax.jit(functools.partial(tt_forward, plan=eplan,
+                                        interpret=True))
         call = functools.partial(fwd, wcores, x)
-        raw = functools.partial(tt_forward, wcores, x, backend=backend,
-                                interpret=True, tune="off")
+        raw = functools.partial(tt_forward, wcores, x, plan=eplan,
+                                interpret=True)
     return call, raw, weight_bytes(plan.params, plan.d, wname)
 
 

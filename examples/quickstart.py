@@ -3,7 +3,9 @@
 1. Run the DSE (alignment → vectorization → initial-layer → scalability)
    for an AlexNet-sized FC layer.
 2. Pick a surviving factorization, TT-decompose a trained weight matrix.
-3. Apply it with all three kernel backends and check they agree.
+3. Compile each backend choice into a resolved ``TTExecutionPlan``
+   (the plan-compile-execute pipeline, DESIGN.md §10) and check all
+   executors agree — including the autotuned ``auto`` routing.
 
     PYTHONPATH=src python examples/quickstart.py
 """
@@ -15,6 +17,7 @@ from repro.core.dse import DSEConfig, explore
 from repro.core.flops import dense_flops, dense_params
 from repro.core.tt import make_plan, tt_apply, tt_decompose
 from repro.kernels.ops import tt_forward
+from repro.kernels.plan import plan_tt_forward
 
 M, N = 1000, 2048                       # ResNet final FC (paper §6.4)
 
@@ -48,11 +51,24 @@ for rank in (64, 640):
     print(f"TT-SVD rank {plan.ranks[1]:4d} ({kind}): "
           f"rel ‖TT(x) − Wx‖ = {err:.2e}")
 
-# --- 3. the three kernel backends agree ------------------------------------
-y_xla = tt_forward(cores, x, backend="xla")
-y_step = tt_forward(cores, x, backend="pallas_step", interpret=True)
-y_fused = tt_forward(cores, x, backend="pallas_fused2", interpret=True)
+# --- 3. plan-compile-execute: resolve once, execute everywhere -------------
+# Each backend choice is compiled ONCE into a TTExecutionPlan (routing,
+# VMEM fit verdict, block/tile selection, autotune lookup all happen
+# here); tt_forward(plan=...) is then a pure executor — this is what the
+# model stack does per layer at build time.
+B = x.shape[0]
+plans = {b: plan_tt_forward(plan.ns, plan.ms, plan.ranks, batch=B,
+                            backend=b, interpret=True)
+         for b in ("xla", "pallas_step", "pallas_fused2", "auto")}
+for name, p in plans.items():
+    print(f"  {name:14s} -> {p.describe()}")
+y_xla = tt_forward(cores, x, plan=plans["xla"])
+y_step = tt_forward(cores, x, plan=plans["pallas_step"], interpret=True)
+y_fused = tt_forward(cores, x, plan=plans["pallas_fused2"], interpret=True)
+y_auto = tt_forward(cores, x, plan=plans["auto"], interpret=True)
+assert plans["auto"].backend == "pallas_fused2"   # d=2 routes to fused2
 print("backend max diffs vs xla:",
       float(jnp.max(jnp.abs(y_step - y_xla))),
-      float(jnp.max(jnp.abs(y_fused - y_xla))))
+      float(jnp.max(jnp.abs(y_fused - y_xla))),
+      float(jnp.max(jnp.abs(y_auto - y_xla))))
 print("OK")

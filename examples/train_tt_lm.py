@@ -1,4 +1,5 @@
-"""End-to-end driver: train a TT-compressed LM on the synthetic pipeline.
+"""End-to-end driver: train a TT-compressed LM on the synthetic pipeline,
+then serve the trained model through the plan-compiled autotuned path.
 
 Presets:
   tiny  (default)  ~0.5M params, 100 steps — finishes in ~1 min on CPU
@@ -6,7 +7,10 @@ Presets:
 
 Both train a deepseek-7b-family decoder with the paper's technique on the
 FFN projections, checkpointing every 50 steps (kill it mid-run and rerun:
-it resumes bit-identically).
+it resumes bit-identically).  Training runs the XLA plan path (Pallas
+kernels have no autodiff rule); the post-train serving step rebuilds the
+model with ``backend='auto'`` so decoding executes the resolved
+fused/step Pallas plans (DESIGN.md §10) on the trained weights.
 
     PYTHONPATH=src python examples/train_tt_lm.py --preset tiny
     PYTHONPATH=src python examples/train_tt_lm.py --preset 100m
@@ -43,13 +47,47 @@ def preset_cfg(preset: str) -> list[str]:
     raise SystemExit(f"unknown preset {preset}")
 
 
+def serve_trained(out, steps: int = 8) -> None:
+    """Decode a few tokens from the trained weights through the
+    plan-compiled ``auto`` backend: the rebuilt model resolves every TT
+    layer's execution plan once at build time (Model.plan_book) and the
+    engine executes those plans — the autotuned serving path, not the
+    bare-string ``backend='xla'`` one."""
+    import jax
+    from repro.configs.shapes import concrete_batch
+    from repro.kernels import plan as ttplan
+    from repro.models.model import Model
+    from repro.serving.engine import generate
+
+    trained = out["model"]
+    serve_cfg = dataclasses.replace(
+        trained.cfg, tt=dataclasses.replace(trained.cfg.tt, backend="auto"))
+    model = Model(serve_cfg, trained.groups, trained.enc_groups,
+                  trained.param_dtype)
+    n0 = ttplan.plan_resolutions()
+    batch = dict(concrete_batch(serve_cfg, 2, 16), cache_len=16 + steps)
+    res = generate(model, out["trained_params"], batch, steps=steps,
+                   key=jax.random.PRNGKey(0))
+    plans = model.plan_book.plans
+    print(f"serving via {len(plans)} resolved plan(s) "
+          f"({ttplan.plan_resolutions() - n0} resolutions):")
+    for p in plans.values():
+        print("  ", p.describe())
+    print("decoded tokens[0]:", res.tokens[0].tolist())
+
+
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--preset", default="tiny", choices=["tiny", "100m"])
     args = ap.parse_args()
     out = train_cli.main(preset_cfg(args.preset))
-    print(f"preset={args.preset} params={out['params']/1e6:.1f}M "
-          f"loss {out['first_loss']:.3f} -> {out['final_loss']:.3f}")
+    if out.get("steps_run", 0) > 0:
+        print(f"preset={args.preset} params={out['params']/1e6:.1f}M "
+              f"loss {out['first_loss']:.3f} -> {out['final_loss']:.3f}")
+    else:
+        # resumed against a finished checkpoint: no new steps, no losses
+        print(f"preset={args.preset} params={out['params']/1e6:.1f}M "
+              f"(checkpoint already at the final step — nothing to train)")
     # A resumed segment can be a few noisy steps — only gate fresh runs
     # with enough steps to see the trend (a full fresh 300-step 100m run
     # goes ~10.8 → 9.6 on the synthetic stream).
@@ -58,3 +96,4 @@ if __name__ == "__main__":
     else:
         print(f"(resumed segment of {out.get('steps_run', 0)} steps — "
               "trend gate skipped)")
+    serve_trained(out)

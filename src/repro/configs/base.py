@@ -31,10 +31,21 @@ class TTConfig:
                                              # packed cores int8 in VMEM
 
     @property
+    def plan_policy(self) -> tuple[str, str, str]:
+        """(backend, tune mode, canonical weight mode) triple consumed by
+        the plan resolver (``kernels.plan.PlanBook.from_tt_config``) —
+        the typed replacement for :attr:`backend_spec`."""
+        return (self.backend, self.autotune,
+                "int8" if self.weights == "int8" else "fp")
+
+    @property
     def backend_spec(self) -> str:
-        """Backend string handed to tt_forward, with the tune and weight
-        modes folded in (``"auto:measure:int8"``) so they thread through
-        the existing backend plumbing unchanged."""
+        """DEPRECATED stringly-typed spelling of :attr:`plan_policy`:
+        backend string with the tune and weight modes folded in
+        (``"auto:measure:int8"``).  Kept as a compatibility shim for
+        direct ``tt_forward``/``linear_apply`` string callers; the model
+        stack resolves ``TTExecutionPlan`` objects through the PlanBook
+        instead."""
         spec = self.backend
         if self.autotune != "cached":
             spec += f":{self.autotune}"

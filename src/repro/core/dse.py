@@ -355,12 +355,20 @@ def rerank_measured(res: DSEResult, batch: int = 32, limit: int = 8,
     Each candidate is jitted and warmed up (one untimed call +
     ``block_until_ready``) before ``_median_time`` sees it, so the ranking
     reflects steady-state kernel time, never trace+compile — a solution
-    must not lose stage 4b just because it compiled first/slowest."""
+    must not lose stage 4b just because it compiled first/slowest.
+
+    Dispatch is plan-first (DESIGN.md §10): each candidate is resolved
+    into a ``TTExecutionPlan`` (one planning pass per candidate — the
+    exact routing, fit verdict and tiles deployment would use: the tune
+    mode defaults to 'cached', so persisted measured tiles are honored,
+    and a ``backend="auto:measure"`` spec times measured winners) and
+    timed through ``tt_forward(plan=...)``; no string-spec round-trips."""
     import jax
     import jax.numpy as jnp
 
     from repro.kernels.autotune import _median_time
     from repro.kernels.ops import tt_forward
+    from repro.kernels.plan import plan_tt_forward
     from .quant import quantize_cores
     from .tt import tt_init
 
@@ -371,11 +379,14 @@ def rerank_measured(res: DSEResult, batch: int = 32, limit: int = 8,
                  tt_init(jax.random.PRNGKey(i), sol.plan)]
         x = jax.random.normal(jax.random.PRNGKey(limit + i),
                               (batch, sol.plan.N), jnp.float32).astype(dtype)
+        tp = sol.plan
         if sol.weight_dtype == "int8":
             qcores, qscales = quantize_cores(cores)
-            fwd = jax.jit(functools.partial(tt_forward, backend=backend,
-                                            interpret=interpret,
-                                            weights="int8"))
+            eplan = plan_tt_forward(tp.ns, tp.ms, tp.ranks, batch=batch,
+                                    dtype=dtype, backend=backend,
+                                    weights="int8", interpret=interpret)
+            fwd = jax.jit(functools.partial(tt_forward, plan=eplan,
+                                            interpret=interpret))
             call = functools.partial(fwd, qcores, x, scales=qscales)
         else:
             if sol.weight_dtype == "bf16":
@@ -384,7 +395,12 @@ def rerank_measured(res: DSEResult, batch: int = 32, limit: int = 8,
                 # bf16 twin that newly fits the fused chain ranks on the
                 # fused kernel, not its fp32 sibling's time
                 cores = [c.astype(jnp.bfloat16) for c in cores]
-            fwd = jax.jit(functools.partial(tt_forward, backend=backend,
+            eplan = plan_tt_forward(
+                tp.ns, tp.ms, tp.ranks, batch=batch, dtype=dtype,
+                backend=backend,
+                weight_itemsize=jnp.dtype(cores[0].dtype).itemsize,
+                interpret=interpret)
+            fwd = jax.jit(functools.partial(tt_forward, plan=eplan,
                                             interpret=interpret))
             call = functools.partial(fwd, cores, x)
         jax.block_until_ready(call())              # trace+compile, untimed

@@ -142,6 +142,35 @@ def chain_fits_vmem(plan_sizes: list[int], itemsize: int = 4,
     return peak * itemsize * 2 + weight_elems * w_item <= vmem_budget
 
 
+@dataclasses.dataclass(frozen=True)
+class FitReport:
+    """Priced VMEM-fit verdict for one whole chain — the structured form
+    of the Eq. 26 test the plan resolver (kernels.plan) records in every
+    ``TTExecutionPlan``, instead of each caller re-deriving it."""
+    fits: bool                   # VMEM-resident at SOME power-of-two tile
+    batch_tile: int | None       # the largest such tile (None when not)
+    weight_bytes: int            # packed-core residency at weight_itemsize
+    peak_state_bytes: int        # per-row peak consecutive state pair
+
+
+def chain_fit_report(ns, ms, ranks, itemsize: int = 4,
+                     vmem_budget: int = hw.VMEM_BUDGET_BYTES,
+                     weight_itemsize: int | None = None) -> FitReport:
+    """One-stop fused-chain fit verdict: the ``fused_chain_batch_tile``
+    decision plus the byte terms it priced, so the caller can persist WHY
+    a chain did or did not fuse (plan provenance, DESIGN.md §10)."""
+    w_item = itemsize if weight_itemsize is None else weight_itemsize
+    sizes = chain_state_sizes(ns, ms, ranks)
+    w_elems = chain_weight_elems(ns, ms, ranks)
+    peak = max((a + b for a, b in zip(sizes, sizes[1:])), default=sizes[0])
+    tile = fused_chain_batch_tile(ns, ms, ranks, itemsize=itemsize,
+                                  vmem_budget=vmem_budget,
+                                  weight_itemsize=w_item)
+    return FitReport(fits=tile is not None, batch_tile=tile,
+                     weight_bytes=w_elems * w_item,
+                     peak_state_bytes=peak * itemsize)
+
+
 def chain_state_sizes(ns, ms, ranks) -> list[int]:
     """Per-batch-element feature sizes of the chain states s_0 … s_d.
 

@@ -1,3 +1,8 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+"""TT kernel stack: Pallas kernels (``tt_contract``), the measured
+block-plan autotuner (``autotune``), the plan-compile-execute pipeline
+(``plan``) and the thin plan executor (``ops.tt_forward``).
+DESIGN.md §2, §8, §10.
+"""
+from .plan import (PLANNING_BATCH, PlanBook,  # noqa: F401
+                   TTExecutionPlan, clear_plan_memo, plan_resolutions,
+                   plan_tt_forward, resolve_plan)

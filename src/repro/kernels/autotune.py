@@ -44,12 +44,20 @@ import jax.numpy as jnp
 from repro.core.flops import prod
 from repro.core.packing import (BlockPlan, fused_chain_batch_tile,
                                 select_blocks_candidates)
-from .tt_contract import (tt_fused2_int8_pallas, tt_fused2_pallas,
-                          tt_fused_chain_int8_pallas, tt_fused_chain_pallas,
-                          tt_step_int8_pallas, tt_step_pallas)
+from .tt_contract import (KERNEL_VERSION, tt_fused2_int8_pallas,
+                          tt_fused2_pallas, tt_fused_chain_int8_pallas,
+                          tt_fused_chain_pallas, tt_step_int8_pallas,
+                          tt_step_pallas)
 
 TUNE_MODES = ("off", "cached", "measure")
 WEIGHT_MODES = ("fp", "int8")       # resident dtype class of the cores
+
+# Versioned cache schema, tied to the kernel generation: every entry is
+# stamped ``"schema": CACHE_SCHEMA`` on write, and load() silently drops
+# entries from other schemas (or malformed/unknown formats) — an old
+# cache file survives a kernel migration instead of crashing it or, worse,
+# serving tiles measured against different kernel semantics.
+CACHE_SCHEMA = KERNEL_VERSION
 
 # number of candidate timings actually executed (tests assert cache hits
 # run zero of these)
@@ -75,9 +83,15 @@ class AutotuneCache:
         if os.path.exists(path):
             try:
                 with open(path) as f:
-                    entries = json.load(f)
+                    raw = json.load(f)
             except (json.JSONDecodeError, OSError):
-                entries = {}
+                raw = {}
+            if isinstance(raw, dict):
+                # keep only entries of THIS schema; stale generations and
+                # unknown formats are ignored, never an error
+                entries = {k: v for k, v in raw.items()
+                           if isinstance(v, dict)
+                           and v.get("schema") == CACHE_SCHEMA}
         return cls(path, entries)
 
     def get(self, key: str) -> dict | None:
@@ -87,8 +101,9 @@ class AutotuneCache:
         """Insert + persist.  The write is atomic (temp file in the same
         directory + ``os.replace``): a reader — or a concurrent benchmark
         process — can never observe a truncated ``autotune_cache.json``,
-        only the old or the new complete file."""
-        self.entries[key] = value
+        only the old or the new complete file.  Every entry is stamped
+        with the current ``CACHE_SCHEMA``."""
+        self.entries[key] = dict(value, schema=CACHE_SCHEMA)
         dirname = os.path.dirname(self.path) or "."
         os.makedirs(dirname, exist_ok=True)
         fd, tmp = tempfile.mkstemp(dir=dirname, suffix=".tmp",
@@ -201,7 +216,23 @@ def fused_tile(ns: tuple[int, ...], ms: tuple[int, ...],
                cache_path: str | None = None,
                weights: str = "fp",
                weight_itemsize: int | None = None) -> int | None:
-    """Batch tile for the fused chain (any d ≥ 2).  Returns None when the
+    """Batch tile for the fused chain (see :func:`fused_tile_ex`)."""
+    return fused_tile_ex(ns, ms, ranks, dtype, B, mode=mode,
+                         interpret=interpret, cache_path=cache_path,
+                         weights=weights,
+                         weight_itemsize=weight_itemsize)[0]
+
+
+def fused_tile_ex(ns: tuple[int, ...], ms: tuple[int, ...],
+                  ranks: tuple[int, ...], dtype, B: int,
+                  mode: str = "cached", interpret: bool | None = None,
+                  cache_path: str | None = None,
+                  weights: str = "fp",
+                  weight_itemsize: int | None = None
+                  ) -> tuple[int | None, str]:
+    """Batch tile for the fused chain (any d ≥ 2), plus its provenance
+    ('analytic' | 'cached' | 'measured') — the plan resolver records the
+    provenance in the ``TTExecutionPlan``.  The tile is None when the
     chain is not VMEM-resident at any tile (caller falls back to per-step).
 
     ``weights='int8'`` prices the resident cores at 1 byte/elem in the
@@ -216,18 +247,18 @@ def fused_tile(ns: tuple[int, ...], ms: tuple[int, ...],
     analytic = fused_chain_batch_tile(ns, ms, ranks, itemsize=itemsize,
                                       weight_itemsize=w_item)
     if analytic is None:
-        return None
+        return None, "analytic"
     if mode == "off":
-        return analytic
+        return analytic, "analytic"
 
     key = plan_key("fused_chain", ns, ms, ranks, dtype, B,
                    _weight_tag(weights, w_item, itemsize))
     cache = get_cache(cache_path)
     hit = cache.get(key)
     if hit is not None:
-        return int(hit["block_b"])
+        return int(hit["block_b"]), "cached"
     if mode == "cached":
-        return analytic
+        return analytic, "analytic"
 
     # mode == 'measure': time the analytic pick ± one octave
     d = len(ns)
@@ -271,7 +302,7 @@ def fused_tile(ns: tuple[int, ...], ms: tuple[int, ...],
     cache.put(key, {"block_b": best, "time_s": timed[str(best)],
                     "source": "measured", "analytic_block_b": analytic,
                     "weights": weights, "candidates": timed})
-    return best
+    return best, "measured"
 
 
 # ---------------------------------------------------------------------------
@@ -283,8 +314,22 @@ def step_plan(mt: int, bt: int, nt: int, rt: int, rt_1: int, dtype,
               cache_path: str | None = None, k: int = 4,
               weights: str = "fp",
               weight_itemsize: int | None = None) -> BlockPlan:
-    """Blocked-step plan: analytical argmin, or the measured winner among
-    the analytical top-k (the paper's §4.3.4 selection, but benchmarked).
+    """Blocked-step plan (see :func:`step_plan_ex`)."""
+    return step_plan_ex(mt, bt, nt, rt, rt_1, dtype, mode=mode,
+                        interpret=interpret, cache_path=cache_path, k=k,
+                        weights=weights,
+                        weight_itemsize=weight_itemsize)[0]
+
+
+def step_plan_ex(mt: int, bt: int, nt: int, rt: int, rt_1: int, dtype,
+                 mode: str = "cached", interpret: bool | None = None,
+                 cache_path: str | None = None, k: int = 4,
+                 weights: str = "fp",
+                 weight_itemsize: int | None = None
+                 ) -> tuple[BlockPlan, str]:
+    """Blocked-step plan plus its provenance ('analytic' | 'cached' |
+    'measured'): analytical argmin, or the measured winner among the
+    analytical top-k (the paper's §4.3.4 selection, but benchmarked).
     ``weights='int8'`` prices the G tile at 1 byte/elem and times the
     int8 step kernel."""
     if mode not in TUNE_MODES:
@@ -294,7 +339,7 @@ def step_plan(mt: int, bt: int, nt: int, rt: int, rt_1: int, dtype,
     cands = select_blocks_candidates(mt, bt, nt, rt, rt_1, itemsize, k=k,
                                      weight_itemsize=w_item)
     if mode == "off":
-        return cands[0]
+        return cands[0], "analytic"
 
     key = plan_key("step", (nt,), (mt,), (rt_1, rt), dtype, bt,
                    _weight_tag(weights, w_item, itemsize))
@@ -303,9 +348,9 @@ def step_plan(mt: int, bt: int, nt: int, rt: int, rt_1: int, dtype,
     if hit is not None:
         return BlockPlan(int(hit["bm"]), int(hit["bb"]), int(hit["bn"]),
                          int(hit.get("traffic_bytes", 0)),
-                         int(hit.get("vmem_bytes", 0)))
+                         int(hit.get("vmem_bytes", 0))), "cached"
     if mode == "cached" or len(cands) == 1:
-        return cands[0]
+        return cands[0], "analytic"
 
     k1, k2 = jax.random.split(jax.random.PRNGKey(0))
     X = jax.random.normal(k2, (bt, nt, rt), jnp.float32).astype(dtype)
@@ -327,4 +372,4 @@ def step_plan(mt: int, bt: int, nt: int, rt: int, rt_1: int, dtype,
                     "weights": weights,
                     "candidates": {f"{p.bm}x{p.bb}x{p.bn}": t
                                    for t, p in timed}})
-    return best
+    return best, "measured"

@@ -1,6 +1,12 @@
 """Public jit'd entry points for TT layer application.
 
-``tt_forward(cores, x, bias, backend)`` dispatches between:
+``tt_forward(cores, x, bias, plan=...)`` EXECUTES a resolved
+:class:`kernels.plan.TTExecutionPlan` (DESIGN.md §10): the plan already
+carries the concrete backend, the fused batch tile or per-step block
+plans, the weight mode and the VMEM fit verdict, so execution is a pure
+dispatch — no string parsing, no fit heuristics, no autotune lookups.
+
+Backends a plan can resolve to:
 
   'xla'           — paper-faithful einsum chain lowered by XLA
                     (the "IREE-class compiler" baseline of Figs. 12–14)
@@ -10,26 +16,24 @@
                     length-2 solutions; this is the d=2 fast path)
   'pallas_fused'  — single fused kernel for ANY depth d ≥ 2: all packed
                     matmuls + relayouts in VMEM, zero HBM intermediates
-  'auto'          — fused2 when d==2; fused chain when the whole chain is
-                    VMEM-resident (core.packing.fused_chain_batch_tile /
-                    chain_fits_vmem); pallas_step otherwise
 
-A backend string may carry ``:``-separated suffix tokens, e.g.
-``"auto:measure"`` or ``"auto:measure:int8"``: a tune mode
-(off | cached | measure) is handed to the empirical autotuner
-(kernels.autotune) and a weight mode (fp | int8) selects the resident
-core dtype.  Explicit ``tune=`` / ``weights=`` arguments win over the
-suffix.  Default tune mode is 'cached' (no timing; dict lookup).
+Without ``plan=`` the call goes through the DEPRECATION SHIM: the
+``backend`` string (optionally a legacy ``"<backend>[:<tune>][:<weights>]"``
+spec, e.g. ``"auto:measure:int8"``) is compiled into a plan by the
+memoized resolver ``kernels.plan.resolve_plan`` at the call's batch size.
+The behavior is identical to the plan path — ``'auto'`` routes fused2 at
+d=2, the fused chain when the dtype-aware VMEM fit admits it, per-step
+otherwise — but model code should resolve plans ONCE at build time
+(``models``' PlanBook) instead of per call.
 
 ``weights='int8'`` (DESIGN.md §8) keeps the packed cores int8 all the way
 into VMEM: the Pallas backends dispatch to the ``*_int8_pallas`` kernel
-variants (in-kernel dequant, fp32 accumulation), and the ``auto`` routing
-re-evaluates fused eligibility under 1-byte weight residency — chains that
-are step-fallback in fp32 can fuse under int8.  Cores may arrive either as
-float (quantized on the fly, symmetric per-core scales) or pre-quantized
-int8 with an explicit ``scales`` sequence (models/layers quantized
-storage).  The fp path prices weight residency at the cores' own itemsize
-(bf16 cores count 2 bytes), so the fit model is dtype-aware throughout.
+variants (in-kernel dequant, fp32 accumulation), and the fit verdict is
+priced at 1-byte weight residency — chains that are step-fallback in fp32
+can fuse under int8.  Cores may arrive either as float (quantized on the
+fly, symmetric per-core scales) or pre-quantized int8 with an explicit
+``scales`` sequence (models/layers quantized storage).  The fp path prices
+weight residency at the cores' own itemsize (bf16 cores count 2 bytes).
 """
 from __future__ import annotations
 
@@ -38,18 +42,18 @@ from typing import Sequence
 import jax
 import jax.numpy as jnp
 
-from repro.core.packing import fused_chain_batch_tile, pack_core
+from repro.core.packing import pack_core
 from repro.core.quant import dequantize_cores, quantize_cores
 from repro.core.tt import tt_apply
 from . import autotune
+from . import plan as planner
+from .plan import BACKENDS, WEIGHT_ALIASES, TTExecutionPlan  # noqa: F401
 from .tt_contract import (tt_fused2_int8_pallas, tt_fused2_pallas,
                           tt_fused_chain_int8_pallas, tt_fused_chain_pallas,
                           tt_step_int8_pallas, tt_step_pallas)
 
-BACKENDS = ("xla", "pallas_step", "pallas_fused2", "pallas_fused", "auto")
-# accepted weight-mode tokens ('fp32' is an alias kept for TTConfig
-# readability; the canonical modes are autotune.WEIGHT_MODES)
-_WEIGHT_ALIASES = {"fp": "fp", "fp32": "fp", "float32": "fp", "int8": "int8"}
+# legacy alias (plan.WEIGHT_ALIASES is canonical)
+_WEIGHT_ALIASES = WEIGHT_ALIASES
 
 
 def chain_dims(cores: Sequence[jax.Array]
@@ -64,56 +68,29 @@ def chain_dims(cores: Sequence[jax.Array]
 def parse_backend_spec(backend: str, tune: str | None = None,
                        weights: str | None = None
                        ) -> tuple[str, str | None, str | None]:
-    """Split ``"<backend>[:<tune>][:<weights>]"`` into its parts.
-
-    Suffix tokens are classified by membership (tune modes vs weight
-    modes) so the order is free; explicit ``tune=``/``weights=`` arguments
-    always win over suffix tokens.  Weight aliases ('fp32', 'float32')
-    normalize to the canonical 'fp' in both positions."""
-    if weights is not None:
-        if weights not in _WEIGHT_ALIASES:
-            raise ValueError(
-                f"unknown weight mode {weights!r}: expected one of "
-                f"{tuple(_WEIGHT_ALIASES)}")
-        weights = _WEIGHT_ALIASES[weights]
-    if ":" in backend:
-        backend, *suffix = backend.split(":")
-        suffix_tune = suffix_weights = None
-        for tok in suffix:
-            if tok in autotune.TUNE_MODES:
-                if suffix_tune is not None:
-                    raise ValueError(
-                        f"conflicting tune-mode suffixes "
-                        f"{suffix_tune!r} and {tok!r} in backend spec")
-                suffix_tune = tok
-            elif tok in _WEIGHT_ALIASES:
-                if suffix_weights is not None:
-                    raise ValueError(
-                        f"conflicting weight-mode suffixes "
-                        f"{suffix_weights!r} and {tok!r} in backend spec")
-                suffix_weights = _WEIGHT_ALIASES[tok]
-            else:
-                raise ValueError(
-                    f"unknown backend suffix {tok!r}: expected a tune mode "
-                    f"{autotune.TUNE_MODES} or a weight mode "
-                    f"{tuple(_WEIGHT_ALIASES)}")
-        tune = tune if tune is not None else suffix_tune
-        weights = weights if weights is not None else suffix_weights
-    return backend, tune, weights
+    """Split ``"<backend>[:<tune>][:<weights>]"`` into its parts
+    (deprecation shim — see ``kernels.plan.compile_spec``, which this
+    delegates to).  Malformed specs (unknown or empty tokens, duplicate
+    token classes) raise a ValueError naming every valid token."""
+    return planner.compile_spec(backend, tune, weights)
 
 
 def _chain_with_step_kernel(cores: Sequence[jax.Array], x: jax.Array,
-                            interpret: bool | None, tune: str,
+                            interpret: bool | None,
+                            step_plans: Sequence,
                             scales: Sequence[jax.Array] | None = None
                             ) -> jax.Array:
     """Paper chain where each einsum runs in the blocked Pallas kernel.
     Layout between steps follows the paper exactly: reshapes only.
+    ``step_plans`` are the plan's per-step BlockPlans in execution order
+    (core d first); the kernel clamps tiles to the runtime extents, so a
+    plan resolved at the nominal planning batch serves any batch.
     With ``scales`` the cores are int8-resident (one launch of the int8
     step kernel per core)."""
     B = x.shape[0]
     state = x.reshape(-1)
     b = state.shape[0]
-    for t in range(len(cores) - 1, -1, -1):
+    for j, t in enumerate(range(len(cores) - 1, -1, -1)):
         G = cores[t]
         r0, nt, mt, r1 = G.shape
         if b % (nt * r1) != 0:
@@ -124,17 +101,12 @@ def _chain_with_step_kernel(cores: Sequence[jax.Array], x: jax.Array,
                 f"inconsistent with x.shape[-1] or the inter-core ranks")
         bt = b // (nt * r1)
         st = state.reshape(bt, nt, r1)
+        bplan = step_plans[j]
         if scales is not None:
-            plan = autotune.step_plan(mt, bt, nt, r1, r0, x.dtype,
-                                      mode=tune, interpret=interpret,
-                                      weights="int8")
-            out = tt_step_int8_pallas(G, scales[t], st, plan,
+            out = tt_step_int8_pallas(G, scales[t], st, bplan,
                                       interpret=interpret)
         else:
-            plan = autotune.step_plan(
-                mt, bt, nt, r1, r0, G.dtype, mode=tune, interpret=interpret,
-                weight_itemsize=jnp.dtype(G.dtype).itemsize)
-            out = tt_step_pallas(G, st, plan, interpret=interpret)
+            out = tt_step_pallas(G, st, bplan, interpret=interpret)
         state = out.reshape(-1).astype(x.dtype)   # [m, b, r0] flattened
         b = state.shape[0]
     M = b // B
@@ -146,35 +118,21 @@ def tt_forward(cores: Sequence[jax.Array], x: jax.Array,
                interpret: bool | None = None,
                tune: str | None = None,
                weights: str | None = None,
-               scales: Sequence[jax.Array] | jax.Array | None = None
-               ) -> jax.Array:
+               scales: Sequence[jax.Array] | jax.Array | None = None,
+               plan: TTExecutionPlan | None = None) -> jax.Array:
     """Apply a TT layer to ``x [..., N]`` → ``[..., M]``.
 
-    ``backend`` may embed the tune and/or weight mode as
-    ``"<backend>:<tune>:<weights>"``; explicit ``tune=`` / ``weights=``
-    arguments win over the suffix.  ``weights='int8'`` runs the
-    int8-resident kernel path: float ``cores`` are quantized on the fly
-    (symmetric per-core scales), pre-quantized int8 ``cores`` require the
-    matching ``scales``.  Int8 cores passed without a weight mode imply
-    ``weights='int8'``.
+    ``plan=`` executes a pre-resolved :class:`TTExecutionPlan` directly —
+    the model stack resolves each layer's plan once at build time and
+    passes it here, so tracing performs zero planning.  Without a plan the
+    call compiles one from the legacy arguments: ``backend`` may embed the
+    tune and/or weight mode as ``"<backend>:<tune>:<weights>"`` (a
+    deprecated spelling); explicit ``tune=`` / ``weights=`` arguments win
+    over the suffix.  ``weights='int8'`` runs the int8-resident kernel
+    path: float ``cores`` are quantized on the fly (symmetric per-core
+    scales), pre-quantized int8 ``cores`` require the matching ``scales``.
+    Int8 cores passed without a weight mode imply ``weights='int8'``.
     """
-    backend, tune, weights = parse_backend_spec(backend, tune, weights)
-    tune = tune or "cached"
-    if backend not in BACKENDS:
-        raise ValueError(
-            f"unknown backend {backend!r}: expected one of {BACKENDS}")
-    if tune not in autotune.TUNE_MODES:
-        raise ValueError(
-            f"unknown tune mode {tune!r}: expected one of "
-            f"{autotune.TUNE_MODES}")
-    if weights is None and cores[0].dtype == jnp.int8:
-        weights = "int8"
-    weights = weights or "fp"
-    if weights not in autotune.WEIGHT_MODES:
-        raise ValueError(
-            f"unknown weight mode {weights!r}: expected one of "
-            f"{autotune.WEIGHT_MODES}")
-
     d = len(cores)
     ns, ms, ranks = chain_dims(cores)
     Nc = 1
@@ -190,6 +148,41 @@ def tt_forward(cores: Sequence[jax.Array], x: jax.Array,
                 f"TT rank mismatch between cores {t} and {t + 1}: "
                 f"r={cores[t].shape[3]} vs r={cores[t + 1].shape[0]}")
 
+    if plan is not None:
+        if (plan.ns, plan.ms, plan.ranks) != (ns, ms, ranks):
+            raise ValueError(
+                f"plan/chain mismatch: plan is for n={plan.ns} m={plan.ms} "
+                f"r={plan.ranks}, cores are n={ns} m={ms} r={ranks}")
+        # the plan is authoritative: conflicting legacy arguments are an
+        # error, never silently dropped
+        if backend not in ("auto", plan.requested, plan.backend):
+            raise ValueError(
+                f"backend={backend!r} conflicts with the plan "
+                f"({plan.requested!r} -> {plan.backend!r}) — drop the "
+                f"argument or re-plan")
+        if tune is not None and tune != plan.tune:
+            raise ValueError(
+                f"tune={tune!r} conflicts with the plan's tune mode "
+                f"{plan.tune!r} — drop the argument or re-plan")
+        if weights is not None and \
+                planner.normalize_weights(weights) != plan.weights:
+            raise ValueError(
+                f"weights={weights!r} conflicts with the plan's weight "
+                f"mode {plan.weights!r} — drop the argument or re-plan")
+        weights = plan.weights
+    else:
+        backend, tune, weights = planner.compile_spec(
+            backend, tune, weights, warn=True)
+        tune = tune or "cached"
+        if tune not in autotune.TUNE_MODES:
+            raise ValueError(
+                f"unknown tune mode {tune!r}: expected one of "
+                f"{autotune.TUNE_MODES}")
+        if weights is None and cores[0].dtype == jnp.int8:
+            weights = "int8"
+        weights = weights or "fp"
+
+    # --------------------------------------------------------- core storage
     qcores: list[jax.Array] | None = None
     qscales: list[jax.Array] | None = None
     if weights == "int8":
@@ -222,68 +215,59 @@ def tt_forward(cores: Sequence[jax.Array], x: jax.Array,
     lead, N = x.shape[:-1], x.shape[-1]
     x2 = x.reshape(-1, N)
     B = x2.shape[0]
-    itemsize = max(x.dtype.itemsize, 4)
 
-    if backend == "auto":
-        if d == 2:
-            backend = "pallas_fused2"
-        elif d > 2 and fused_chain_batch_tile(
-                ns, ms, ranks, itemsize=itemsize,
-                weight_itemsize=w_itemsize) is not None:
-            backend = "pallas_fused"
-        else:
-            backend = "pallas_step"
+    if plan is None:
+        plan = planner.resolve_plan(
+            ns, ms, ranks, batch=B, dtype=x.dtype, backend=backend,
+            tune=tune, weights=weights, weight_itemsize=w_itemsize,
+            interpret=interpret)
 
-    if backend == "xla":
+    # ------------------------------------------------------------ execution
+    if plan.backend == "xla":
         if weights == "int8":
             y = tt_apply(dequantize_cores(qcores, qscales, jnp.float32),
                          x2.astype(jnp.float32))
         else:
             y = tt_apply(cores, x2)
-    elif backend == "pallas_fused2":
-        if d != 2:
-            raise ValueError(
-                f"fused2 backend requires a length-2 plan, got d={d}")
+    elif plan.backend == "pallas_fused2":
         n1, n2 = ns
         m1, m2 = ms
-        block_b = autotune.fused_tile(ns, ms, ranks, x.dtype, B,
-                                      mode=tune, interpret=interpret,
-                                      weights=weights,
-                                      weight_itemsize=w_itemsize)
         dims2 = (n1, n2, m1, m2, ranks[1])
         if weights == "int8":
             y = tt_fused2_int8_pallas(
                 x2, pack_core(qcores[1]), pack_core(qcores[0]),
                 [qscales[1], qscales[0]], dims2,
-                block_b=block_b, interpret=interpret)
+                block_b=plan.block_b, interpret=interpret)
         else:
             y = tt_fused2_pallas(
                 x2, pack_core(cores[1]), pack_core(cores[0]),
-                dims=dims2, block_b=block_b, interpret=interpret)
-    elif backend == "pallas_fused":
-        if d < 2:
+                dims=dims2, block_b=plan.block_b, interpret=interpret)
+    elif plan.backend == "pallas_fused":
+        if plan.block_b is None:
             raise ValueError(
-                f"fused chain backend requires d >= 2, got d={d}")
-        block_b = autotune.fused_tile(ns, ms, ranks, x.dtype, B,
-                                      mode=tune, interpret=interpret,
-                                      weights=weights,
-                                      weight_itemsize=w_itemsize)
-        if block_b is None:
-            raise ValueError(
-                "chain does not fit VMEM — use pallas_step (or "
-                "backend='auto')")
+                "malformed plan: pallas_fused without a batch tile — "
+                "re-resolve with kernels.plan.plan_tt_forward")
         if weights == "int8":
             packed = [pack_core(G) for G in reversed(qcores)]
             y = tt_fused_chain_int8_pallas(
                 x2, packed, list(reversed(qscales)), (ns, ms, ranks),
-                block_b=block_b, interpret=interpret)
+                block_b=plan.block_b, interpret=interpret)
         else:
             packed = [pack_core(G) for G in reversed(cores)]
             y = tt_fused_chain_pallas(x2, packed, (ns, ms, ranks),
-                                      block_b=block_b, interpret=interpret)
-    else:
+                                      block_b=plan.block_b,
+                                      interpret=interpret)
+    elif plan.backend == "pallas_step":
+        if plan.step_plans is None or len(plan.step_plans) != d:
+            raise ValueError(
+                "malformed plan: pallas_step without per-step block plans "
+                "— re-resolve with kernels.plan.plan_tt_forward")
         y = _chain_with_step_kernel(qcores if weights == "int8" else cores,
-                                    x2, interpret, tune, scales=qscales)
+                                    x2, interpret, plan.step_plans,
+                                    scales=qscales)
+    else:
+        raise ValueError(
+            f"plan resolved to unknown backend {plan.backend!r}")
 
     if bias is not None:
         y = y + bias

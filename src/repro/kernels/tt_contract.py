@@ -55,6 +55,13 @@ from jax.experimental.pallas import tpu as pltpu
 from repro.core.packing import (BlockPlan, fused2_batch_tile,
                                 fused_chain_batch_tile)
 
+# Kernel-generation version: bumped whenever tiling semantics, packed
+# layouts or the BlockPlan contract change incompatibly.  The autotune
+# cache schema (autotune.CACHE_SCHEMA) and serialized execution plans
+# (plan.PLAN_SCHEMA) are stamped with it, so persisted tiles/plans from an
+# older kernel generation are silently ignored rather than mis-executed.
+KERNEL_VERSION = 2
+
 # pallas_call launches per kernel kind, counted at the (non-jitted) wrapper
 # level so cached-trace executions are counted too.
 LAUNCH_COUNTS: collections.Counter = collections.Counter()

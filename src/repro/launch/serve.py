@@ -28,6 +28,7 @@ import numpy as np
 from repro.configs import build, get_config
 from repro.configs.base import TTConfig
 from repro.configs.shapes import concrete_batch
+from repro.kernels import plan as ttplan
 from repro.serving.engine import generate_fixed
 from repro.serving.scheduler import Request, Scheduler
 
@@ -59,6 +60,9 @@ def simulate(model, params, args) -> dict:
     compile_s = time.perf_counter() - t0
     sched.finished.clear()
     sched.tokens_out = sched.steps_run = 0
+    # every TT plan is resolved at model build / warm-up; the steady-state
+    # run must never plan again (DESIGN.md §10)
+    plans_warm = ttplan.plan_resolutions()
 
     rng = np.random.default_rng(args.seed)
     arrivals = np.cumsum(rng.exponential(1.0 / args.arrival_rate,
@@ -88,8 +92,15 @@ def simulate(model, params, args) -> dict:
     print(f"steady-state: {sched.tokens_out} tokens in {wall:.2f}s "
           f"({tok_s:.1f} tok/s), decode steps={sched.steps_run}")
     print(f"per-request latency: p50={p50*1e3:.1f}ms p95={p95*1e3:.1f}ms")
+    replans = ttplan.plan_resolutions() - plans_warm
+    print(f"plan resolutions during steady state: {replans} "
+          f"(model plans: {len(model.plan_book)})")
+    if args.assert_no_replan and replans != 0:
+        raise AssertionError(
+            f"{replans} TT plan resolutions during the steady-state run — "
+            "serving must execute build-time plans only")
     return {"finished": finished, "tok_per_s": tok_s, "p50_s": p50,
-            "p95_s": p95, "compile_s": compile_s}
+            "p95_s": p95, "compile_s": compile_s, "replans": replans}
 
 
 def fixed(model, params, args) -> dict:
@@ -103,11 +114,13 @@ def fixed(model, params, args) -> dict:
                          temperature=args.temperature, key=key)
     jax.block_until_ready(res.tokens)
     cold = time.perf_counter() - t0
+    plans_warm = ttplan.plan_resolutions()     # all resolved by now
     t0 = time.perf_counter()
     res = generate_fixed(model, params, batch, steps=args.steps,
                          temperature=args.temperature, key=key)
     jax.block_until_ready(res.tokens)
     warm = time.perf_counter() - t0
+    replans = ttplan.plan_resolutions() - plans_warm
 
     toks = args.batch * args.steps
     compile_s = max(cold - warm, 0.0)
@@ -117,8 +130,14 @@ def fixed(model, params, args) -> dict:
     print(f"steady-state: {toks} tokens in {warm:.2f}s "
           f"({toks/warm:.1f} tok/s incl. prefill, excl. compile)")
     print("sample tokens[0]:", res.tokens[0].tolist())
+    print(f"plan resolutions during warm run: {replans} "
+          f"(model plans: {len(model.plan_book)})")
+    if args.assert_no_replan and replans != 0:
+        raise AssertionError(
+            f"{replans} TT plan resolutions during the warm run — "
+            "serving must execute build-time plans only")
     return {"tokens": res.tokens, "tok_per_s": toks / warm,
-            "compile_s": compile_s}
+            "compile_s": compile_s, "replans": replans}
 
 
 def main(argv=None) -> dict:
@@ -148,6 +167,10 @@ def main(argv=None) -> dict:
     ap.add_argument("--slots", type=int, default=None,
                     help="slot-pool size (default: --batch)")
     ap.add_argument("--eos-id", type=int, default=None)
+    ap.add_argument("--assert-no-replan", action="store_true",
+                    help="fail if any TT execution plan is resolved during "
+                         "the steady-state serving run (CI smoke for the "
+                         "plan-compile-execute contract, DESIGN.md §10)")
     args = ap.parse_args(argv)
     if args.slots is None:
         args.slots = args.batch

@@ -133,7 +133,12 @@ def main(argv=None) -> dict:
     return {"final_loss": losses[-1] if losses else None,
             "first_loss": losses[0] if losses else None,
             "steps_run": len(losses),
-            "params": n_params}
+            "params": n_params,
+            # for in-process consumers (examples): the trained parameter
+            # tree and the built model, so a serving step can run on the
+            # result without a checkpoint round-trip
+            "model": model,
+            "trained_params": state["params"]}
 
 
 if __name__ == "__main__":

@@ -17,6 +17,7 @@ from repro.core.dse import DSEConfig, explore
 from repro.core.flops import prod
 from repro.core.tt import TTPlan
 from repro.kernels.ops import tt_forward
+from repro.kernels.plan import PlanBook, TTExecutionPlan
 from .spec import ParamSpec
 
 
@@ -70,15 +71,23 @@ def linear_spec(in_dim: int, out_dim: int, tt: TTConfig | None,
     return out
 
 
-def linear_apply(params: dict, x: jax.Array, backend: str = "xla",
-                 tune: str | None = None) -> jax.Array:
-    """``backend`` accepts the plain backend names of kernels.ops.BACKENDS
-    or a ``"<backend>:<tune>[:<weights>]"`` spec (TTConfig.backend_spec);
-    ``tune`` overrides the autotuner mode explicitly.
+def linear_apply(params: dict, x: jax.Array,
+                 backend: "str | PlanBook" = "xla",
+                 tune: str | None = None,
+                 plan: TTExecutionPlan | None = None) -> jax.Array:
+    """Apply one projection (dense weight or TT cores).
+
+    Dispatch is plan-first (DESIGN.md §10): ``plan`` executes a resolved
+    ``TTExecutionPlan`` directly; ``backend`` may be the model's
+    ``PlanBook`` (the normal path — a build-time-resolved plan is looked
+    up by chain signature, so traces never plan) or, as a deprecation
+    shim, a plain backend name / legacy ``"<backend>:<tune>[:<weights>]"``
+    spec which is compiled to a plan per call; ``tune`` overrides the
+    autotuner mode on the string path only.
 
     TT storage comes in two layouts (DESIGN.md §8): float cores
-    ``{c0..c{d-1}}`` (training / fp serving — a ``:int8`` backend suffix
-    quantizes them on the fly), or the quantized layout
+    ``{c0..c{d-1}}`` (training / fp serving — an int8 weight mode in the
+    plan quantizes them on the fly), or the quantized layout
     ``{c0..c{d-1} int8, scales [d] fp32}`` produced by
     ``quantize_tt_params`` — the int8 cores are handed to the kernels
     as-is and stay int8 in VMEM."""
@@ -86,9 +95,14 @@ def linear_apply(params: dict, x: jax.Array, backend: str = "xla",
         tt = params["tt"]
         d = sum(1 for k in tt if k.startswith("c"))
         cores = [tt[f"c{t}"] for t in range(d)]
-        if cores[0].dtype == jnp.int8:
+        scales = list(tt["scales"]) if cores[0].dtype == jnp.int8 else None
+        if plan is None and isinstance(backend, PlanBook):
+            plan = backend.plan_for_cores(cores)
+        if plan is not None:
+            y = tt_forward(cores, x, plan=plan, scales=scales)
+        elif scales is not None:
             y = tt_forward(cores, x, backend=backend, tune=tune,
-                           weights="int8", scales=list(tt["scales"]))
+                           weights="int8", scales=scales)
         else:
             y = tt_forward(cores, x, backend=backend, tune=tune)
     else:

@@ -18,6 +18,7 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.distributed.sharding import shard_act
+from repro.kernels.plan import PlanBook
 from .layers import (embed_apply, embed_spec, linear_apply, linear_spec,
                      quantize_tt_params, rmsnorm_apply, rmsnorm_spec)
 from .spec import ParamSpec, abstract_tree, count_params, init_tree
@@ -42,6 +43,21 @@ class Model:
     jit_cache_size: int = 8
     _jit_cache: collections.OrderedDict = dataclasses.field(
         default_factory=collections.OrderedDict, repr=False, compare=False)
+    # Per-model TT execution-plan registry (kernels.plan, DESIGN.md §10):
+    # built lazily on first use from the TTConfig + param dtype, primed
+    # from the param-spec tree so every TT layer's plan is resolved
+    # exactly once at build time — prefill/decode traces and the serving
+    # scheduler perform ZERO plan resolutions.
+    _plan_book: Any = dataclasses.field(
+        default=None, repr=False, compare=False)
+
+    @property
+    def plan_book(self) -> PlanBook:
+        if self._plan_book is None:
+            book = PlanBook.from_tt_config(self.cfg.tt, self.param_dtype)
+            book.prime(self.param_specs())
+            self._plan_book = book
+        return self._plan_book
 
     def _jit_get(self, key, build):
         """LRU lookup: hit refreshes recency, miss builds and may evict."""
@@ -123,7 +139,7 @@ class Model:
         positions = jnp.broadcast_to(jnp.arange(S), (B, S))
         for gi, g in enumerate(self.enc_groups):
             x, _ = group_fwd(params[f"enc_g{gi}"], cfg, g, x, positions,
-                             want_cache=False)
+                             want_cache=False, plans=self.plan_book)
         return rmsnorm_apply(params["enc_norm"], x, cfg.norm_eps)
 
     def _logits(self, params, x) -> jax.Array:
@@ -132,7 +148,7 @@ class Model:
         if cfg.tie_embeddings:
             logits = x @ params["embed"]["table"].T
         else:
-            logits = linear_apply(params["lm_head"], x, cfg.tt.backend_spec)
+            logits = linear_apply(params["lm_head"], x, self.plan_book)
         return shard_act(logits.astype(jnp.float32),
                          ("act_batch", None, "act_vocab"))
 
@@ -146,7 +162,8 @@ class Model:
         positions = jnp.broadcast_to(jnp.arange(S), (B, S))
         for gi, g in enumerate(self.groups):
             x, _ = group_fwd(params[f"g{gi}"], cfg, g, x, positions,
-                             enc_out=enc_out, want_cache=False, remat=remat)
+                             enc_out=enc_out, want_cache=False, remat=remat,
+                             plans=self.plan_book)
         logits = self._logits(params, x)
         tokens = batch["tokens"]
         off = S - tokens.shape[1]                    # frontend prefix length
@@ -170,7 +187,8 @@ class Model:
         T = batch.get("cache_len", S)
         for gi, g in enumerate(self.groups):
             x, c = group_fwd(params[f"g{gi}"], cfg, g, x, positions,
-                             enc_out=enc_out, want_cache=True, T_cache=T)
+                             enc_out=enc_out, want_cache=True, T_cache=T,
+                             plans=self.plan_book)
             cache[f"g{gi}"] = c
         logits = self._logits(params, x[:, -1:, :])
         return logits, cache
@@ -195,7 +213,8 @@ class Model:
         new_cache = {"pos": pos + inc}
         for gi, g in enumerate(self.groups):
             x, c = group_decode(params[f"g{gi}"], cfg, g, x,
-                                cache[f"g{gi}"], pos)
+                                cache[f"g{gi}"], pos,
+                                plans=self.plan_book)
             new_cache[f"g{gi}"] = c
         logits = self._logits(params, x)
         return logits, new_cache

@@ -113,9 +113,15 @@ def block_cache_shape(cfg: ModelConfig, bd: BlockDef, B: int, T: int,
 # ---------------------------------------------------------------------------
 
 def block_fwd(p, cfg: ModelConfig, bd: BlockDef, x, positions, *,
-              enc_out=None, want_cache: bool, T_cache: int = 0):
-    """Returns (x, cache_dict_or_None)."""
-    backend = cfg.tt.backend_spec
+              enc_out=None, want_cache: bool, T_cache: int = 0,
+              plans=None):
+    """Returns (x, cache_dict_or_None).
+
+    ``plans`` is the model's PlanBook (kernels.plan): every projection in
+    the block resolves its TT execution plan through it instead of a
+    backend string.  ``plans=None`` keeps the legacy stringly-typed path
+    (``cfg.tt.backend_spec``) for direct callers."""
+    backend = plans if plans is not None else cfg.tt.backend_spec
     cache = {}
     h = rmsnorm_apply(p["ln1"], x, cfg.norm_eps)
     if bd.mixer == "gqa":
@@ -148,8 +154,9 @@ def block_fwd(p, cfg: ModelConfig, bd: BlockDef, x, positions, *,
     x = x + y
     if bd.cross:
         h = rmsnorm_apply(p["ln_x"], x, cfg.norm_eps)
-        x = x + cross_attn(p["xattn"], cfg, h, *_enc_kv(p, cfg, bd, enc_out,
-                                                        cache, want_cache),
+        x = x + cross_attn(p["xattn"], cfg, h,
+                           *_enc_kv(p, cfg, bd, enc_out, cache, want_cache,
+                                    backend),
                            backend=backend)
     if bd.ffn != "none":
         h = rmsnorm_apply(p["ln2"], x, cfg.norm_eps)
@@ -161,8 +168,8 @@ def block_fwd(p, cfg: ModelConfig, bd: BlockDef, x, positions, *,
     return x, (cache if want_cache else None)
 
 
-def _enc_kv(p, cfg, bd, enc_out, cache, want_cache):
-    k, v = cross_kv(p["xattn"], cfg, enc_out, cfg.tt.backend_spec)
+def _enc_kv(p, cfg, bd, enc_out, cache, want_cache, backend):
+    k, v = cross_kv(p["xattn"], cfg, enc_out, backend)
     if want_cache:
         cache["xk"], cache["xv"] = k, v
     return k, v
@@ -172,8 +179,9 @@ def _enc_kv(p, cfg, bd, enc_out, cache, want_cache):
 # Block apply — single-token decode
 # ---------------------------------------------------------------------------
 
-def block_decode(p, cfg: ModelConfig, bd: BlockDef, x, cache: dict, pos):
-    backend = cfg.tt.backend_spec
+def block_decode(p, cfg: ModelConfig, bd: BlockDef, x, cache: dict, pos,
+                 plans=None):
+    backend = plans if plans is not None else cfg.tt.backend_spec
     h = rmsnorm_apply(p["ln1"], x, cfg.norm_eps)
     new_cache = dict(cache)
     if bd.mixer == "gqa":
@@ -209,9 +217,11 @@ def block_decode(p, cfg: ModelConfig, bd: BlockDef, x, cache: dict, pos):
 
 def group_fwd(params, cfg: ModelConfig, group: Group, x, positions, *,
               enc_out=None, want_cache: bool, T_cache: int = 0,
-              remat: bool = False):
+              remat: bool = False, plans=None):
     """Scan the period body over the group's stacked params.
-    Returns (x, stacked_caches_or_None)."""
+    Returns (x, stacked_caches_or_None).  ``plans`` (the model's PlanBook)
+    is closure-captured by the scan body: one build-time-resolved plan per
+    chain signature serves every scanned layer."""
     period, count = group
 
     def body(x, layer_params):
@@ -219,7 +229,7 @@ def group_fwd(params, cfg: ModelConfig, group: Group, x, positions, *,
         for i, bd in enumerate(period):
             x, c = block_fwd(layer_params[f"b{i}"], cfg, bd, x, positions,
                              enc_out=enc_out, want_cache=want_cache,
-                             T_cache=T_cache)
+                             T_cache=T_cache, plans=plans)
             if want_cache:
                 caches[f"b{i}"] = c
         return x, (caches if want_cache else None)
@@ -230,7 +240,8 @@ def group_fwd(params, cfg: ModelConfig, group: Group, x, positions, *,
     return x, caches
 
 
-def group_decode(params, cfg: ModelConfig, group: Group, x, caches, pos):
+def group_decode(params, cfg: ModelConfig, group: Group, x, caches, pos,
+                 plans=None):
     """Scan decode over stacked (params, caches).  Returns (x, new_caches)."""
     period, count = group
 
@@ -239,7 +250,7 @@ def group_decode(params, cfg: ModelConfig, group: Group, x, caches, pos):
         new = {}
         for i, bd in enumerate(period):
             x, c = block_decode(layer_params[f"b{i}"], cfg, bd, x,
-                                layer_caches[f"b{i}"], pos)
+                                layer_caches[f"b{i}"], pos, plans=plans)
             new[f"b{i}"] = c
         return x, new
 

@@ -38,6 +38,7 @@ def generate(model: Model, params, batch: dict, steps: int,
     if steps <= 0:
         return GenerateResult(jnp.zeros((B, 0), jnp.int32),
                               jnp.zeros((B, 0), jnp.float32))
+    model.plan_book          # resolve all TT plans before the serving loop
     cache_len = batch.get("cache_len")
     if cache_len is None:
         S = batch["tokens"].shape[1]
@@ -66,6 +67,7 @@ def generate_fixed(model: Model, params, batch: dict, steps: int,
         return GenerateResult(jnp.zeros((B, 0), jnp.int32),
                               jnp.zeros((B, 0), jnp.float32))
 
+    model.plan_book          # resolve all TT plans before the serving loop
     logits, cache = model.jitted_prefill(cache_len)(params, arrays)
     step_fn = model.jitted_decode_step()
 

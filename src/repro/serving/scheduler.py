@@ -85,6 +85,12 @@ class Scheduler:
             raise ValueError("num_slots must be >= 1")
         self.model = model
         self.params = params
+        # Touch the model's PlanBook up front: every TT layer's execution
+        # plan is resolved (or confirmed resolved) here, outside any jit
+        # trace, so admission prefills and the masked decode step perform
+        # ZERO plan resolutions — asserted by tests via
+        # kernels.plan.plan_resolutions() and the serve.py CI smoke.
+        model.plan_book
         self.num_slots = num_slots
         self.cache_len = cache_len
         self.eos_id = eos_id

@@ -10,5 +10,17 @@ if os.path.abspath(_SRC) not in [os.path.abspath(p) for p in sys.path]:
     sys.path.insert(0, os.path.abspath(_SRC))
 
 import jax  # noqa: E402
+import pytest  # noqa: E402
 
 jax.config.update("jax_enable_x64", False)
+
+
+@pytest.fixture(autouse=True)
+def _fresh_tt_plan_memo():
+    """The process-wide TT plan memo (kernels.plan) caches resolutions by
+    chain signature; tests that monkeypatch the fit model or redirect the
+    autotune cache must not see (or leave behind) memoized plans."""
+    from repro.kernels import plan
+    plan.clear_plan_memo()
+    yield
+    plan.clear_plan_memo()

@@ -97,13 +97,14 @@ def test_auto_falls_back_when_chain_busts_vmem(monkeypatch):
               + weights * 4) // 2
     assert fused_chain_batch_tile(plan.ns, plan.ms, plan.ranks,
                                   vmem_budget=budget) is None
-    # shrink the VMEM budget seen by the auto routing so the fit test
-    # fails for real, then drive the public auto path
-    import repro.kernels.ops as ops
+    # shrink the VMEM budget seen by the plan resolver's fit verdict so
+    # the test fails for real, then drive the public auto path
+    import repro.kernels.plan as ttplan
+    from repro.core.packing import chain_fit_report
     monkeypatch.setattr(
-        ops, "fused_chain_batch_tile",
-        lambda ns, ms, ranks, **kw: fused_chain_batch_tile(
-            ns, ms, ranks, vmem_budget=budget, **kw))
+        ttplan, "chain_fit_report",
+        lambda ns, ms, ranks, **kw: chain_fit_report(
+            ns, ms, ranks, **dict(kw, vmem_budget=budget)))
     tt_contract.reset_launch_counts()
     got = tt_forward(cores, x, backend="auto", interpret=True, tune="off")
     base = tt_forward(cores, x, backend="xla")

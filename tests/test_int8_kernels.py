@@ -197,10 +197,11 @@ def test_chain_fused_eligible_only_under_int8(monkeypatch):
                                   vmem_budget=budget,
                                   weight_itemsize=1) == 8
 
-    import repro.kernels.ops as ops
+    import repro.kernels.plan as ttplan
+    from repro.core.packing import chain_fit_report
     monkeypatch.setattr(
-        ops, "fused_chain_batch_tile",
-        lambda ns, ms, ranks, **kw: fused_chain_batch_tile(
+        ttplan, "chain_fit_report",
+        lambda ns, ms, ranks, **kw: chain_fit_report(
             ns, ms, ranks, **dict(kw, vmem_budget=budget)))
 
     tt_contract.reset_launch_counts()
