@@ -1,19 +1,23 @@
 """Model-level serving comparison: dense vs TT-compressed decode throughput,
-fixed-batch loop vs continuous-batching scheduler, swept over slot counts.
+fixed-batch loop vs continuous-batching scheduler (dense and block-paged
+pools), swept over slot counts, plus a shared-prefix workload measuring
+what hash-based prefix reuse buys at admission time.
 
 The paper's Fig 15 compares layer-level execution; this bench closes the
-loop at the model level on this host.  Two decode loops are measured
-post-compile at each slot count B:
+loop at the model level on this host.  Per slot count B three decode loops
+are measured post-compile:
 
   fixed — the lockstep loop (scalar cache position, jitted decode_step)
-  sched — the slot-pool scheduler at full occupancy (vector positions +
-          active mask through the same jitted step)
+  sched — the dense slot-pool scheduler at full occupancy
+  paged — the block-paged scheduler at full occupancy (same masked step,
+          attention through block-table gather/scatter)
 
-The sched/fixed ratio isolates the masking overhead of continuous batching
-(it should be ~1: the masked step does the same matmuls plus cheap
-per-row index compares), while dense-vs-TT at growing B shows where the
-batching win compounds with the weight-memory reduction.  Results land in
-``results/BENCH_serve.json``.
+Each scheduler record carries its KV-pool bytes and (paged) the block
+high-water mark — the dense-vs-paged pool-bytes column is the memory
+argument of DESIGN.md §7.  The prefix workload admits N requests sharing a
+long prompt prefix twice — prefix cache off vs on — and reports admission
+wall time and the measured hit rate; the reduction is the prefill compute
+the resident blocks saved.  Results land in ``results/BENCH_serve.json``.
 """
 from __future__ import annotations
 
@@ -33,6 +37,7 @@ from repro.serving.scheduler import Request, Scheduler
 from .common import header, row
 
 RESULTS = pathlib.Path(__file__).resolve().parent.parent / "results"
+BLOCK = 16
 
 
 def _fixed_throughput(model, params, B, S, steps):
@@ -52,13 +57,15 @@ def _fixed_throughput(model, params, B, S, steps):
     return B * steps / (time.perf_counter() - t0)
 
 
-def _sched_throughput(model, params, B, S, steps):
-    """Steady-state decode tok/s of the slot-pool scheduler at full
-    occupancy: B requests admitted, then ``steps`` masked decode steps with
-    no admissions/retirements in the timed window."""
+def _sched_throughput(model, params, B, S, steps, paged):
+    """Steady-state decode tok/s of a scheduler pool at full occupancy:
+    B requests admitted, then ``steps`` masked decode steps with no
+    admissions/retirements in the timed window.  Returns
+    (tok/s, pool stats)."""
     budget = steps + 4                     # stays active through the window
     sched = Scheduler(model, params, num_slots=B,
-                      cache_len=S + budget + 2)
+                      cache_len=S + budget + 2, paged=paged,
+                      block_size=BLOCK)
     for b in range(B):
         toks = concrete_batch(model.cfg, 1, S, seed=b)["tokens"]
         sched.submit(Request(uid=b, inputs={"tokens": toks},
@@ -68,7 +75,54 @@ def _sched_throughput(model, params, B, S, steps):
     t0 = time.perf_counter()
     for _ in range(steps):
         sched.step()
-    return B * steps / (time.perf_counter() - t0)
+    return B * steps / (time.perf_counter() - t0), sched.stats()
+
+
+def _prefix_workload(model, params, n_req, prefix_len, tail, steps):
+    """Admission wall time of n_req requests sharing a prefix_len-token
+    prompt prefix, paged pool, prefix cache off vs on.  The scheduler and
+    every jit entry are warmed by the first (off) pass + a throwaway
+    warm-up request per mode, so the measured difference is prefill
+    compute, not compiles."""
+    S = prefix_len + tail
+    cache_len = S + steps + 2
+    prefix = concrete_batch(model.cfg, 1, prefix_len, seed=0)["tokens"]
+
+    def prompts(seed0):
+        return [jnp.concatenate(
+            [prefix, concrete_batch(model.cfg, 1, tail,
+                                    seed=seed0 + i)["tokens"]], 1)
+            for i in range(n_req)]
+
+    out = {}
+    for mode, use_prefix in (("off", False), ("on", True)):
+        sched = Scheduler(model, params, num_slots=1, cache_len=cache_len,
+                          paged=True, block_size=BLOCK,
+                          prefix_cache=use_prefix)
+        # warm-up: compile prefill/splice/decode (+ resume on a hit),
+        # then zero the counters so only the timed pass is reported
+        for uid, toks in enumerate(prompts(100)):
+            sched.submit(Request(uid=-1 - uid, inputs={"tokens": toks},
+                                 max_new_tokens=steps))
+        sched.run()
+        sched.reset_stats()
+        # timed: admission wall only (submit + the admitting step), the
+        # drain decode excluded — this isolates the prefill compute the
+        # resident prefix blocks saved
+        wall = 0.0
+        for uid, toks in enumerate(prompts(200)):
+            sched.submit(Request(uid=uid, inputs={"tokens": toks},
+                                 max_new_tokens=steps))
+            t0 = time.perf_counter()
+            sched.step()
+            wall += time.perf_counter() - t0
+            sched.run()
+        st = sched.stats()
+        out[mode] = {"wall_s": wall, "hit_rate": st["prefix_hit_rate"],
+                     "prefill_tokens_skipped":
+                         st["prefill_tokens_skipped"]}
+    out["speedup"] = out["off"]["wall_s"] / out["on"]["wall_s"]
+    return out
 
 
 def run(quick: bool = False) -> None:
@@ -76,9 +130,10 @@ def run(quick: bool = False) -> None:
     slot_counts = [2] if quick else [1, 2, 4, 8]
     archs = ["deepseek_7b"] if quick else ["deepseek_7b", "qwen3_32b",
                                            "gemma3_4b"]
-    header("model-level serve: dense vs TT × fixed vs continuous-batching",
-           ["arch", "mode", "slots", "params", "fixed_tok_s", "sched_tok_s",
-            "sched_over_fixed"])
+    header("model-level serve: dense vs TT × fixed vs dense/paged pools",
+           ["arch", "mode", "slots", "fixed_tok_s", "sched_tok_s",
+            "paged_tok_s", "paged_over_sched", "pool_MB_dense",
+            "pool_MB_paged"])
     records = []
     for arch in archs:
         base = get_config(arch, "smoke")
@@ -95,17 +150,45 @@ def run(quick: bool = False) -> None:
             n_params = model.num_params()
             for B in slot_counts:
                 tps_f = _fixed_throughput(model, params, B, S, steps)
-                tps_s = _sched_throughput(model, params, B, S, steps)
-                print(row(arch, mode, B, n_params, f"{tps_f:.1f}",
-                          f"{tps_s:.1f}", f"{tps_s/tps_f:.2f}"))
-                records.append({"arch": arch, "mode": mode, "slots": B,
-                                "params": n_params,
-                                "fixed_tok_s": tps_f, "sched_tok_s": tps_s,
-                                "prompt_len": S, "steps": steps})
+                tps_s, st_s = _sched_throughput(model, params, B, S, steps,
+                                                paged=False)
+                tps_p, st_p = _sched_throughput(model, params, B, S, steps,
+                                                paged=True)
+                mb_s = st_s["kv_pool_bytes"] / 1e6
+                mb_p = st_p["kv_pool_bytes"] / 1e6
+                print(row(arch, mode, B, f"{tps_f:.1f}", f"{tps_s:.1f}",
+                          f"{tps_p:.1f}", f"{tps_p/tps_s:.2f}",
+                          f"{mb_s:.2f}", f"{mb_p:.2f}"))
+                records.append({
+                    "arch": arch, "mode": mode, "slots": B,
+                    "params": n_params, "prompt_len": S, "steps": steps,
+                    "fixed_tok_s": tps_f, "sched_tok_s": tps_s,
+                    "paged_tok_s": tps_p,
+                    "dense_pool_bytes": st_s["kv_pool_bytes"],
+                    "paged_pool_bytes": st_p["kv_pool_bytes"],
+                    "paged_block_high_water": st_p["block_high_water"],
+                    "paged_block_size": st_p["block_size"]})
+
+    # shared-prefix workload: measured prefill-time reduction from reuse
+    # (the prefix is long relative to the smoke model so the saved matmuls
+    # dominate the per-admission dispatch overhead)
+    px_arch = "deepseek_7b"
+    px_len = 128 if quick else 384
+    model = build(get_config(px_arch, "smoke"))
+    params = model.init(jax.random.PRNGKey(0))
+    px = _prefix_workload(model, params, n_req=2 if quick else 6,
+                          prefix_len=px_len, tail=16, steps=2)
+    print(f"\nshared-prefix workload ({px_arch}, {px_len}-token prefix): "
+          f"admission {px['off']['wall_s']*1e3:.0f}ms → "
+          f"{px['on']['wall_s']*1e3:.0f}ms "
+          f"({px['speedup']:.2f}x), hit rate {px['on']['hit_rate']:.2f}, "
+          f"{px['on']['prefill_tokens_skipped']} prefill tokens skipped")
     RESULTS.mkdir(exist_ok=True)
     out = RESULTS / "BENCH_serve.json"
     out.write_text(json.dumps(
-        {"backend": jax.default_backend(), "records": records}, indent=1))
+        {"backend": jax.default_backend(), "records": records,
+         "prefix_workload": {"arch": px_arch, "prefix_len": px_len,
+                             "block": BLOCK, **px}}, indent=1))
     print(f"wrote {out}")
 
 

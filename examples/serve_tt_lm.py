@@ -24,6 +24,9 @@ def main():
     ap.add_argument("--max-prompt", type=int, default=48)
     ap.add_argument("--decode", type=int, default=16)
     ap.add_argument("--temperature", type=float, default=0.8)
+    ap.add_argument("--paged", action="store_true",
+                    help="serve from the block-paged KV pool (DESIGN.md §7)")
+    ap.add_argument("--block-size", type=int, default=16)
     args = ap.parse_args()
 
     cfg = get_config(args.arch, "smoke",
@@ -34,8 +37,8 @@ def main():
 
     sched = Scheduler(model, params, num_slots=args.slots,
                       cache_len=args.max_prompt + args.decode,
-                      temperature=args.temperature,
-                      key=jax.random.PRNGKey(1))
+                      key=jax.random.PRNGKey(1), paged=args.paged,
+                      block_size=args.block_size)
     key = jax.random.PRNGKey(2)
     lens = []
     for uid in range(args.requests):
@@ -45,7 +48,8 @@ def main():
         key, sub = jax.random.split(key)
         toks = jax.random.randint(sub, (1, S), 0, cfg.vocab_size, jnp.int32)
         sched.submit(Request(uid=uid, inputs={"tokens": toks},
-                             max_new_tokens=args.decode))
+                             max_new_tokens=args.decode,
+                             temperature=args.temperature))
         lens.append(S)
 
     t0 = time.time()

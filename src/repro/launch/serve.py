@@ -11,10 +11,17 @@ scales).
 Continuous-batching simulation mode (--arrival-rate): requests arrive as a
 Poisson process into the slot-pool scheduler; reports steady-state tok/s
 and p50/p95 per-request latency, with compile time excluded via a warm-up
-request.
+request.  ``--paged`` switches the pool to the block-paged KV cache
+(DESIGN.md §7) and reports KV-pool bytes, the block high-water mark and
+the prefix-cache hit rate.
 
   PYTHONPATH=src python -m repro.launch.serve --arch deepseek-7b \
-      --arrival-rate 4 --max-requests 16 --slots 4 --prompt-len 16 --steps 8
+      --arrival-rate 4 --max-requests 16 --slots 4 --prompt-len 16 \
+      --steps 8 --paged
+
+Prefix-reuse smoke (--prefix-smoke): two requests sharing a long prompt
+prefix through the paged scheduler; asserts the second request shares >= 1
+resident block and skips the covered prefill compute.
 """
 from __future__ import annotations
 
@@ -37,20 +44,38 @@ def _percentile(xs: list[float], q: float) -> float:
     return float(np.percentile(np.asarray(xs), q)) if xs else float("nan")
 
 
+def _make_sched(model, params, args, cache_len):
+    return Scheduler(model, params, num_slots=args.slots,
+                     cache_len=cache_len, eos_id=args.eos_id,
+                     key=jax.random.PRNGKey(args.seed + 1),
+                     paged=args.paged, block_size=args.block_size,
+                     num_blocks=args.num_blocks)
+
+
+def _print_pool_stats(sched) -> None:
+    st = sched.stats()
+    print(f"kv pool: {st['kv_pool_bytes'] / 1e6:.2f} MB", end="")
+    if sched.paged:
+        print(f" | blocks: {st['num_blocks']}x{st['block_size']} tokens, "
+              f"high-water {st['block_high_water']} "
+              f"| prefix hit rate {st['prefix_hit_rate']:.2f} "
+              f"({st['prefill_tokens_skipped']} prefill tokens skipped)")
+    else:
+        print()
+
+
 def simulate(model, params, args) -> dict:
     """Poisson-arrival continuous-batching simulation (wall-clock driven)."""
     steps = args.steps
     cache_len = args.prompt_len + steps
-    sched = Scheduler(model, params, num_slots=args.slots,
-                      cache_len=cache_len, eos_id=args.eos_id,
-                      temperature=args.temperature,
-                      key=jax.random.PRNGKey(args.seed + 1))
+    sched = _make_sched(model, params, args, cache_len)
 
     def req(uid, seed):
         toks = concrete_batch(model.cfg, 1, args.prompt_len,
                               seed=seed)["tokens"]
         return Request(uid=uid, inputs={"tokens": toks},
-                       max_new_tokens=steps)
+                       max_new_tokens=steps,
+                       temperature=args.temperature, top_k=args.top_k)
 
     # warm-up: one throwaway request compiles prefill, splice, the masked
     # decode step and the pick — all shapes the simulation will reuse
@@ -58,8 +83,7 @@ def simulate(model, params, args) -> dict:
     sched.submit(req(-1, args.seed + 999))
     sched.run()
     compile_s = time.perf_counter() - t0
-    sched.finished.clear()
-    sched.tokens_out = sched.steps_run = 0
+    sched.reset_stats()                    # warm-up out of steady-state
     # every TT plan is resolved at model build / warm-up; the steady-state
     # run must never plan again (DESIGN.md §10)
     plans_warm = ttplan.plan_resolutions()
@@ -87,11 +111,13 @@ def simulate(model, params, args) -> dict:
     p50, p95 = _percentile(lats, 50), _percentile(lats, 95)
     print(f"arch={model.cfg.name} slots={args.slots} "
           f"arrival_rate={args.arrival_rate}/s requests={len(finished)} "
-          f"prompt={args.prompt_len} max_new={steps}")
+          f"prompt={args.prompt_len} max_new={steps} "
+          f"pool={'paged' if args.paged else 'dense'}")
     print(f"compile (warm-up request): {compile_s:.2f}s — excluded below")
     print(f"steady-state: {sched.tokens_out} tokens in {wall:.2f}s "
           f"({tok_s:.1f} tok/s), decode steps={sched.steps_run}")
     print(f"per-request latency: p50={p50*1e3:.1f}ms p95={p95*1e3:.1f}ms")
+    _print_pool_stats(sched)
     replans = ttplan.plan_resolutions() - plans_warm
     print(f"plan resolutions during steady state: {replans} "
           f"(model plans: {len(model.plan_book)})")
@@ -101,6 +127,62 @@ def simulate(model, params, args) -> dict:
             "serving must execute build-time plans only")
     return {"finished": finished, "tok_per_s": tok_s, "p50_s": p50,
             "p95_s": p95, "compile_s": compile_s, "replans": replans}
+
+
+def prefix_smoke(model, params, args) -> dict:
+    """Prefix-reuse smoke (CI): two requests whose prompts share a
+    ``--prefix-len``-token prefix through the paged scheduler.  The second
+    admission must find the prefix blocks resident — sharing >= 1 block,
+    skipping the covered prefill compute — and both outputs must match the
+    dense-scheduler reference token-for-token."""
+    from repro.serving.engine import generate_fixed
+
+    P, tail, steps = args.prefix_len, 16, args.steps
+    cache_len = P + tail + steps
+    prefix = concrete_batch(model.cfg, 1, P, seed=args.seed)["tokens"]
+    prompts = [
+        jnp.concatenate(
+            [prefix, concrete_batch(model.cfg, 1, tail,
+                                    seed=args.seed + 1 + i)["tokens"]], 1)
+        for i in range(2)]
+    sched = _make_sched(model, params, args, cache_len)
+    if not sched.paged or not sched.prefix_cache:
+        raise SystemExit("--prefix-smoke requires --paged and a "
+                         "prefix-shareable arch (full attention / MLA)")
+    t_admit = []
+    for uid, toks in enumerate(prompts):
+        t0 = time.perf_counter()
+        sched.submit(Request(uid=uid, inputs={"tokens": toks},
+                             max_new_tokens=steps))
+        sched.step()                      # admission (+ first decode step)
+        t_admit.append(time.perf_counter() - t0)
+    out = sched.run()
+    for f in sched.finished:
+        out[f.uid] = f
+    st = sched.stats()
+    shared_blocks = st["prefix_hit_tokens"] // sched.block
+    print(f"arch={model.cfg.name} prefix={P} tail={tail} "
+          f"block={sched.block}")
+    print(f"admission wall: first={t_admit[0]*1e3:.1f}ms "
+          f"(cold, compiles) second={t_admit[1]*1e3:.1f}ms")
+    print(f"prefix: {shared_blocks} shared blocks, "
+          f"{st['prefill_tokens_skipped']} prefill tokens skipped, "
+          f"hit rate {st['prefix_hit_rate']:.2f}")
+    _print_pool_stats(sched)
+    if shared_blocks < 1 or st["prefill_tokens_skipped"] < P - sched.block:
+        raise AssertionError(
+            f"prefix reuse failed: {shared_blocks} shared blocks, "
+            f"{st['prefill_tokens_skipped']} tokens skipped (prefix {P})")
+    for uid, toks in enumerate(prompts):
+        ref = generate_fixed(model, params,
+                             {"tokens": toks, "cache_len": cache_len},
+                             steps=steps)
+        if out[uid].tokens.tolist() != np.asarray(
+                ref.tokens)[0].tolist():
+            raise AssertionError(f"request {uid}: paged prefix-reuse "
+                                 "output diverged from the dense reference")
+    print("prefix-reuse smoke OK (outputs token-identical to dense)")
+    return {"shared_blocks": shared_blocks, **st}
 
 
 def fixed(model, params, args) -> dict:
@@ -160,6 +242,8 @@ def main(argv=None) -> dict:
                          "checkpoint offline and serves the int8-resident "
                          "kernel path (DESIGN.md §8)")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--top-k", type=int, default=0,
+                    help="per-request top-k sampling filter (0 = off)")
     # continuous-batching simulation
     ap.add_argument("--arrival-rate", type=float, default=None,
                     help="Poisson arrival rate (req/s); enables simulation")
@@ -167,6 +251,20 @@ def main(argv=None) -> dict:
     ap.add_argument("--slots", type=int, default=None,
                     help="slot-pool size (default: --batch)")
     ap.add_argument("--eos-id", type=int, default=None)
+    # block-paged KV cache (DESIGN.md §7)
+    ap.add_argument("--paged", action="store_true",
+                    help="serve from the block-paged KV pool with "
+                         "hash-based prefix reuse")
+    ap.add_argument("--block-size", type=int, default=64,
+                    help="tokens per KV block (--paged)")
+    ap.add_argument("--num-blocks", type=int, default=None,
+                    help="arena blocks (default: slots x ceil(cache/block) "
+                         "— admission is by free blocks, not slots)")
+    ap.add_argument("--prefix-smoke", action="store_true",
+                    help="CI smoke: two requests sharing a --prefix-len "
+                         "token prefix must share blocks and skip the "
+                         "covered prefill")
+    ap.add_argument("--prefix-len", type=int, default=128)
     ap.add_argument("--assert-no-replan", action="store_true",
                     help="fail if any TT execution plan is resolved during "
                          "the steady-state serving run (CI smoke for the "
@@ -189,6 +287,8 @@ def main(argv=None) -> dict:
         # offline checkpoint transform: int8 cores + per-core scales
         params = model.quantize_params(params)
 
+    if args.prefix_smoke:
+        return prefix_smoke(model, params, args)
     if args.arrival_rate is not None:
         return simulate(model, params, args)
     return fixed(model, params, args)

@@ -171,6 +171,166 @@ def gqa_decode_attn(p, cfg: ModelConfig, x, cache_k, cache_v, pos, *,
 
 
 # ---------------------------------------------------------------------------
+# Paged decode — block-table gather/scatter against a block arena
+# ---------------------------------------------------------------------------
+#
+# Arena layout (DESIGN.md §7): per cache leaf, [num_blocks + 1, block, ...]
+# at this (per-layer) level; logical token t of slot b lives at
+# (bt[b, t // block], t % block).  The last arena block is the write
+# sentinel: inactive slots are redirected there so a retired slot's stale
+# block table can never corrupt storage reused by another request.
+
+def gqa_decode_attn_paged(p, cfg: ModelConfig, x, arena_k, arena_v, bt, pos,
+                          active, *, window: int = 0,
+                          theta: float | None = None, backend: str = "xla"):
+    """One-token decode against a block-paged cache.
+
+    x [B,1,d]; arena_k/v [nb+1, block, KV, hd]; bt [B, max_blocks] int32;
+    pos [B] int32; active [B] bool.  Windowed layers address the arena
+    through the ring index ``pos % W`` (W = min(window, logical length)),
+    reusing the low entries of the same block table — ring blocks are
+    therefore never prefix-shared (the scheduler disables prefix caching
+    for windowed models).  Returns (y [B,1,d], new arenas).
+    """
+    B = x.shape[0]
+    nb1, blk, KV, hd = arena_k.shape
+    sentinel = nb1 - 1
+    theta = cfg.rope_theta if theta is None else theta
+    T_logical = bt.shape[1] * blk
+    W = min(window, T_logical) if window else T_logical
+    positions = pos.astype(jnp.int32)[:, None]            # [B,1]
+    q, k, v, _ = _qkv(p, cfg, x, positions, theta, backend)
+    pv = positions[:, 0]
+    wp = pv % W if window else pv
+    phys = jnp.take_along_axis(bt, (wp // blk)[:, None], 1)[:, 0]
+    phys = jnp.where(active, phys, sentinel)
+    arena_k = arena_k.at[phys, wp % blk].set(k[:, 0])
+    arena_v = arena_v.at[phys, wp % blk].set(v[:, 0])
+    nblk = -(-W // blk)
+    gk = arena_k[bt[:, :nblk]].reshape(B, nblk * blk, KV, hd)[:, :W]
+    gv = arena_v[bt[:, :nblk]].reshape(B, nblk * blk, KV, hd)[:, :W]
+    idx = jnp.arange(W)
+    if window:
+        abs_pos = pv[:, None] - jnp.mod(pv[:, None] - idx[None, :], W)
+        valid = abs_pos >= 0
+    else:
+        valid = idx[None, :] <= pv[:, None]
+    mask = valid[:, None, None, None, :]                  # [B,1,1,1,W]
+    ctx = _gqa_scores_ctx(q, gk, gv, mask, 1.0 / np.sqrt(cfg.head_dim))
+    y = linear_apply(p["o"], ctx, backend)
+    return y, arena_k, arena_v
+
+
+def mla_decode_attn_paged(p, cfg: ModelConfig, x, arena_ckv, arena_kr, bt,
+                          pos, active, backend="xla"):
+    """Absorbed-form MLA decode against block-paged latent arenas.
+
+    arena_ckv [nb+1, block, kv_lora], arena_kr [nb+1, block, rope_hd];
+    bt/pos/active as in gqa_decode_attn_paged.
+    """
+    m = cfg.mla
+    B = x.shape[0]
+    nb1, blk, _ = arena_ckv.shape
+    sentinel = nb1 - 1
+    positions = pos.astype(jnp.int32)[:, None]
+    q_nope, q_rope = _mla_q(p, cfg, x, positions, backend)
+    ckv, krope = _mla_compress(p, cfg, x, positions, backend)
+    pv = positions[:, 0]
+    phys = jnp.take_along_axis(bt, (pv // blk)[:, None], 1)[:, 0]
+    phys = jnp.where(active, phys, sentinel)
+    arena_ckv = arena_ckv.at[phys, pv % blk].set(ckv[:, 0])
+    arena_kr = arena_kr.at[phys, pv % blk].set(krope[:, 0])
+    T = bt.shape[1] * blk
+    cckv = arena_ckv[bt].reshape(B, T, m.kv_lora)
+    ckr = arena_kr[bt].reshape(B, T, m.rope_head_dim)
+    valid = (jnp.arange(T)[None, :] <= positions)[:, None, None, :]
+    ctx = _mla_absorbed_ctx(p, cfg, q_nope, q_rope, cckv, ckr, valid)
+    y = linear_apply(p["o"], ctx.astype(x.dtype), backend)
+    return y, arena_ckv, arena_kr
+
+
+# ---------------------------------------------------------------------------
+# Resume prefill — suffix attention over gathered prefix blocks (COW write)
+# ---------------------------------------------------------------------------
+#
+# The prefix-reuse admission path: a request whose prompt prefix is already
+# resident skips its prefill.  The suffix runs here — the logical cache is
+# gathered densely through the *source* block table, the suffix K/V is
+# computed and written into the dense buffer at its absolute positions,
+# and the buffer is scattered back through the *destination* table.  A
+# destination entry differing from its source entry IS the copy-on-write:
+# content flows old block → dense buffer → new block, with the overwritten
+# rows replaced in between.  Identical src/dst entries rewrite shared
+# blocks with bitwise-identical gathered content (a no-op by value).
+
+def _resume_dense(arena, src_b, S_pad):
+    """Gather the logical cache [1, T_max + S_pad, ...] via src_b, with
+    S_pad scratch rows appended so a dynamic_update_slice at start <= T_max
+    never clamps/misaligns."""
+    mb = src_b.shape[0]
+    blk = arena.shape[1]
+    dense = arena[src_b].reshape(1, mb * blk, *arena.shape[2:])
+    pad = jnp.zeros((1, S_pad) + dense.shape[2:], dense.dtype)
+    return jnp.concatenate([dense, pad], axis=1)
+
+
+def _resume_scatter(arena, dst_b, dense):
+    """Scatter the first T_max rows of the dense buffer back through the
+    destination table (sentinel-padded entries collapse onto the scratch
+    block)."""
+    mb = dst_b.shape[0]
+    blk = arena.shape[1]
+    blocks = dense[0, :mb * blk].reshape(mb, blk, *arena.shape[2:])
+    return arena.at[dst_b].set(blocks.astype(arena.dtype))
+
+
+def gqa_resume_attn(p, cfg: ModelConfig, x, arena_k, arena_v, src_b, dst_b,
+                    start, *, theta: float | None = None,
+                    backend: str = "xla"):
+    """Suffix prefill (x [1, S_pad, d] at absolute positions start + t)
+    attending to the gathered prefix + itself; writes the suffix K/V back
+    into the arenas through dst_b.  Full (non-windowed) attention only."""
+    B, S_pad, _ = x.shape
+    theta = cfg.rope_theta if theta is None else theta
+    positions = start + jnp.arange(S_pad)[None, :]        # [1, S_pad]
+    q, k, v, heads_ok = _qkv(p, cfg, x, positions, theta, backend)
+    dk = _resume_dense(arena_k, src_b, S_pad)
+    dv = _resume_dense(arena_v, src_b, S_pad)
+    dk = jax.lax.dynamic_update_slice(dk, k.astype(dk.dtype),
+                                      (0, start, 0, 0))
+    dv = jax.lax.dynamic_update_slice(dv, v.astype(dv.dtype),
+                                      (0, start, 0, 0))
+    kk, vv = _expand_and_shard_kv(cfg, dk, dv, heads_ok)
+    j = jnp.arange(kk.shape[1])[None, None, :]            # [1,1,T]
+    mask = (j <= positions[:, :, None])[:, None, None]    # [1,1,1,S,T]
+    ctx = _gqa_scores_ctx(q, kk, vv, mask, 1.0 / np.sqrt(cfg.head_dim))
+    y = linear_apply(p["o"], ctx, backend)
+    return y, _resume_scatter(arena_k, dst_b, dk), \
+        _resume_scatter(arena_v, dst_b, dv)
+
+
+def mla_resume_attn(p, cfg: ModelConfig, x, arena_ckv, arena_kr, src_b,
+                    dst_b, start, backend="xla"):
+    """MLA suffix prefill over gathered latent arenas (absorbed form)."""
+    B, S_pad, _ = x.shape
+    positions = start + jnp.arange(S_pad)[None, :]
+    q_nope, q_rope = _mla_q(p, cfg, x, positions, backend)
+    ckv, krope = _mla_compress(p, cfg, x, positions, backend)
+    dckv = _resume_dense(arena_ckv, src_b, S_pad)
+    dkr = _resume_dense(arena_kr, src_b, S_pad)
+    dckv = jax.lax.dynamic_update_slice(dckv, ckv.astype(dckv.dtype),
+                                        (0, start, 0))
+    dkr = jax.lax.dynamic_update_slice(dkr, krope.astype(dkr.dtype),
+                                       (0, start, 0))
+    j = jnp.arange(dckv.shape[1])[None, None, :]
+    valid = (j <= positions[:, :, None])[:, None]         # [1,1,S,T]
+    ctx = _mla_absorbed_ctx(p, cfg, q_nope, q_rope, dckv, dkr, valid)
+    y = linear_apply(p["o"], ctx.astype(x.dtype), backend)
+    return y, _resume_scatter(arena_ckv, dst_b, dckv), \
+        _resume_scatter(arena_kr, dst_b, dkr)
+
+
+# ---------------------------------------------------------------------------
 # Cross-attention (seamless decoder)
 # ---------------------------------------------------------------------------
 
@@ -263,6 +423,34 @@ def mla_self_attn(p, cfg: ModelConfig, x, positions, backend="xla"):
     return y, (ckv, krope)
 
 
+def _mla_absorbed_ctx(p, cfg: ModelConfig, q_nope, q_rope, cache_ckv,
+                      cache_krope, valid):
+    """Absorbed-form MLA scores/context over a latent cache.
+
+    q_nope/q_rope [B,S,H,·], cache_ckv [B,T,kv_lora],
+    cache_krope [B,T,rope_hd], valid broadcastable to [B,H,S,T].
+    Returns the flattened context [B, S, H·v_head_dim] (pre-o-projection).
+    """
+    m = cfg.mla
+    B, S = q_nope.shape[:2]
+    H = cfg.num_heads
+    w_up = p["kv_up"]["w"].reshape(m.kv_lora, H,
+                                   m.nope_head_dim + m.v_head_dim)
+    w_uk, w_uv = jnp.split(w_up, [m.nope_head_dim], axis=-1)
+    q_eff = jnp.einsum("bshn,lhn->bshl", q_nope.astype(jnp.float32),
+                       w_uk.astype(jnp.float32))          # [B,S,H,kv_lora]
+    scale = 1.0 / np.sqrt(m.nope_head_dim + m.rope_head_dim)
+    s = (jnp.einsum("bshl,btl->bhst", q_eff,
+                    cache_ckv.astype(jnp.float32))
+         + jnp.einsum("bshr,btr->bhst", q_rope.astype(jnp.float32),
+                      cache_krope.astype(jnp.float32))) * scale
+    probs = jax.nn.softmax(jnp.where(valid, s, NEG_INF), axis=-1)
+    ctx_l = jnp.einsum("bhst,btl->bshl", probs,
+                       cache_ckv.astype(jnp.float32))     # latent context
+    ctx = jnp.einsum("bshl,lhv->bshv", ctx_l, w_uv.astype(jnp.float32))
+    return ctx.reshape(B, S, -1)
+
+
 def mla_decode_attn(p, cfg: ModelConfig, x, cache_ckv, cache_krope, pos,
                     backend="xla"):
     """Absorbed-form MLA decode: scores/context live in the latent space, so
@@ -271,9 +459,7 @@ def mla_decode_attn(p, cfg: ModelConfig, x, cache_ckv, cache_krope, pos,
     cache_ckv [B, S_max, kv_lora], cache_krope [B, S_max, rope_hd].
     ``pos`` is a scalar or a per-row vector [B] (see gqa_decode_attn).
     """
-    m = cfg.mla
     B = x.shape[0]
-    H = cfg.num_heads
     per_slot = jnp.ndim(pos) == 1
     positions = (pos.astype(jnp.int32)[:, None] if per_slot
                  else jnp.full((B, 1), pos, jnp.int32))
@@ -289,26 +475,13 @@ def mla_decode_attn(p, cfg: ModelConfig, x, cache_ckv, cache_krope, pos,
             cache_ckv, ckv, pos, 1)
         cache_krope = jax.lax.dynamic_update_slice_in_dim(
             cache_krope, krope, pos, 1)
-    # absorb kv_up into the query / output sides
-    w_up = p["kv_up"]["w"].reshape(m.kv_lora, H,
-                                   m.nope_head_dim + m.v_head_dim)
-    w_uk, w_uv = jnp.split(w_up, [m.nope_head_dim], axis=-1)
-    q_eff = jnp.einsum("bshn,lhn->bshl", q_nope.astype(jnp.float32),
-                       w_uk.astype(jnp.float32))          # [B,1,H,kv_lora]
-    scale = 1.0 / np.sqrt(m.nope_head_dim + m.rope_head_dim)
-    s = (jnp.einsum("bshl,btl->bhst", q_eff,
-                    cache_ckv.astype(jnp.float32))
-         + jnp.einsum("bshr,btr->bhst", q_rope.astype(jnp.float32),
-                      cache_krope.astype(jnp.float32))) * scale
     T = cache_ckv.shape[1]
     if per_slot:
         valid = (jnp.arange(T)[None, :]
                  <= positions)[:, None, None, :]        # [B,1,1,T]
     else:
         valid = (jnp.arange(T) <= pos)[None, None, None, :]
-    probs = jax.nn.softmax(jnp.where(valid, s, NEG_INF), axis=-1)
-    ctx_l = jnp.einsum("bhst,btl->bshl", probs,
-                       cache_ckv.astype(jnp.float32))     # latent context
-    ctx = jnp.einsum("bshl,lhv->bshv", ctx_l, w_uv.astype(jnp.float32))
-    y = linear_apply(p["o"], ctx.reshape(B, 1, -1).astype(x.dtype), backend)
+    ctx = _mla_absorbed_ctx(p, cfg, q_nope, q_rope, cache_ckv, cache_krope,
+                            valid)
+    y = linear_apply(p["o"], ctx.astype(x.dtype), backend)
     return y, cache_ckv, cache_krope

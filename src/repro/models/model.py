@@ -22,8 +22,19 @@ from repro.kernels.plan import PlanBook
 from .layers import (embed_apply, embed_spec, linear_apply, linear_spec,
                      quantize_tt_params, rmsnorm_apply, rmsnorm_spec)
 from .spec import ParamSpec, abstract_tree, count_params, init_tree
-from .transformer import (BlockDef, Group, block_cache_shape, group_decode,
-                          group_fwd, group_spec)
+from .transformer import (BlockDef, Group, block_cache_kinds,
+                          block_cache_shape, block_paged_cache_shape,
+                          group_decode, group_fwd, group_resume, group_spec)
+
+
+def bucket_length(S: int, limit: int, floor: int = 16) -> int:
+    """Prompt-length bucket: next power of two >= S (min ``floor``),
+    clamped to ``limit`` — varied-length traffic compiles O(log limit)
+    prefill variants instead of one per distinct length."""
+    if S > limit:
+        raise ValueError(f"prompt length {S} exceeds cache length {limit}")
+    b = max(floor, 1 << max(S - 1, 0).bit_length())
+    return min(b, limit)
 
 
 @dataclasses.dataclass
@@ -50,6 +61,10 @@ class Model:
     # scheduler perform ZERO plan resolutions.
     _plan_book: Any = dataclasses.field(
         default=None, repr=False, compare=False)
+    # prefill trace/compile counter: every jitted-prefill build (exact or
+    # bucketed) increments it, so tests can assert bucketing bounds the
+    # number of compiled variants to O(log cache_len)
+    prefill_builds: int = 0
 
     @property
     def plan_book(self) -> PlanBook:
@@ -177,20 +192,35 @@ class Model:
 
     # ---------------------------------------------------------------- serving
     def prefill(self, params, batch) -> tuple[jax.Array, dict]:
-        """Process the full prompt; return (last-token logits, cache)."""
+        """Process the full prompt; return (last-token logits, cache).
+
+        ``batch["prompt_len"]`` (optional, a traced int32 scalar) marks the
+        true sequence length when the prompt was right-padded to a bucket
+        (``bucket_length``): the window ring and SSM state are built at the
+        true write head, ``cache["pos"]`` is the true length, and the
+        logits are taken at position prompt_len - 1 — padded junk rows in
+        full/MLA caches sit beyond ``pos`` and are masked by every decode
+        path."""
         cfg = self.cfg
         enc_out = self._encode(params, batch) if cfg.enc_dec else None
         x, _ = self._embed_inputs(params, batch)
         B, S, _ = x.shape
         positions = jnp.broadcast_to(jnp.arange(S), (B, S))
-        cache: dict = {"pos": jnp.asarray(S, jnp.int32)}
+        plen = batch.get("prompt_len")
+        cache: dict = {"pos": (jnp.asarray(S, jnp.int32) if plen is None
+                               else jnp.asarray(plen, jnp.int32))}
         T = batch.get("cache_len", S)
         for gi, g in enumerate(self.groups):
             x, c = group_fwd(params[f"g{gi}"], cfg, g, x, positions,
                              enc_out=enc_out, want_cache=True, T_cache=T,
-                             plans=self.plan_book)
+                             plans=self.plan_book, true_len=plen)
             cache[f"g{gi}"] = c
-        logits = self._logits(params, x[:, -1:, :])
+        if plen is None:
+            xl = x[:, -1:, :]
+        else:
+            xl = jax.lax.dynamic_slice_in_dim(
+                x, jnp.asarray(plen, jnp.int32) - 1, 1, axis=1)
+        logits = self._logits(params, xl)
         return logits, cache
 
     def decode_step(self, params, cache: dict, token: jax.Array,
@@ -204,17 +234,29 @@ class Model:
         freezes retired/free slots: their position does not advance, so
         they re-write the same (dead) cache row every step until an
         admission splices fresh state over them.
+
+        A cache carrying ``block_tables`` is block-paged (DESIGN.md §7):
+        attention leaves are arenas addressed through the per-slot table,
+        and inactive slots' writes are redirected to the sentinel block —
+        a retired slot's stale table must never touch storage reused by a
+        later request.
         """
         cfg = self.cfg
         pos = cache["pos"]
+        bt = cache.get("block_tables")
         x = embed_apply(params["embed"], token, cfg.d_model,
                         scale=cfg.tie_embeddings)
         inc = 1 if active is None else active.astype(pos.dtype)
         new_cache = {"pos": pos + inc}
+        paged = None
+        if bt is not None:
+            new_cache["block_tables"] = bt
+            act = (jnp.ones(pos.shape, bool) if active is None else active)
+            paged = (bt, act)
         for gi, g in enumerate(self.groups):
             x, c = group_decode(params[f"g{gi}"], cfg, g, x,
                                 cache[f"g{gi}"], pos,
-                                plans=self.plan_book)
+                                plans=self.plan_book, paged=paged)
             new_cache[f"g{gi}"] = c
         logits = self._logits(params, x)
         return logits, new_cache
@@ -235,6 +277,90 @@ class Model:
                     new[:, 0].astype(pool.dtype)), v, row_cache[k])
         return out
 
+    def splice_cache_paged(self, cache: dict, row_cache: dict, slot,
+                           blocks) -> dict:
+        """Paged twin of :meth:`splice_cache`: scatter a single-request
+        dense row cache (prefilled at the pool's logical ``cache_len``)
+        into the arena blocks named by ``blocks`` [max_blocks] int32 (the
+        slot's full table row, sentinel-padded past its allocation — the
+        junk scattered there collapses onto the scratch block).  'slot'
+        leaves (SSM state/conv, cross-attn KV) splice per-slot as before.
+        """
+        out = {"pos": cache["pos"].at[slot].set(
+            row_cache["pos"].astype(cache["pos"].dtype)),
+            "block_tables": cache["block_tables"].at[slot].set(
+                blocks.astype(cache["block_tables"].dtype))}
+        for gi, (period, _count) in enumerate(self.groups):
+            g_new = {}
+            for i, bd in enumerate(period):
+                kinds = block_cache_kinds(bd)
+                b_new = {}
+                for name, pool in cache[f"g{gi}"][f"b{i}"].items():
+                    row = row_cache[f"g{gi}"][f"b{i}"][name]
+                    if kinds[name] == "slot":
+                        b_new[name] = pool.at[:, slot].set(
+                            row[:, 0].astype(pool.dtype))
+                        continue
+                    blk = pool.shape[2]
+                    r = row[:, 0]                     # [layers, T_row, ...]
+                    T_row = r.shape[1]
+                    nblk = -(-T_row // blk)
+                    pad = nblk * blk - T_row
+                    if pad:
+                        r = jnp.pad(r, ((0, 0), (0, pad))
+                                    + ((0, 0),) * (r.ndim - 2))
+                    r = r.reshape(r.shape[0], nblk, blk, *r.shape[2:])
+                    b_new[name] = pool.at[:, blocks[:nblk]].set(
+                        r.astype(pool.dtype))
+                g_new[f"b{i}"] = b_new
+            out[f"g{gi}"] = g_new
+        return out
+
+    def prefill_resume(self, params, arrays, cache: dict, slot, src_blocks,
+                       dst_blocks, start, true_suf) -> tuple[jax.Array,
+                                                             dict]:
+        """Prefix-reuse admission (DESIGN.md §7): run prefill over only the
+        *suffix* tokens (``arrays["tokens"]`` [1, S_pad], right-padded,
+        ``true_suf`` real) starting at absolute position ``start``; the
+        covered prefix is gathered from resident arena blocks through
+        ``src_blocks`` and never recomputed.  The updated logical cache is
+        scattered back through ``dst_blocks`` — entries differing from
+        ``src_blocks`` are the copy-on-write blocks.  Returns (last-token
+        logits [1,1,V], updated pool cache)."""
+        cfg = self.cfg
+        x, _ = self._embed_inputs(params, arrays)
+        start = jnp.asarray(start, jnp.int32)
+        new_cache = {
+            "pos": cache["pos"].at[slot].set(
+                (start + true_suf).astype(cache["pos"].dtype)),
+            "block_tables": cache["block_tables"].at[slot].set(
+                dst_blocks.astype(cache["block_tables"].dtype))}
+        for gi, g in enumerate(self.groups):
+            x, c = group_resume(params[f"g{gi}"], cfg, g, x,
+                                cache[f"g{gi}"], src_blocks, dst_blocks,
+                                start, plans=self.plan_book)
+            new_cache[f"g{gi}"] = c
+        xl = jax.lax.dynamic_slice_in_dim(
+            x, jnp.asarray(true_suf, jnp.int32) - 1, 1, axis=1)
+        logits = self._logits(params, xl)
+        return logits, new_cache
+
+    @property
+    def supports_prefix_reuse(self) -> bool:
+        """Prefix blocks are shareable only when every mixer's cache rows
+        are pure functions of the token prefix *and* are never overwritten
+        in place: full attention and MLA qualify; window rings (contents
+        cycle), SSM state (whole-history summary) and enc-dec/multimodal
+        frontends do not."""
+        if self.cfg.enc_dec or self.cfg.frontend is not None:
+            return False
+        for period, _count in self.groups:
+            for bd in period:
+                if bd.mixer == "ssm" or bd.cross or (
+                        bd.mixer == "gqa" and bd.window):
+                    return False
+        return True
+
     # --------------------------------------------------- jitted entry points
     def jitted_prefill(self, cache_len: int | None = None,
                        shape_key=None):
@@ -247,12 +373,44 @@ class Model:
         prompt lengths would accumulate them beyond the LRU's reach —
         per-length entries make eviction actually free the executables."""
         def build():
+            self.prefill_builds += 1
+
             def prefill(params, arrays):
                 b = (dict(arrays, cache_len=cache_len)
                      if cache_len is not None else arrays)
                 return self.prefill(params, b)
             return jax.jit(prefill)
         return self._jit_get(("prefill", cache_len, shape_key), build)
+
+    def jitted_prefill_bucketed(self, cache_len: int):
+        """Host wrapper around jit(prefill) with prompt-length bucketing:
+        the token prompt is right-padded to the next power of two (min 16,
+        clamped to the cache length) and the true length rides along as a
+        traced scalar, so varied-length traffic compiles O(log cache_len)
+        prefill variants (``prefill_builds`` counts them) instead of one
+        per distinct prompt length."""
+        def build_for(S_pad):
+            def build():
+                self.prefill_builds += 1
+
+                def prefill(params, arrays, plen):
+                    return self.prefill(params, dict(
+                        arrays, cache_len=cache_len, prompt_len=plen))
+                return jax.jit(prefill)
+            return self._jit_get(("prefill_b", cache_len, S_pad), build)
+
+        def call(params, arrays):
+            toks = arrays["tokens"]
+            S_tok = int(toks.shape[1])
+            extra = (int(arrays["image_embeds"].shape[1])
+                     if self.cfg.frontend == "vit" else 0)
+            S_pad = bucket_length(S_tok, cache_len - extra)
+            if S_pad != S_tok:
+                toks = jnp.pad(toks, ((0, 0), (0, S_pad - S_tok)))
+                arrays = dict(arrays, tokens=toks)
+            return build_for(S_pad)(
+                params, arrays, jnp.asarray(extra + S_tok, jnp.int32))
+        return call
 
     def jitted_decode_step(self):
         """jit(decode_step) with the cache donated, cached per model."""
@@ -276,6 +434,39 @@ class Model:
             "splice",
             lambda: jax.jit(self.splice_cache, donate_argnums=(0,)))
 
+    def jitted_splice_paged(self):
+        """jit(splice_cache_paged), pool donated — admission scatters the
+        prefilled row into its arena blocks in place."""
+        return self._jit_get(
+            "splice_paged",
+            lambda: jax.jit(self.splice_cache_paged, donate_argnums=(0,)))
+
+    def jitted_prefill_resume(self, cache_len: int):
+        """Host wrapper around jit(prefill_resume) with the suffix bucketed
+        like :meth:`jitted_prefill_bucketed` (one trace per suffix bucket),
+        pool cache donated."""
+        def build_for(S_pad):
+            def build():
+                self.prefill_builds += 1
+                return jax.jit(self.prefill_resume, donate_argnums=(2,))
+            return self._jit_get(("resume", cache_len, S_pad), build)
+
+        def call(params, arrays, cache, slot, src_blocks, dst_blocks,
+                 start, true_suf):
+            toks = arrays["tokens"]
+            S_tok = int(toks.shape[1])
+            S_pad = bucket_length(S_tok, cache_len)
+            if S_pad != S_tok:
+                toks = jnp.pad(toks, ((0, 0), (0, S_pad - S_tok)))
+                arrays = dict(arrays, tokens=toks)
+            return build_for(S_pad)(
+                params, arrays, cache, jnp.asarray(slot, jnp.int32),
+                jnp.asarray(src_blocks, jnp.int32),
+                jnp.asarray(dst_blocks, jnp.int32),
+                jnp.asarray(start, jnp.int32),
+                jnp.asarray(true_suf, jnp.int32))
+        return call
+
     # --------------------------------------------------------------- caching
     def cache_shapes(self, B: int, T: int, enc_T: int = 0,
                      dtype=jnp.bfloat16) -> dict:
@@ -291,10 +482,50 @@ class Model:
                 g)
         return out
 
+    def paged_cache_shapes(self, num_slots: int, num_blocks: int,
+                           block: int, cache_len: int, enc_T: int = 0,
+                           dtype=jnp.bfloat16) -> dict:
+        """ShapeDtypeStruct tree of a block-paged pool (DESIGN.md §7):
+        attention leaves become arenas [layers, num_blocks + 1, block, ...]
+        shared by all slots through per-slot block tables; SSM/cross
+        leaves stay [layers, num_slots, ...]; ``pos`` is [num_slots] and
+        ``block_tables`` [num_slots, ceil(cache_len/block)]."""
+        cfg = self.cfg
+        max_blocks = -(-cache_len // block)
+        out: dict = {
+            "pos": jax.ShapeDtypeStruct((num_slots,), jnp.int32),
+            "block_tables": jax.ShapeDtypeStruct((num_slots, max_blocks),
+                                                 jnp.int32)}
+        for gi, (period, count) in enumerate(self.groups):
+            g = {}
+            for i, bd in enumerate(period):
+                g[f"b{i}"] = block_paged_cache_shape(
+                    cfg, bd, num_slots, num_blocks, block, cache_len,
+                    enc_T, dtype)
+            out[f"g{gi}"] = jax.tree.map(
+                lambda s: jax.ShapeDtypeStruct((count,) + s.shape, s.dtype),
+                g)
+        return out
+
     def init_cache(self, B: int, T: int, enc_T: int = 0,
-                   dtype=jnp.bfloat16) -> dict:
-        shapes = self.cache_shapes(B, T, enc_T, dtype)
-        return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), shapes)
+                   dtype=jnp.bfloat16, *, paged: bool = False,
+                   num_blocks: int | None = None, block: int = 64) -> dict:
+        """Zeroed decode cache.  ``paged=True`` builds the block-paged pool
+        instead (B = num_slots; block tables initialized to the sentinel),
+        the layout the continuous-batching scheduler serves — see
+        DESIGN.md §7 for the migration notes."""
+        if not paged:
+            shapes = self.cache_shapes(B, T, enc_T, dtype)
+            return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                                shapes)
+        if num_blocks is None:
+            num_blocks = B * (-(-T // block))
+        shapes = self.paged_cache_shapes(B, num_blocks, block, T, enc_T,
+                                         dtype)
+        cache = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), shapes)
+        cache["block_tables"] = jnp.full(shapes["block_tables"].shape,
+                                         num_blocks, jnp.int32)
+        return cache
 
 
 # ---------------------------------------------------------------------------

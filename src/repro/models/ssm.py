@@ -125,12 +125,18 @@ def ssd_chunked(x, dt, A, Bm, Cm, chunk: int):
     return y.astype(x.dtype), s_final
 
 
-def ssm_forward(p, cfg: ModelConfig, x, backend="xla"):
+def ssm_forward(p, cfg: ModelConfig, x, backend="xla", true_len=None):
     """Full-sequence forward.  x [B,S,d] →
     (y [B,S,d], final_state, conv_tail [B, K-1, conv_dim]).
 
     ``conv_tail`` is the last K-1 *pre-conv* inputs — the decode path's conv
     ring must start from these, not from zeros, for prefill→decode parity.
+
+    ``true_len`` (optional traced scalar) marks positions >= true_len as
+    right-padding (bucketed prefill): their ``dt`` is forced to 0, which
+    makes them exact no-ops on the recurrent state (decay exp(0·A)=1,
+    input dt·B·x=0), and the conv tail is sliced at the true length — the
+    returned state/tail are bitwise those of the unpadded sequence.
     """
     s = cfg.ssm
     d_inner, heads, _ = ssm_dims(cfg)
@@ -138,7 +144,13 @@ def ssm_forward(p, cfg: ModelConfig, x, backend="xla"):
     z, xc, Bc, Cc, dt = _split_in(cfg, zxbcdt)
     pre = jnp.concatenate([xc, Bc, Cc], -1)              # [B,S,conv_dim]
     K = s.d_conv
-    if pre.shape[1] >= K - 1:
+    if true_len is not None:
+        # left-pad K-1 zeros, then the K-1 rows ending at true_len are the
+        # tail (covers true_len < K-1 with the correct zero history)
+        pre_p = jnp.pad(pre, ((0, 0), (K - 1, 0), (0, 0)))
+        conv_tail = jax.lax.dynamic_slice_in_dim(
+            pre_p, jnp.asarray(true_len, jnp.int32), K - 1, axis=1)
+    elif pre.shape[1] >= K - 1:
         conv_tail = pre[:, pre.shape[1] - (K - 1):]
     else:
         conv_tail = jnp.pad(pre, ((0, 0), (K - 1 - pre.shape[1], 0), (0, 0)))
@@ -149,6 +161,9 @@ def ssm_forward(p, cfg: ModelConfig, x, backend="xla"):
     xh = xc.reshape(B_, S, heads, s.head_dim)
     xh = shard_act(xh, ("act_batch", None, "act_heads", None))
     dt_ = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    if true_len is not None:
+        pad_ok = (jnp.arange(S) < true_len)[None, :, None]    # [1,S,1]
+        dt_ = jnp.where(pad_ok, dt_, 0.0)
     A = -jnp.exp(p["A_log"].astype(jnp.float32))
     Bm = Bc.reshape(B_, S, s.n_groups, s.d_state)
     Cm = Cc.reshape(B_, S, s.n_groups, s.d_state)

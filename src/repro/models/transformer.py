@@ -19,8 +19,10 @@ import jax.numpy as jnp
 from repro.configs.base import ModelConfig
 from repro.distributed.sharding import shard_act
 from .attention import (cross_attn, cross_attn_spec, cross_kv,
-                        gqa_decode_attn, gqa_self_attn, gqa_spec,
-                        mla_decode_attn, mla_self_attn, mla_spec)
+                        gqa_decode_attn, gqa_decode_attn_paged,
+                        gqa_resume_attn, gqa_self_attn, gqa_spec,
+                        mla_decode_attn, mla_decode_attn_paged,
+                        mla_resume_attn, mla_self_attn, mla_spec)
 from .layers import mlp_apply, mlp_spec, rmsnorm_apply, rmsnorm_spec
 from .moe import moe_apply_ep as moe_apply, moe_spec
 from .spec import stack
@@ -108,19 +110,79 @@ def block_cache_shape(cfg: ModelConfig, bd: BlockDef, B: int, T: int,
     return out
 
 
+def block_cache_kinds(bd: BlockDef) -> dict[str, str]:
+    """Paging kind of each cache leaf of one block (DESIGN.md §7):
+
+      'paged' — token-indexed, block-pageable and prefix-shareable
+      'ring'  — window ring, block-pageable through the low table entries
+                but never prefix-shared (contents are overwritten in place)
+      'slot'  — fixed-size per-slot state (SSM state/conv tail, cross-attn
+                encoder KV): stays [layers, num_slots, ...], unpaged
+    """
+    out: dict[str, str] = {}
+    if bd.mixer == "gqa":
+        out["k"] = out["v"] = "ring" if bd.window else "paged"
+    elif bd.mixer == "mla":
+        out["ckv"] = out["krope"] = "paged"
+    elif bd.mixer == "ssm":
+        out["state"] = out["conv"] = "slot"
+    if bd.cross:
+        out["xk"] = out["xv"] = "slot"
+    return out
+
+
+def block_paged_cache_shape(cfg: ModelConfig, bd: BlockDef, num_slots: int,
+                            num_blocks: int, block: int, T: int, enc_T: int,
+                            dtype) -> dict:
+    """Paged twin of :func:`block_cache_shape`: pageable leaves become
+    arenas [num_blocks + 1, block, ...] (the +1 is the write sentinel),
+    'slot' leaves keep the dense per-slot layout."""
+    sd = jax.ShapeDtypeStruct
+    dense = block_cache_shape(cfg, bd, num_slots, T, enc_T, dtype)
+    kinds = block_cache_kinds(bd)
+    out = {}
+    for name, s in dense.items():
+        if kinds[name] == "slot":
+            out[name] = s
+        else:
+            out[name] = sd((num_blocks + 1, block) + s.shape[2:], s.dtype)
+    return out
+
+
 # ---------------------------------------------------------------------------
 # Block apply — full sequence (train / prefill / encoder)
 # ---------------------------------------------------------------------------
 
+def _ring_cache(k, W, true_len):
+    """Build a ring layout (position p at slot p % W) from full-sequence
+    k [B,S,...] with the write head at a *traced* true length — the
+    bucketed-prefill twin of the static roll/pad construction.  Slot s
+    receives the latest position p <= true_len-1 with p % W == s, or zeros
+    if no such position exists."""
+    L1 = jnp.asarray(true_len, jnp.int32) - 1
+    s_idx = jnp.arange(W)
+    p_idx = L1 - jnp.mod(L1 - s_idx, W)                   # [W]
+    valid = p_idx >= 0
+    g = jnp.take(k, jnp.clip(p_idx, 0), axis=1)
+    vshape = (1, W) + (1,) * (k.ndim - 2)
+    return jnp.where(valid.reshape(vshape), g, 0)
+
+
 def block_fwd(p, cfg: ModelConfig, bd: BlockDef, x, positions, *,
               enc_out=None, want_cache: bool, T_cache: int = 0,
-              plans=None):
+              plans=None, true_len=None):
     """Returns (x, cache_dict_or_None).
 
     ``plans`` is the model's PlanBook (kernels.plan): every projection in
     the block resolves its TT execution plan through it instead of a
     backend string.  ``plans=None`` keeps the legacy stringly-typed path
-    (``cfg.tt.backend_spec``) for direct callers."""
+    (``cfg.tt.backend_spec``) for direct callers.
+
+    ``true_len`` (optional traced scalar) marks positions >= true_len as
+    right-padding from prompt-length bucketing: the window ring is built
+    at the true write head, the SSM state treats padded steps as exact
+    no-ops, and full/MLA cache rows beyond it are junk masked downstream
+    by the cache position."""
     backend = plans if plans is not None else cfg.tt.backend_spec
     cache = {}
     h = rmsnorm_apply(p["ln1"], x, cfg.norm_eps)
@@ -131,7 +193,10 @@ def block_fwd(p, cfg: ModelConfig, bd: BlockDef, x, positions, *,
         if want_cache:
             W = min(bd.window, T_cache) if bd.window else T_cache
             S = k.shape[1]
-            if S >= W:
+            if bd.window and true_len is not None:
+                ck, cv = _ring_cache(k, W, true_len), _ring_cache(v, W,
+                                                                  true_len)
+            elif S >= W:
                 # ring slots: position p lives at slot p % W
                 ck = jnp.roll(k[:, -W:], S % W, axis=1)
                 cv = jnp.roll(v[:, -W:], S % W, axis=1)
@@ -147,7 +212,8 @@ def block_fwd(p, cfg: ModelConfig, bd: BlockDef, x, positions, *,
             cache["ckv"] = jnp.pad(ckv, ((0, 0), (0, padlen), (0, 0)))
             cache["krope"] = jnp.pad(krope, ((0, 0), (0, padlen), (0, 0)))
     else:  # ssm
-        y, state, conv_tail = ssm_forward(p["ssm"], cfg, h, backend)
+        y, state, conv_tail = ssm_forward(p["ssm"], cfg, h, backend,
+                                          true_len=true_len)
         if want_cache:
             cache["state"] = state
             cache["conv"] = conv_tail.astype(x.dtype)
@@ -180,18 +246,35 @@ def _enc_kv(p, cfg, bd, enc_out, cache, want_cache, backend):
 # ---------------------------------------------------------------------------
 
 def block_decode(p, cfg: ModelConfig, bd: BlockDef, x, cache: dict, pos,
-                 plans=None):
+                 plans=None, paged=None):
+    """``paged``: None for the dense slot-pool layout, else
+    ``(block_tables [B, max_blocks], active [B])`` — attention leaves are
+    block arenas addressed through the table; SSM/cross leaves are
+    slot-indexed in both layouts."""
     backend = plans if plans is not None else cfg.tt.backend_spec
     h = rmsnorm_apply(p["ln1"], x, cfg.norm_eps)
     new_cache = dict(cache)
     if bd.mixer == "gqa":
-        y, nk, nv = gqa_decode_attn(p["attn"], cfg, h, cache["k"], cache["v"],
-                                    pos, window=bd.window, theta=bd.theta,
-                                    backend=backend)
+        if paged is not None:
+            bt, active = paged
+            y, nk, nv = gqa_decode_attn_paged(
+                p["attn"], cfg, h, cache["k"], cache["v"], bt, pos, active,
+                window=bd.window, theta=bd.theta, backend=backend)
+        else:
+            y, nk, nv = gqa_decode_attn(p["attn"], cfg, h, cache["k"],
+                                        cache["v"], pos, window=bd.window,
+                                        theta=bd.theta, backend=backend)
         new_cache.update(k=nk, v=nv)
     elif bd.mixer == "mla":
-        y, nckv, nkr = mla_decode_attn(p["attn"], cfg, h, cache["ckv"],
-                                       cache["krope"], pos, backend=backend)
+        if paged is not None:
+            bt, active = paged
+            y, nckv, nkr = mla_decode_attn_paged(
+                p["attn"], cfg, h, cache["ckv"], cache["krope"], bt, pos,
+                active, backend=backend)
+        else:
+            y, nckv, nkr = mla_decode_attn(p["attn"], cfg, h, cache["ckv"],
+                                           cache["krope"], pos,
+                                           backend=backend)
         new_cache.update(ckv=nckv, krope=nkr)
     else:
         y, st, cv = ssm_decode(p["ssm"], cfg, h, cache["state"],
@@ -217,7 +300,7 @@ def block_decode(p, cfg: ModelConfig, bd: BlockDef, x, cache: dict, pos,
 
 def group_fwd(params, cfg: ModelConfig, group: Group, x, positions, *,
               enc_out=None, want_cache: bool, T_cache: int = 0,
-              remat: bool = False, plans=None):
+              remat: bool = False, plans=None, true_len=None):
     """Scan the period body over the group's stacked params.
     Returns (x, stacked_caches_or_None).  ``plans`` (the model's PlanBook)
     is closure-captured by the scan body: one build-time-resolved plan per
@@ -229,7 +312,8 @@ def group_fwd(params, cfg: ModelConfig, group: Group, x, positions, *,
         for i, bd in enumerate(period):
             x, c = block_fwd(layer_params[f"b{i}"], cfg, bd, x, positions,
                              enc_out=enc_out, want_cache=want_cache,
-                             T_cache=T_cache, plans=plans)
+                             T_cache=T_cache, plans=plans,
+                             true_len=true_len)
             if want_cache:
                 caches[f"b{i}"] = c
         return x, (caches if want_cache else None)
@@ -241,8 +325,10 @@ def group_fwd(params, cfg: ModelConfig, group: Group, x, positions, *,
 
 
 def group_decode(params, cfg: ModelConfig, group: Group, x, caches, pos,
-                 plans=None):
-    """Scan decode over stacked (params, caches).  Returns (x, new_caches)."""
+                 plans=None, paged=None):
+    """Scan decode over stacked (params, caches).  Returns (x, new_caches).
+    ``paged`` = (block_tables, active) switches attention leaves to the
+    block-arena layout (see block_decode)."""
     period, count = group
 
     def body(x, inp):
@@ -250,7 +336,66 @@ def group_decode(params, cfg: ModelConfig, group: Group, x, caches, pos,
         new = {}
         for i, bd in enumerate(period):
             x, c = block_decode(layer_params[f"b{i}"], cfg, bd, x,
-                                layer_caches[f"b{i}"], pos, plans=plans)
+                                layer_caches[f"b{i}"], pos, plans=plans,
+                                paged=paged)
+            new[f"b{i}"] = c
+        return x, new
+
+    x, new_caches = jax.lax.scan(body, x, (params, caches),
+                                 unroll=SCAN_UNROLL or 1)
+    return x, new_caches
+
+
+# ---------------------------------------------------------------------------
+# Resume prefill over paged caches (prefix-reuse admission)
+# ---------------------------------------------------------------------------
+
+def block_resume(p, cfg: ModelConfig, bd: BlockDef, x, cache: dict, src_b,
+                 dst_b, start, plans=None):
+    """Suffix prefill of one block against its paged arenas: attends to the
+    prefix gathered through ``src_b`` and scatters the updated logical
+    cache back through ``dst_b`` (COW where the tables differ).  Only
+    prefix-shareable mixers are legal here — the scheduler gates the
+    resume path on ``Model.supports_prefix_reuse``."""
+    backend = plans if plans is not None else cfg.tt.backend_spec
+    h = rmsnorm_apply(p["ln1"], x, cfg.norm_eps)
+    new_cache = dict(cache)
+    if bd.mixer == "gqa" and not bd.window:
+        y, nk, nv = gqa_resume_attn(p["attn"], cfg, h, cache["k"],
+                                    cache["v"], src_b, dst_b, start,
+                                    theta=bd.theta, backend=backend)
+        new_cache.update(k=nk, v=nv)
+    elif bd.mixer == "mla":
+        y, nckv, nkr = mla_resume_attn(p["attn"], cfg, h, cache["ckv"],
+                                       cache["krope"], src_b, dst_b, start,
+                                       backend=backend)
+        new_cache.update(ckv=nckv, krope=nkr)
+    else:
+        raise ValueError(
+            f"mixer {bd.mixer!r} (window={bd.window}) does not support "
+            "prefix-resume prefill")
+    x = x + y
+    if bd.ffn != "none":
+        h = rmsnorm_apply(p["ln2"], x, cfg.norm_eps)
+        if bd.ffn == "moe":
+            x = x + moe_apply(p["ffn"], cfg, h, backend)
+        else:
+            x = x + mlp_apply(p["ffn"], h, backend)
+    return x, new_cache
+
+
+def group_resume(params, cfg: ModelConfig, group: Group, x, caches, src_b,
+                 dst_b, start, plans=None):
+    """Scan resume prefill over stacked (params, caches)."""
+    period, count = group
+
+    def body(x, inp):
+        layer_params, layer_caches = inp
+        new = {}
+        for i, bd in enumerate(period):
+            x, c = block_resume(layer_params[f"b{i}"], cfg, bd, x,
+                                layer_caches[f"b{i}"], src_b, dst_b, start,
+                                plans=plans)
             new[f"b{i}"] = c
         return x, new
 

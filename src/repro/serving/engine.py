@@ -30,10 +30,15 @@ class GenerateResult:
 
 
 def generate(model: Model, params, batch: dict, steps: int,
-             temperature: float = 0.0, key: jax.Array | None = None
+             temperature: float = 0.0, key: jax.Array | None = None,
+             top_k: int = 0, paged: bool = False, block_size: int = 64,
+             num_blocks: int | None = None, prefix_cache: bool = True
              ) -> GenerateResult:
     """Decode ``steps`` tokens for every row of ``batch`` (no EOS: fixed
-    budget, so the result is rectangular)."""
+    budget, so the result is rectangular).  ``paged=True`` serves through
+    the block-paged KV pool (DESIGN.md §7) — output is token-identical to
+    the dense pool; ``temperature``/``top_k`` become per-request sampling
+    params on the scheduler's requests."""
     B = batch["tokens"].shape[0]
     if steps <= 0:
         return GenerateResult(jnp.zeros((B, 0), jnp.int32),
@@ -46,8 +51,10 @@ def generate(model: Model, params, batch: dict, steps: int,
             S += batch["image_embeds"].shape[1]
         cache_len = S + steps
     sched = Scheduler(model, params, num_slots=B, cache_len=cache_len,
-                      temperature=temperature, key=key)
-    for req in make_requests(batch, max_new_tokens=steps, key=key):
+                      key=key, paged=paged, block_size=block_size,
+                      num_blocks=num_blocks, prefix_cache=prefix_cache)
+    for req in make_requests(batch, max_new_tokens=steps, key=key,
+                             temperature=temperature, top_k=top_k):
         sched.submit(req)
     finished = sched.run()
     toks = np.stack([finished[b].tokens for b in range(B)])

@@ -1,0 +1,185 @@
+"""Host-side block-paged KV-cache management (DESIGN.md §7).
+
+The device side is a set of *arenas* — one per cache leaf, shaped
+``[layers, num_blocks + 1, block, ...]`` — plus a per-slot *block table*
+``[num_slots, max_blocks] int32`` mapping logical token-blocks to arena
+blocks (the extra arena block is a write sentinel: inactive slots and
+unallocated table entries point at it, so masked decode steps and splice
+padding never touch live storage).  This module owns everything the device
+does NOT see: the free list, per-block reference counts, the content-hash
+registry that enables prefix sharing, the LRU of retired-but-still-cached
+blocks, and copy-on-write bookkeeping.
+
+Every block is in exactly one of three states:
+
+  free       — on the free list, content meaningless
+  live       — refcount > 0; owned by one or more slots' block tables
+  evictable  — refcount == 0 but *published* (content-hashed): the block
+               still holds a reusable prompt prefix and is only reclaimed
+               (LRU) when the free list runs dry
+
+Prefix sharing is full-block granular: a block is published under the
+chained hash of every token up to and including its own
+(``chain_hashes``), so a hash hit guarantees the whole token prefix
+matches, not just the block's own span.  Shared blocks are immutable —
+a slot that must write into a shared (or published) block first asks
+``cow()`` for a private replacement and the device copies content through
+the gather(src-table)/scatter(dst-table) resume-prefill path.
+"""
+from __future__ import annotations
+
+import collections
+import hashlib
+
+import numpy as np
+
+
+def logical_blocks(n_tokens: int, block: int) -> int:
+    """Number of fixed-size blocks covering ``n_tokens`` positions."""
+    if n_tokens < 0:
+        raise ValueError("n_tokens must be >= 0")
+    return -(-n_tokens // block)
+
+
+def chain_hashes(tokens, block: int) -> list[bytes]:
+    """Chained content hash of every *full* block of a token sequence.
+
+    ``hashes[i]`` digests tokens ``[0, (i+1)*block)`` — a match therefore
+    certifies the entire prefix, which is what makes full blocks safely
+    shareable between requests."""
+    toks = np.ascontiguousarray(np.asarray(tokens, np.int64).reshape(-1))
+    out: list[bytes] = []
+    h = b""
+    for i in range(len(toks) // block):
+        h = hashlib.sha256(
+            h + toks[i * block:(i + 1) * block].tobytes()).digest()
+        out.append(h)
+    return out
+
+
+class BlockAllocator:
+    """Refcounted fixed-size block allocator with a content-hash registry.
+
+    The device sentinel block is NOT managed here — the allocator hands out
+    ids in ``[0, num_blocks)`` and the arenas are sized ``num_blocks + 1``.
+    """
+
+    def __init__(self, num_blocks: int, block_size: int):
+        if num_blocks < 1:
+            raise ValueError("num_blocks must be >= 1")
+        if block_size < 1:
+            raise ValueError("block_size must be >= 1")
+        self.num_blocks = num_blocks
+        self.block = block_size
+        self._free: list[int] = list(range(num_blocks - 1, -1, -1))
+        self._ref = np.zeros(num_blocks, np.int64)
+        self._hash_of: dict[int, bytes] = {}      # published block -> hash
+        self._by_hash: dict[bytes, int] = {}      # hash -> published block
+        # refcount-0 published blocks, LRU order (oldest first)
+        self._evictable: collections.OrderedDict[int, None] = \
+            collections.OrderedDict()
+
+    # ------------------------------------------------------------- accounting
+    @property
+    def free_count(self) -> int:
+        return len(self._free)
+
+    @property
+    def cached_count(self) -> int:
+        return len(self._evictable)
+
+    @property
+    def available(self) -> int:
+        """Blocks an ``alloc()`` can currently produce (free + evictable)."""
+        return len(self._free) + len(self._evictable)
+
+    @property
+    def in_use(self) -> int:
+        return int(np.count_nonzero(self._ref))
+
+    def refcount(self, bid: int) -> int:
+        self._check(bid)
+        return int(self._ref[bid])
+
+    def _check(self, bid: int) -> None:
+        if not 0 <= bid < self.num_blocks:
+            raise ValueError(f"block id {bid} out of range")
+
+    # ------------------------------------------------------------- lifecycle
+    def alloc(self) -> int:
+        """Take a private block (refcount 1), evicting the LRU published
+        block if the free list is dry."""
+        if self._free:
+            bid = self._free.pop()
+        elif self._evictable:
+            bid, _ = self._evictable.popitem(last=False)
+            del self._by_hash[self._hash_of.pop(bid)]
+        else:
+            raise RuntimeError("out of KV-cache blocks")
+        self._ref[bid] = 1
+        return bid
+
+    def incref(self, bid: int) -> None:
+        self._check(bid)
+        if self._ref[bid] == 0:
+            if bid not in self._evictable:
+                raise RuntimeError(f"incref of free block {bid}")
+            del self._evictable[bid]      # revived from the retired cache
+        self._ref[bid] += 1
+
+    def decref(self, bid: int) -> None:
+        self._check(bid)
+        if self._ref[bid] <= 0:
+            raise RuntimeError(f"double free of block {bid}")
+        self._ref[bid] -= 1
+        if self._ref[bid] == 0:
+            if bid in self._hash_of:      # published: keep content, evict LRU
+                self._evictable[bid] = None
+            else:
+                self._free.append(bid)
+
+    # --------------------------------------------------------- prefix registry
+    def publish(self, bid: int, h: bytes) -> int:
+        """Register a live block's content hash for sharing.  First writer
+        wins: if the hash is already mapped (another block holds identical
+        content, e.g. a COW copy) the existing mapping is kept and its
+        block id returned."""
+        self._check(bid)
+        if self._ref[bid] <= 0:
+            raise RuntimeError(f"publish of non-live block {bid}")
+        if h in self._by_hash:
+            return self._by_hash[h]
+        if bid in self._hash_of:          # re-publish under a new hash
+            del self._by_hash[self._hash_of[bid]]
+        self._hash_of[bid] = h
+        self._by_hash[h] = bid
+        return bid
+
+    def lookup(self, h: bytes) -> int | None:
+        """Non-acquiring probe (no refcount change)."""
+        return self._by_hash.get(h)
+
+    def acquire(self, h: bytes) -> int | None:
+        """Look a hash up and take a reference (reviving an evictable
+        block).  Returns None on miss."""
+        bid = self._by_hash.get(h)
+        if bid is None:
+            return None
+        self.incref(bid)
+        return bid
+
+    def cow(self, bid: int) -> int:
+        """Copy-on-write: called by an owner about to *write into* logical
+        content currently stored in ``bid``.  If the block is exclusively
+        owned and unpublished the write is safe in place and ``bid`` is
+        returned unchanged; otherwise a fresh private block is allocated,
+        the caller's reference on ``bid`` is dropped, and the new id is
+        returned (the device copies content via gather-src/scatter-dst)."""
+        self._check(bid)
+        if self._ref[bid] <= 0:
+            raise RuntimeError(f"cow of non-live block {bid}")
+        if self._ref[bid] == 1 and bid not in self._hash_of:
+            return bid
+        new = self.alloc()
+        self.decref(bid)
+        return new

@@ -1,22 +1,33 @@
 """Continuous-batching scheduler over the jitted prefill/decode entry points.
 
-One preallocated slot-pool KV cache (``Model.init_cache`` layout, batch dim
-= ``num_slots``) is stepped by a single jitted masked decode whose shape
-never changes, so arbitrary request arrival patterns are served without
-retracing.  Per-slot state threads through ``cache["pos"]`` as a vector
-[num_slots]; an ``active`` mask freezes retired/free slots (DESIGN.md §7).
+Two pool layouts serve the same masked decode step (DESIGN.md §7):
+
+  dense (default) — one preallocated slot-pool KV cache (``Model.init_cache``
+  layout, batch dim = ``num_slots``): every slot owns ``cache_len`` rows of
+  every leaf regardless of how many tokens it actually holds.
+
+  paged (``paged=True``) — fixed-size blocks in per-leaf arenas
+  ``[layers, num_blocks + 1, block, ...]`` plus a per-slot block table;
+  admission reserves ``ceil((prompt + max_new) / block)`` blocks from a
+  refcounted free list (``serving.paging.BlockAllocator``), so admission is
+  *by memory, not slot count*, a 16-token request holds one block where a
+  4096-token request holds 64, and requests whose prompt prefix hashes to
+  already-resident blocks share them copy-on-write and skip the covered
+  prefill compute entirely (``prefill_resume``).
 
 Lifecycle of a request:
 
-  submit() ─→ queue ─→ admission (free slot): single-request jitted prefill
-  at the pool's ``cache_len`` + ``Model.splice_cache`` of the row into the
-  pool (one in-place donated write) ─→ masked decode steps until EOS or the
-  token budget ─→ retirement frees the slot for the next queued request.
+  submit() ─→ queue ─→ admission (free slot + free blocks): bucketed
+  single-request jitted prefill (or suffix-only resume prefill on a prefix
+  hit) + a donated splice/scatter into the pool ─→ masked decode steps
+  until EOS or the token budget ─→ retirement frees the slot and decrefs
+  its blocks (published prefix blocks stay cached until evicted LRU).
 
 The first generated token comes from the prefill logits (same contract as
-``engine.generate``); sampling uses a per-request PRNG stream
-(``fold_in(base_key, uid)``), split once per *sampled* token — greedy
-decoding never consumes randomness, so temperature=0 results are
+``engine.generate``).  Sampling parameters ride on the ``Request``
+(``temperature``, ``top_k``); each sampled request draws from its own PRNG
+stream (``fold_in(base_key, uid)``), split once per *sampled* token —
+greedy requests never consume randomness, so temperature=0 results are
 key-independent.
 """
 from __future__ import annotations
@@ -30,17 +41,25 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models.model import Model
+from repro.models.transformer import block_cache_kinds
+from .paging import BlockAllocator, chain_hashes, logical_blocks
+
+NEG_INF = -1e30
 
 
 @dataclasses.dataclass
 class Request:
     """One generation request.  ``inputs`` are the per-request model inputs
     with leading batch dim 1 (at minimum ``tokens [1, S]``; multimodal
-    frontends add their embedding arrays)."""
+    frontends add their embedding arrays).  ``temperature``/``top_k`` are
+    per-request sampling parameters: temperature 0 is greedy (consumes no
+    PRNG), top_k 0 disables the top-k filter."""
     uid: int
     inputs: dict
     max_new_tokens: int
     key: jax.Array | None = None          # per-request sampling stream
+    temperature: float = 0.0
+    top_k: int = 0
 
 
 @dataclasses.dataclass
@@ -68,6 +87,8 @@ class _Slot:
     key: jax.Array | None
     prompt_len: int
     submit_time: float
+    temperature: float = 0.0
+    top_k: int = 0
     tokens: list[int] = dataclasses.field(default_factory=list)
     logprobs: list[float] = dataclasses.field(default_factory=list)
     last_tok: int = 0
@@ -79,8 +100,10 @@ class Scheduler:
     slots, ``run()`` drains."""
 
     def __init__(self, model: Model, params, num_slots: int, cache_len: int,
-                 *, eos_id: int | None = None, temperature: float = 0.0,
-                 key: jax.Array | None = None):
+                 *, eos_id: int | None = None, key: jax.Array | None = None,
+                 paged: bool = False, block_size: int = 64,
+                 num_blocks: int | None = None, prefix_cache: bool = True,
+                 bucket_prompts: bool = True):
         if num_slots < 1:
             raise ValueError("num_slots must be >= 1")
         self.model = model
@@ -92,10 +115,27 @@ class Scheduler:
         # kernels.plan.plan_resolutions() and the serve.py CI smoke.
         model.plan_book
         self.num_slots = num_slots
-        self.cache_len = cache_len
         self.eos_id = eos_id
-        self.temperature = float(temperature)
         self.base_key = key
+        self.paged = paged
+        self.bucket_prompts = bucket_prompts
+        if paged:
+            self.block = block_size
+            self.max_blocks = logical_blocks(cache_len, block_size)
+            # the pool's logical length is block-aligned so prefilled rows
+            # scatter into whole blocks
+            self.cache_len = self.max_blocks * block_size
+            self.num_blocks = (num_blocks if num_blocks is not None
+                               else num_slots * self.max_blocks)
+            self.allocator = BlockAllocator(self.num_blocks, block_size)
+            self.prefix_cache = prefix_cache and model.supports_prefix_reuse
+            self._slot_blocks: list[list[int] | None] = [None] * num_slots
+            self.block_hwm = 0                # live blocks high-water mark
+            self.prefix_hit_tokens = 0        # prompt tokens found resident
+            self.prefix_prompt_tokens = 0     # prompt tokens seen (paged)
+            self.prefill_tokens_skipped = 0   # prefill compute avoided
+        else:
+            self.cache_len = cache_len
         self.queue: deque[_Queued] = deque()
         self.slots: list[_Slot | None] = [None] * num_slots
         self.cache = None                 # pool; built from first prefill
@@ -104,8 +144,7 @@ class Scheduler:
         self.tokens_out = 0               # total generated tokens
         # shared across Scheduler instances of the same model: a server
         # creating one Scheduler per batch must not recompile the pick
-        self._pick = model._jit_get(("pick", self.temperature),
-                                    self._build_pick)
+        self._pick = model._jit_get("pick", self._build_pick)
 
     # ------------------------------------------------------------- interface
     def submit(self, req: Request, submit_time: float | None = None) -> None:
@@ -118,6 +157,11 @@ class Scheduler:
             raise ValueError(
                 f"request uid={req.uid}: prompt ({S}) + max_new_tokens "
                 f"({req.max_new_tokens}) exceeds cache_len={self.cache_len}")
+        if self.paged and logical_blocks(
+                S + req.max_new_tokens, self.block) > self.num_blocks:
+            raise ValueError(
+                f"request uid={req.uid} needs more blocks than the pool "
+                f"has ({self.num_blocks}) — it could never be admitted")
         self.queue.append(_Queued(
             req, S, time.perf_counter() if submit_time is None
             else submit_time))
@@ -130,13 +174,54 @@ class Scheduler:
     def idle(self) -> bool:
         return not self.queue and self.num_active == 0
 
+    def stats(self) -> dict:
+        """Pool/paging counters for reporting (serve.py, bench_serve_tt)."""
+        out = {"tokens_out": self.tokens_out, "steps_run": self.steps_run,
+               "kv_pool_bytes": self.kv_pool_bytes()}
+        if self.paged:
+            out.update(
+                block_size=self.block, num_blocks=self.num_blocks,
+                blocks_in_use=self.allocator.in_use,
+                block_high_water=self.block_hwm,
+                prefix_hit_tokens=self.prefix_hit_tokens,
+                prefix_prompt_tokens=self.prefix_prompt_tokens,
+                prefill_tokens_skipped=self.prefill_tokens_skipped,
+                prefix_hit_rate=(
+                    self.prefix_hit_tokens / self.prefix_prompt_tokens
+                    if self.prefix_prompt_tokens else 0.0))
+        return out
+
+    def kv_pool_bytes(self) -> int:
+        if self.cache is None:
+            return 0
+        return sum(leaf.nbytes for leaf in jax.tree.leaves(self.cache))
+
+    def reset_stats(self) -> None:
+        """Zero the reporting counters (after a warm-up request, so compile
+        effects stay out of steady-state numbers).  Owned here so every
+        counter added to :meth:`stats` gets excluded by construction."""
+        self.finished.clear()
+        self.tokens_out = self.steps_run = 0
+        if self.paged:
+            self.block_hwm = self.allocator.in_use
+            self.prefix_hit_tokens = self.prefix_prompt_tokens = 0
+            self.prefill_tokens_skipped = 0
+
     def step(self) -> list[FinishedRequest]:
-        """Admit into free slots, then run one masked decode step.  Returns
-        the requests retired during this call."""
+        """Admit into free slots (paged mode additionally requires the
+        block reservation to fit — admission by memory), then run one
+        masked decode step.  Returns the requests retired during this
+        call."""
         done: list[FinishedRequest] = []
+        blocked = False                    # head failure is slot-independent
         for i in range(self.num_slots):
-            if self.slots[i] is None and self.queue:
-                self._admit(self.queue.popleft(), i, done)
+            while self.queue and self.slots[i] is None:
+                if not self._try_admit(self.queue[0], i, done):
+                    blocked = True         # head doesn't fit: keep FIFO order
+                    break
+                self.queue.popleft()
+            if blocked:
+                break
         if self.num_active:
             self._decode_once(done)
         self.finished.extend(done)
@@ -150,33 +235,37 @@ class Scheduler:
                 out[f.uid] = f
         return out
 
-    # -------------------------------------------------------------- internal
+    # -------------------------------------------------------------- sampling
     def _build_pick(self):
-        temp = self.temperature
-
-        def pick(logits, keys):
-            """logits [B,V]; keys [B,2] uint32 (ignored when greedy) →
-            (tokens [B] int32, logprobs [B] float32)."""
+        def pick(logits, keys, temps, topk):
+            """logits [B,V]; keys [B,2] uint32 (ignored for greedy rows);
+            temps [B] float32; topk [B] int32 (0 = no filter) →
+            (tokens [B] int32, logprobs [B] float32).  One compiled pick
+            serves every mix of per-request sampling params."""
+            V = logits.shape[-1]
             lp = jax.nn.log_softmax(logits, -1)
-            if temp == 0.0:
-                tok = jnp.argmax(logits, -1)
-            else:
-                tok = jax.vmap(
-                    lambda k, lg: jax.random.categorical(k, lg / temp)
-                )(keys, logits)
-            tok = tok.astype(jnp.int32)
+            greedy = jnp.argmax(logits, -1)
+            srt = jnp.sort(logits, axis=-1)[:, ::-1]          # descending
+            kth = jnp.take_along_axis(
+                srt, jnp.clip(topk - 1, 0, V - 1)[:, None], 1)[:, 0]
+            keep = (topk[:, None] <= 0) | (logits >= kth[:, None])
+            safe_t = jnp.where(temps > 0, temps, 1.0)[:, None]
+            scaled = jnp.where(keep, logits, NEG_INF) / safe_t
+            sampled = jax.vmap(jax.random.categorical)(keys, scaled)
+            tok = jnp.where(temps > 0, sampled, greedy).astype(jnp.int32)
             return tok, jnp.take_along_axis(lp, tok[:, None], -1)[:, 0]
 
         return jax.jit(pick)
 
     def _req_key(self, req: Request) -> jax.Array | None:
-        if self.temperature == 0.0:
+        if req.temperature <= 0.0:
             return None                   # greedy: no randomness consumed
         if req.key is not None:
             return req.key
         base = (self.base_key if self.base_key is not None
                 else jax.random.PRNGKey(0))
-        return jax.random.fold_in(base, req.uid)
+        # uids may be negative (warm-up requests); fold_in wants uint32
+        return jax.random.fold_in(base, req.uid & 0xFFFFFFFF)
 
     def _next_key(self, slot: _Slot) -> jax.Array:
         slot.key, sub = jax.random.split(slot.key)
@@ -185,32 +274,61 @@ class Scheduler:
     def _pick_one(self, logits_row, slot: _Slot) -> tuple[int, float]:
         """Pick for a single request (admission path): same jitted pick as
         the batched decode, batch dim 1."""
-        if self.temperature == 0.0:
-            keys = jnp.zeros((1, 2), jnp.uint32)
-        else:
+        if slot.temperature > 0.0:
             keys = self._next_key(slot)[None]
-        tok, lp = self._pick(logits_row[None], keys)
+        else:
+            keys = jnp.zeros((1, 2), jnp.uint32)
+        tok, lp = self._pick(
+            logits_row[None], keys,
+            jnp.asarray([slot.temperature], jnp.float32),
+            jnp.asarray([slot.top_k], jnp.int32))
         return int(tok[0]), float(lp[0])
 
+    # ------------------------------------------------------------ pool build
     def _ensure_pool(self, row_cache: dict) -> None:
-        """Allocate the slot pool from the first prefilled row's cache tree
-        (guarantees dtype/shape agreement with what prefill produces; every
-        leaf except ``pos`` is [layers, 1, ...] → [layers, num_slots, ...])."""
+        """Allocate the pool from the first prefilled row's cache tree
+        (guarantees dtype/shape agreement with what prefill produces)."""
         if self.cache is not None:
             return
         B = self.num_slots
+        if not self.paged:
+            def expand(leaf):
+                return jnp.zeros(leaf.shape[:1] + (B,) + leaf.shape[2:],
+                                 leaf.dtype)
 
-        def expand(leaf):
-            return jnp.zeros(leaf.shape[:1] + (B,) + leaf.shape[2:],
-                             leaf.dtype)
+            self.cache = {"pos": jnp.zeros((B,), jnp.int32)}
+            for k, v in row_cache.items():
+                if k != "pos":
+                    self.cache[k] = jax.tree.map(expand, v)
+            return
+        nb1 = self.num_blocks + 1         # + write-sentinel block
+        cache: dict = {
+            "pos": jnp.zeros((B,), jnp.int32),
+            "block_tables": jnp.full((B, self.max_blocks), self.num_blocks,
+                                     jnp.int32)}
+        for gi, (period, _count) in enumerate(self.model.groups):
+            g = {}
+            for i, bd in enumerate(period):
+                kinds = block_cache_kinds(bd)
+                b = {}
+                for name, row in row_cache[f"g{gi}"][f"b{i}"].items():
+                    if kinds[name] == "slot":
+                        b[name] = jnp.zeros(
+                            row.shape[:1] + (B,) + row.shape[2:], row.dtype)
+                    else:                 # row [layers, 1, T, ...] → arena
+                        b[name] = jnp.zeros(
+                            (row.shape[0], nb1, self.block) + row.shape[3:],
+                            row.dtype)
+                g[f"b{i}"] = b
+            cache[f"g{gi}"] = g
+        self.cache = cache
 
-        self.cache = {"pos": jnp.zeros((B,), jnp.int32)}
-        for k, v in row_cache.items():
-            if k != "pos":
-                self.cache[k] = jax.tree.map(expand, v)
-
-    def _admit(self, q: _Queued, slot_idx: int,
-               done: list[FinishedRequest]) -> None:
+    # -------------------------------------------------------------- admission
+    def _try_admit(self, q: _Queued, slot_idx: int,
+                   done: list[FinishedRequest]) -> bool:
+        """Admit the queue head into ``slot_idx``.  Returns False when the
+        paged pool cannot reserve the request's blocks yet (the request
+        stays queued; retirements will free blocks)."""
         req = q.req
         if req.max_new_tokens == 0:       # nothing to generate: no prefill
             done.append(FinishedRequest(
@@ -218,12 +336,32 @@ class Scheduler:
                 logprobs=np.zeros((0,), np.float32), finish_reason="length",
                 prompt_len=q.prompt_len, submit_time=q.submit_time,
                 finish_time=time.perf_counter()))
-            return
-        logits, row_cache = self.model.jitted_prefill(
-            self.cache_len, shape_key=q.prompt_len)(self.params, req.inputs)
-        slot = _Slot(uid=req.uid, max_new=req.max_new_tokens,
-                     key=self._req_key(req),
-                     prompt_len=q.prompt_len, submit_time=q.submit_time)
+            return True
+        if self.paged:
+            return self._admit_paged(q, slot_idx, done)
+        self._admit_dense(q, slot_idx, done)
+        return True
+
+    def _row_prefill(self, inputs):
+        if self.bucket_prompts:
+            fn = self.model.jitted_prefill_bucketed(self.cache_len)
+            return fn(self.params, inputs)
+        return self.model.jitted_prefill(
+            self.cache_len,
+            shape_key=int(inputs["tokens"].shape[1]))(self.params, inputs)
+
+    def _start_slot(self, q: _Queued) -> _Slot:
+        req = q.req
+        return _Slot(uid=req.uid, max_new=req.max_new_tokens,
+                     key=self._req_key(req), prompt_len=q.prompt_len,
+                     submit_time=q.submit_time,
+                     temperature=float(req.temperature),
+                     top_k=int(req.top_k))
+
+    def _admit_dense(self, q: _Queued, slot_idx: int,
+                     done: list[FinishedRequest]) -> None:
+        logits, row_cache = self._row_prefill(q.req.inputs)
+        slot = self._start_slot(q)
         tok, lp = self._pick_one(logits[0, -1], slot)
         slot.tokens.append(tok)
         slot.logprobs.append(lp)
@@ -237,24 +375,120 @@ class Scheduler:
             self.cache, row_cache, jnp.asarray(slot_idx, jnp.int32))
         self.slots[slot_idx] = slot
 
+    def _admit_paged(self, q: _Queued, slot_idx: int,
+                     done: list[FinishedRequest]) -> bool:
+        req = q.req
+        S = q.prompt_len
+        blk = self.block
+        alloc = self.allocator
+        need = logical_blocks(min(S + req.max_new_tokens, self.cache_len),
+                              blk)
+        # ---- prefix lookup: acquire the longest chain of resident blocks
+        hashes: list[bytes] = []
+        shared: list[int] = []
+        if self.prefix_cache:
+            hashes = chain_hashes(np.asarray(req.inputs["tokens"]), blk)
+            for h in hashes:
+                bid = alloc.acquire(h)
+                if bid is None:
+                    break
+                shared.append(bid)
+        matched = len(shared)
+        covered = matched * blk
+        full_cover = matched > 0 and covered >= S
+        # resume must compute >= 1 token for logits: full coverage COWs the
+        # last matched block and recomputes only its final token
+        start = S - 1 if full_cover else covered
+        fresh_needed = need - matched + (1 if full_cover else 0)
+        # if we are the COW source's only owner, the COW's decref returns
+        # it to the pool mid-admission — credit it, or an idle pool could
+        # refuse a request that actually fits (admission livelock)
+        credit = (1 if full_cover and alloc.refcount(shared[-1]) == 1
+                  else 0)
+        if fresh_needed > alloc.available + credit:
+            for bid in shared:            # rollback: request stays queued
+                alloc.decref(bid)
+            return False
+        # ---- build source/destination tables (dst != src ⇒ COW block)
+        src = list(shared)
+        dst = list(shared)
+        if full_cover:
+            dst[-1] = alloc.cow(shared[-1])
+        fresh = [alloc.alloc() for _ in range(need - len(dst))]
+        src += fresh
+        dst += fresh
+        sentinel = self.num_blocks
+        src_t = np.full(self.max_blocks, sentinel, np.int32)
+        dst_t = np.full(self.max_blocks, sentinel, np.int32)
+        src_t[:len(src)] = src
+        dst_t[:len(dst)] = dst
+        # ---- prefill: full prompt (splice) or suffix only (resume)
+        slot = self._start_slot(q)
+        if start == 0:
+            logits, row_cache = self._row_prefill(req.inputs)
+            self._ensure_pool(row_cache)
+            self.cache = self.model.jitted_splice_paged()(
+                self.cache, row_cache, jnp.asarray(slot_idx, jnp.int32),
+                jnp.asarray(dst_t))
+        else:
+            suffix = {k: (v[:, start:] if k == "tokens" else v)
+                      for k, v in req.inputs.items()}
+            logits, self.cache = self.model.jitted_prefill_resume(
+                self.cache_len)(self.params, suffix, self.cache, slot_idx,
+                                src_t, dst_t, start, S - start)
+            self.prefill_tokens_skipped += start
+        # ---- publish full prompt blocks for future sharing
+        if self.prefix_cache:
+            for i in range(min(len(hashes), len(dst))):
+                alloc.publish(dst[i], hashes[i])
+        self._slot_blocks[slot_idx] = dst
+        self.prefix_prompt_tokens += S
+        self.prefix_hit_tokens += min(covered, S)
+        self.block_hwm = max(self.block_hwm, alloc.in_use)
+        # ---- first token
+        tok, lp = self._pick_one(logits[0, -1], slot)
+        slot.tokens.append(tok)
+        slot.logprobs.append(lp)
+        slot.last_tok = tok
+        self.tokens_out += 1
+        if self._finished_reason(slot):
+            done.append(self._retire(slot))
+            self._release_blocks(slot_idx)
+            return True                   # never occupied a decode slot
+        self.slots[slot_idx] = slot
+        return True
+
+    def _release_blocks(self, slot_idx: int) -> None:
+        blocks = self._slot_blocks[slot_idx]
+        if blocks is not None:
+            for bid in blocks:
+                self.allocator.decref(bid)
+            self._slot_blocks[slot_idx] = None
+
+    # ---------------------------------------------------------------- decode
     def _decode_once(self, done: list[FinishedRequest]) -> None:
         B = self.num_slots
         toks = np.zeros((B, 1), np.int32)
         active = np.zeros((B,), bool)
+        temps = np.zeros((B,), np.float32)
+        topk = np.zeros((B,), np.int32)
         for i, s in enumerate(self.slots):
             if s is not None:
                 toks[i, 0] = s.last_tok
                 active[i] = True
+                temps[i] = s.temperature
+                topk[i] = s.top_k
         logits, self.cache = self.model.jitted_decode_step_masked()(
             self.params, self.cache, jnp.asarray(toks), jnp.asarray(active))
-        if self.temperature == 0.0:
-            keys = jnp.zeros((B, 2), jnp.uint32)
-        else:
+        if any(s is not None and s.temperature > 0.0 for s in self.slots):
             keys = jnp.stack([
-                self._next_key(s) if s is not None
+                self._next_key(s) if s is not None and s.temperature > 0.0
                 else jnp.zeros((2,), jnp.uint32)
                 for s in self.slots])
-        tok, lp = self._pick(logits[:, 0, :], keys)
+        else:                             # all greedy: no splits consumed
+            keys = jnp.zeros((B, 2), jnp.uint32)
+        tok, lp = self._pick(logits[:, 0, :], keys, jnp.asarray(temps),
+                             jnp.asarray(topk))
         tok, lp = np.asarray(tok), np.asarray(lp)
         self.steps_run += 1
         for i, s in enumerate(self.slots):
@@ -266,6 +500,8 @@ class Scheduler:
             self.tokens_out += 1
             if self._finished_reason(s):
                 done.append(self._retire(s))
+                if self.paged:
+                    self._release_blocks(i)
                 self.slots[i] = None
 
     def _finished_reason(self, slot: _Slot) -> str | None:
@@ -287,9 +523,11 @@ class Scheduler:
 
 
 def make_requests(batch: dict, max_new_tokens: int,
-                  key: jax.Array | None = None) -> list[Request]:
+                  key: jax.Array | None = None, temperature: float = 0.0,
+                  top_k: int = 0) -> list[Request]:
     """Split a pre-batched input dict (engine.generate contract) into one
-    Request per row; row index becomes the uid."""
+    Request per row; row index becomes the uid.  The batch-level sampling
+    params become per-request params."""
     arrays = {k: v for k, v in batch.items() if k != "cache_len"}
     B = arrays["tokens"].shape[0]
     out = []
@@ -298,5 +536,6 @@ def make_requests(batch: dict, max_new_tokens: int,
             uid=b,
             inputs={k: v[b:b + 1] for k, v in arrays.items()},
             max_new_tokens=max_new_tokens,
-            key=None if key is None else jax.random.fold_in(key, b)))
+            key=None if key is None else jax.random.fold_in(key, b),
+            temperature=temperature, top_k=top_k))
     return out
