@@ -22,10 +22,17 @@ the prefix-cache hit rate.
 Prefix-reuse smoke (--prefix-smoke): two requests sharing a long prompt
 prefix through the paged scheduler; asserts the second request shares >= 1
 resident block and skips the covered prefill compute.
+
+Fault-injection smoke (--fault-smoke): a seeded ``serving.faults``
+FaultPlan (alloc failures, admission holds, a cancel, a live resize, a
+simulated restart) over a mixed-priority workload; asserts zero leaked
+blocks, zero TT plan re-resolutions and survivor token identity
+(DESIGN.md §11).
 """
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import time
 
 import jax
@@ -91,33 +98,49 @@ def simulate(model, params, args) -> dict:
     rng = np.random.default_rng(args.seed)
     arrivals = np.cumsum(rng.exponential(1.0 / args.arrival_rate,
                                          size=args.max_requests))
-    finished: list = []
     start = time.perf_counter()
     i = 0
-    while i < args.max_requests or not sched.idle:
-        now = time.perf_counter() - start
-        while i < args.max_requests and arrivals[i] <= now:
-            sched.submit(req(i, args.seed + i),
-                         submit_time=start + arrivals[i])
-            i += 1
-        if sched.idle:                      # ahead of the arrival process
-            time.sleep(max(0.0, arrivals[i] - (time.perf_counter() - start)))
-            continue
-        finished.extend(sched.step())
+    interrupted = False
+    try:
+        while i < args.max_requests or not sched.idle:
+            now = time.perf_counter() - start
+            while i < args.max_requests and arrivals[i] <= now:
+                sched.submit(req(i, args.seed + i),
+                             submit_time=start + arrivals[i])
+                i += 1
+            if sched.idle:                  # ahead of the arrival process
+                time.sleep(max(0.0,
+                               arrivals[i] - (time.perf_counter() - start)))
+                continue
+            sched.step()
+    except KeyboardInterrupt:
+        # graceful drain: retire everything still pending as "cancelled"
+        # (partial tokens kept) so blocks/slots free and the report below
+        # still prints — flagged partial — and we exit 0
+        interrupted = True
+        for q in list(sched.queue):
+            sched.cancel(q.req.uid)
+        for s in list(sched.slots):
+            if s is not None:
+                sched.cancel(s.uid)
     wall = time.perf_counter() - start
+    finished = list(sched.finished)
 
     lats = [f.finish_time - f.submit_time for f in finished]
     tok_s = sched.tokens_out / wall if wall > 0 else float("nan")
     p50, p95 = _percentile(lats, 50), _percentile(lats, 95)
+    partial = " (PARTIAL — interrupted)" if interrupted else ""
     print(f"arch={model.cfg.name} slots={args.slots} "
           f"arrival_rate={args.arrival_rate}/s requests={len(finished)} "
           f"prompt={args.prompt_len} max_new={steps} "
-          f"pool={'paged' if args.paged else 'dense'}")
+          f"pool={'paged' if args.paged else 'dense'}{partial}")
     print(f"compile (warm-up request): {compile_s:.2f}s — excluded below")
     print(f"steady-state: {sched.tokens_out} tokens in {wall:.2f}s "
           f"({tok_s:.1f} tok/s), decode steps={sched.steps_run}")
     print(f"per-request latency: p50={p50*1e3:.1f}ms p95={p95*1e3:.1f}ms")
     _print_pool_stats(sched)
+    if interrupted and sched.paged:
+        sched.allocator.assert_quiescent()  # interrupt must not leak blocks
     replans = ttplan.plan_resolutions() - plans_warm
     print(f"plan resolutions during steady state: {replans} "
           f"(model plans: {len(model.plan_book)})")
@@ -126,7 +149,8 @@ def simulate(model, params, args) -> dict:
             f"{replans} TT plan resolutions during the steady-state run — "
             "serving must execute build-time plans only")
     return {"finished": finished, "tok_per_s": tok_s, "p50_s": p50,
-            "p95_s": p95, "compile_s": compile_s, "replans": replans}
+            "p95_s": p95, "compile_s": compile_s, "replans": replans,
+            "interrupted": interrupted}
 
 
 def prefix_smoke(model, params, args) -> dict:
@@ -183,6 +207,60 @@ def prefix_smoke(model, params, args) -> dict:
                                  "output diverged from the dense reference")
     print("prefix-reuse smoke OK (outputs token-identical to dense)")
     return {"shared_blocks": shared_blocks, **st}
+
+
+def fault_smoke(model, params, args) -> dict:
+    """Fault-injection smoke (CI): a seeded FaultPlan — forced alloc
+    failures, an admission hold, one mid-stream cancel, one live resize
+    and one simulated restart — over a synthetic mixed-priority workload,
+    asserting the full invariant suite (``serving.faults``): zero leaked
+    blocks, zero plan re-resolutions, and every surviving request's
+    tokens bit-identical to an uninterrupted run."""
+    from repro.serving.faults import FaultPlan, run_with_faults
+
+    steps = args.steps
+    cache_len = args.prompt_len + steps
+    rng = np.random.default_rng(args.seed)
+    key = jax.random.PRNGKey(args.seed + 1)
+    reqs = []
+    for uid in range(args.max_requests):
+        toks = concrete_batch(model.cfg, 1, args.prompt_len,
+                              seed=args.seed + uid)["tokens"]
+        reqs.append(Request(
+            uid=uid, inputs={"tokens": toks}, max_new_tokens=steps,
+            temperature=args.temperature, top_k=args.top_k,
+            key=jax.random.fold_in(key, uid),
+            priority=int(rng.integers(0, 3)),
+            # one tight TTL exercises the deadline/expiry path (virtual
+            # step clock: deadline_s is in scheduler steps here)
+            deadline_s=3.0 if uid == 0 else None))
+    kw = dict(num_slots=args.slots, cache_len=cache_len, eos_id=args.eos_id,
+              key=key, paged=args.paged, block_size=args.block_size,
+              num_blocks=args.num_blocks)
+    # Poisson arrivals in scheduler steps; the last (high-priority, late)
+    # arrival lands mid-stream so the preemption path is exercised too
+    arrivals = np.cumsum(rng.poisson(1.0, size=len(reqs))).tolist()
+    reqs[-1] = dataclasses.replace(reqs[-1], priority=9, deadline_s=None)
+    plan = FaultPlan.random(
+        args.seed, horizon=max(4, steps),
+        uids=[r.uid for r in reqs[:-1]],    # keep the preemptor alive
+        resize_to=(args.slots + 1, None))
+    print(f"arch={model.cfg.name} slots={args.slots} "
+          f"requests={len(reqs)} pool={'paged' if args.paged else 'dense'}")
+    print(f"fault plan: alloc_fail@{sorted(plan.alloc_fail_steps)} "
+          f"hold@{sorted(plan.hold_steps)} cancels={list(plan.cancels)} "
+          f"resizes={list(plan.resizes)} "
+          f"restart@{sorted(plan.restart_steps)} arrivals@{arrivals}")
+    rep = run_with_faults(model, params, reqs, plan, sched_kwargs=kw,
+                          arrival_steps=arrivals)
+    print(f"drained in {rep.steps} steps: restarts={rep.restarts} "
+          f"preemptions={rep.preemptions} cancelled={rep.cancelled} "
+          f"expired={rep.expired} replans={rep.replans}")
+    print(f"fault-injection smoke OK ({len(rep.survivors)} survivors "
+          f"token-identical to the uninterrupted run)")
+    return {"steps": rep.steps, "restarts": rep.restarts,
+            "preemptions": rep.preemptions, "cancelled": rep.cancelled,
+            "expired": rep.expired, "survivors": len(rep.survivors)}
 
 
 def fixed(model, params, args) -> dict:
@@ -265,6 +343,10 @@ def main(argv=None) -> dict:
                          "token prefix must share blocks and skip the "
                          "covered prefill")
     ap.add_argument("--prefix-len", type=int, default=128)
+    ap.add_argument("--fault-smoke", action="store_true",
+                    help="CI smoke: seeded fault-injection run "
+                         "(serving.faults.FaultPlan) asserting zero leaked "
+                         "blocks, zero replans and survivor token identity")
     ap.add_argument("--assert-no-replan", action="store_true",
                     help="fail if any TT execution plan is resolved during "
                          "the steady-state serving run (CI smoke for the "
@@ -287,11 +369,19 @@ def main(argv=None) -> dict:
         # offline checkpoint transform: int8 cores + per-core scales
         params = model.quantize_params(params)
 
-    if args.prefix_smoke:
-        return prefix_smoke(model, params, args)
-    if args.arrival_rate is not None:
-        return simulate(model, params, args)
-    return fixed(model, params, args)
+    try:
+        if args.prefix_smoke:
+            return prefix_smoke(model, params, args)
+        if args.fault_smoke:
+            return fault_smoke(model, params, args)
+        if args.arrival_rate is not None:
+            return simulate(model, params, args)
+        return fixed(model, params, args)
+    except KeyboardInterrupt:
+        # simulate() drains gracefully on its own; this is the safety net
+        # for the other modes — exit 0 without a traceback
+        print("\ninterrupted — exiting")
+        return {"interrupted": True}
 
 
 if __name__ == "__main__":

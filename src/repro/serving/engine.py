@@ -32,13 +32,17 @@ class GenerateResult:
 def generate(model: Model, params, batch: dict, steps: int,
              temperature: float = 0.0, key: jax.Array | None = None,
              top_k: int = 0, paged: bool = False, block_size: int = 64,
-             num_blocks: int | None = None, prefix_cache: bool = True
+             num_blocks: int | None = None, prefix_cache: bool = True,
+             priority: int = 0, deadline_s: float | None = None
              ) -> GenerateResult:
     """Decode ``steps`` tokens for every row of ``batch`` (no EOS: fixed
     budget, so the result is rectangular).  ``paged=True`` serves through
     the block-paged KV pool (DESIGN.md §7) — output is token-identical to
     the dense pool; ``temperature``/``top_k`` become per-request sampling
-    params on the scheduler's requests."""
+    params on the scheduler's requests, ``priority``/``deadline_s`` their
+    lifecycle params (DESIGN.md §11) — a row retired past its TTL comes
+    back shorter than ``steps``, so the result is only rectangular when
+    every row survives; a ragged batch raises with the expired uids."""
     B = batch["tokens"].shape[0]
     if steps <= 0:
         return GenerateResult(jnp.zeros((B, 0), jnp.int32),
@@ -54,9 +58,17 @@ def generate(model: Model, params, batch: dict, steps: int,
                       key=key, paged=paged, block_size=block_size,
                       num_blocks=num_blocks, prefix_cache=prefix_cache)
     for req in make_requests(batch, max_new_tokens=steps, key=key,
-                             temperature=temperature, top_k=top_k):
+                             temperature=temperature, top_k=top_k,
+                             priority=priority, deadline_s=deadline_s):
         sched.submit(req)
     finished = sched.run()
+    short = [b for b in range(B) if len(finished[b].tokens) != steps]
+    if short:
+        raise RuntimeError(
+            f"rows {short} retired early "
+            f"({[finished[b].finish_reason for b in short]}) — generate() "
+            f"returns rectangular batches; drive the Scheduler directly "
+            f"for deadline-bound workloads")
     toks = np.stack([finished[b].tokens for b in range(B)])
     lps = np.stack([finished[b].logprobs for b in range(B)])
     return GenerateResult(jnp.asarray(toks), jnp.asarray(lps))

@@ -1,0 +1,272 @@
+"""Deterministic fault-injection harness for the serving stack (DESIGN.md §11).
+
+A :class:`FaultPlan` is a *seeded, fully pre-computed* schedule of faults
+keyed by scheduler step index: forced allocation failures, admission
+holds, mid-decode cancellations, live pool resizes, and simulated process
+restarts (snapshot → tear down → :meth:`Scheduler.from_snapshot`).  Because
+the plan is data — not wall-clock races — every scenario replays exactly,
+which is what lets :func:`run_with_faults` assert hard invariants after
+the dust settles:
+
+  * zero leaked blocks (``BlockAllocator.assert_quiescent``)
+  * zero TT plan re-resolutions (``kernels.plan.plan_resolutions``)
+  * every *surviving* request (not cancelled / expired) finishes with
+    tokens bit-identical to an uninterrupted run of the same requests
+
+The scheduler runs on a virtual step clock (one "second" per tick), so
+deadlines fire at deterministic steps and restarts preserve remaining
+TTLs without any real-time dependence.
+
+Disk persistence (:func:`save_snapshot` / :func:`load_snapshot`) follows
+``training/checkpoint.py``: one ``.npz`` of array leaves + a JSON
+manifest, written to a temp path and renamed into place, so a torn write
+can never be restored.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import shutil
+
+import numpy as np
+
+from repro.kernels import plan as ttplan
+from .scheduler import FinishedRequest, Request, Scheduler
+
+
+# ----------------------------------------------------------------- fault plan
+@dataclasses.dataclass(frozen=True)
+class FaultPlan:
+    """A deterministic schedule of faults, keyed by scheduler step index.
+
+    ``alloc_fail_steps`` — steps during which the allocator refuses fresh
+    allocations (``refuse_fresh``): admissions defer exactly as under pool
+    exhaustion, nothing mid-admission to roll back.
+    ``hold_steps`` — steps during which admission is gated entirely
+    (``hold_admissions``), modelling an external backpressure signal.
+    ``cancels`` — ``(step, uid)`` pairs: ``cancel(uid)`` fires before the
+    step runs (a no-op if the request already finished).
+    ``resizes`` — ``(step, num_slots, num_blocks)`` triples (either value
+    may be None to leave that axis alone).
+    ``restart_steps`` — before each of these steps the scheduler is
+    snapshotted, discarded, and rebuilt via ``Scheduler.from_snapshot``.
+    """
+    alloc_fail_steps: frozenset = frozenset()
+    hold_steps: frozenset = frozenset()
+    cancels: tuple = ()                   # ((step, uid), ...)
+    resizes: tuple = ()                   # ((step, slots|None, blocks|None), ...)
+    restart_steps: frozenset = frozenset()
+
+    @classmethod
+    def random(cls, seed: int, *, horizon: int, uids=(),
+               n_alloc_fail: int = 2, n_hold: int = 1, n_cancel: int = 1,
+               resize_to: tuple | None = None,
+               with_restart: bool = True) -> "FaultPlan":
+        """Sample a plan from a seeded generator.  ``horizon`` bounds the
+        step indices faults land on (keep it well under the expected drain
+        length so every fault actually fires)."""
+        rng = np.random.default_rng(seed)
+        steps = lambda n: frozenset(
+            int(s) for s in rng.choice(horizon, size=min(n, horizon),
+                                       replace=False))
+        cancels = ()
+        if n_cancel and len(uids):
+            picked = rng.choice(len(uids), size=min(n_cancel, len(uids)),
+                                replace=False)
+            cancels = tuple(
+                (int(rng.integers(1, horizon)), int(uids[i]))
+                for i in picked)
+        resizes = ()
+        if resize_to is not None:
+            resizes = ((int(rng.integers(1, horizon)),
+                        resize_to[0], resize_to[1]),)
+        return cls(
+            alloc_fail_steps=steps(n_alloc_fail),
+            hold_steps=steps(n_hold),
+            cancels=cancels, resizes=resizes,
+            restart_steps=(frozenset({int(rng.integers(1, horizon))})
+                           if with_restart else frozenset()))
+
+
+# -------------------------------------------------------------------- harness
+@dataclasses.dataclass
+class FaultReport:
+    finished: dict                        # uid -> FinishedRequest
+    baseline: dict                        # uid -> FinishedRequest (no faults)
+    survivors: list                      # uids checked for token identity
+    steps: int
+    restarts: int
+    preemptions: int
+    cancelled: int
+    expired: int
+    replans: int
+
+
+def step_clock(state: dict):
+    """A virtual clock for Scheduler(clock=...): one unit per tick."""
+    return lambda: float(state["t"])
+
+
+def run_with_faults(model, params, requests: list[Request], plan: FaultPlan,
+                    *, sched_kwargs: dict, max_steps: int = 2000,
+                    arrival_steps: list[int] | None = None,
+                    baseline: dict | None = None,
+                    check_identity: bool = True) -> FaultReport:
+    """Drive a scheduler through ``plan`` on a virtual step clock, then
+    assert the invariant suite.  ``sched_kwargs`` configures both the
+    faulted scheduler and (unless ``baseline`` results are passed in) an
+    uninterrupted reference run of the same requests.
+
+    ``arrival_steps`` (aligned with ``requests``, default all-0) staggers
+    submissions across steps — a late high-priority arrival is how the
+    preemption path gets exercised.  Token streams are arrival-invariant
+    (per-request PRNG streams), so the baseline submits everything
+    upfront regardless.
+
+    Surviving requests — everything not retired with ``finish_reason`` in
+    {"cancelled", "deadline"} — must match the baseline bit-for-bit.
+    """
+    if baseline is None:
+        ref = Scheduler(model, params, **sched_kwargs)
+        for r in requests:
+            # the reference never expires anything: strip TTLs so faulted
+            # slowdowns (holds, restarts) don't change its outcomes
+            ref.submit(dataclasses.replace(r, deadline_s=None))
+        baseline = ref.run()
+        if ref.paged:
+            ref.allocator.assert_quiescent()
+
+    plans_warm = ttplan.plan_resolutions()
+    clk = {"t": 0.0}
+    sched = Scheduler(model, params, clock=step_clock(clk), **sched_kwargs)
+    pending = sorted(
+        zip(arrival_steps or [0] * len(requests), requests),
+        key=lambda p: p[0])
+
+    due_cancels = [(int(s), int(uid)) for s, uid in plan.cancels]
+    resizes_by_step: dict[int, tuple] = {
+        int(s): (slots, blocks) for s, slots, blocks in plan.resizes}
+
+    step = 0
+    restarts = 0
+    while pending or not sched.idle:
+        if step >= max_steps:
+            raise RuntimeError(
+                f"fault run did not drain within {max_steps} steps "
+                f"(queue={len(sched.queue)}, active={sched.num_active})")
+        if step in plan.restart_steps:
+            snap = sched.snapshot()
+            carry = (sched.preemptions, sched.cancelled, sched.expired)
+            del sched
+            sched = Scheduler.from_snapshot(model, params, snap,
+                                            clock=step_clock(clk))
+            assert (sched.preemptions, sched.cancelled,
+                    sched.expired) == carry
+            restarts += 1
+        while pending and pending[0][0] <= step:
+            sched.submit(pending.pop(0)[1])
+        still_due = []
+        for s, uid in due_cancels:
+            if s > step:
+                still_due.append((s, uid))
+            elif not sched.cancel(uid) and any(
+                    r.uid == uid for _, r in pending):
+                still_due.append((s, uid))    # not arrived yet: retry later
+        due_cancels = still_due
+        if step in resizes_by_step:
+            slots, blocks = resizes_by_step[step]
+            sched.resize(num_slots=slots, num_blocks=blocks)
+        if sched.paged:
+            sched.allocator.refuse_fresh = step in plan.alloc_fail_steps
+        sched.hold_admissions = step in plan.hold_steps
+        clk["t"] += 1.0
+        sched.step()
+        step += 1
+
+    # ------------------------------------------------------------ invariants
+    if sched.paged:
+        sched.allocator.refuse_fresh = False
+        sched.allocator.assert_quiescent()
+    replans = ttplan.plan_resolutions() - plans_warm
+    if replans:
+        raise AssertionError(
+            f"{replans} TT plan re-resolutions during the fault run — "
+            f"faulted paths must reuse the primed PlanBook")
+    finished = {f.uid: f for f in sched.finished}
+    missing = {r.uid for r in requests} - set(finished)
+    if missing:
+        raise AssertionError(f"requests lost by the fault run: "
+                             f"{sorted(missing)}")
+    survivors = [u for u, f in finished.items()
+                 if f.finish_reason not in ("cancelled", "deadline")]
+    if check_identity:
+        for u in survivors:
+            got, ref_f = finished[u], baseline[u]
+            if not np.array_equal(got.tokens, ref_f.tokens):
+                raise AssertionError(
+                    f"survivor uid={u} tokens diverged from the "
+                    f"uninterrupted run: {got.tokens.tolist()} != "
+                    f"{ref_f.tokens.tolist()}")
+    return FaultReport(
+        finished=finished, baseline=baseline, survivors=survivors,
+        steps=step, restarts=restarts, preemptions=sched.preemptions,
+        cancelled=sched.cancelled, expired=sched.expired, replans=replans)
+
+
+# ------------------------------------------------------------------- on disk
+_ARR = "__arr__"
+
+
+def _split_arrays(obj, arrays: dict, path: str):
+    """Recursively replace ndarray leaves with ``{"__arr__": key}`` markers,
+    collecting the arrays keyed by their tree path."""
+    if isinstance(obj, np.ndarray):
+        arrays[path] = obj
+        return {_ARR: path}
+    if isinstance(obj, dict):
+        return {k: _split_arrays(v, arrays, f"{path}/{k}")
+                for k, v in obj.items()}
+    if isinstance(obj, (list, tuple)):
+        return [_split_arrays(v, arrays, f"{path}/{i}")
+                for i, v in enumerate(obj)]
+    if isinstance(obj, (np.integer,)):
+        return int(obj)
+    if isinstance(obj, (np.floating,)):
+        return float(obj)
+    return obj
+
+
+def _join_arrays(obj, arrays: dict):
+    if isinstance(obj, dict):
+        if set(obj) == {_ARR}:
+            return arrays[obj[_ARR]]
+        return {k: _join_arrays(v, arrays) for k, v in obj.items()}
+    if isinstance(obj, list):
+        return [_join_arrays(v, arrays) for v in obj]
+    return obj
+
+
+def save_snapshot(path: str, snap: dict) -> str:
+    """Persist a ``Scheduler.snapshot()`` atomically: array leaves in
+    ``arrays.npz``, everything else in ``manifest.json`` with per-leaf
+    markers.  Returns the final directory."""
+    tmp = path + f".tmp.{os.getpid()}"
+    os.makedirs(tmp, exist_ok=True)
+    arrays: dict[str, np.ndarray] = {}
+    manifest = _split_arrays(snap, arrays, "snap")
+    np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    if os.path.exists(path):
+        shutil.rmtree(path)
+    os.rename(tmp, path)
+    return path
+
+
+def load_snapshot(path: str) -> dict:
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    with np.load(os.path.join(path, "arrays.npz")) as npz:
+        arrays = {k: npz[k] for k in npz.files}
+    return _join_arrays(manifest, arrays)

@@ -78,6 +78,16 @@ class BlockAllocator:
         # refcount-0 published blocks, LRU order (oldest first)
         self._evictable: collections.OrderedDict[int, None] = \
             collections.OrderedDict()
+        # pending-shrink fence: when set, ids >= _target are never handed
+        # out again; live ones drain through decref and the shrink
+        # completes via finalize_shrink() (the scheduler slices the device
+        # arenas in the same breath)
+        self._target: int | None = None
+        # fault injection (serving.faults.FaultPlan): while set, the
+        # allocator reports zero availability and prefix lookups miss, so
+        # admissions defer exactly as under real pool exhaustion — no
+        # mid-admission exception, nothing to roll back
+        self.refuse_fresh = False
 
     # ------------------------------------------------------------- accounting
     @property
@@ -90,12 +100,50 @@ class BlockAllocator:
 
     @property
     def available(self) -> int:
-        """Blocks an ``alloc()`` can currently produce (free + evictable)."""
+        """Blocks an ``alloc()`` can currently produce (free + evictable).
+        Zero while fault injection refuses fresh allocations."""
+        if self.refuse_fresh:
+            return 0
         return len(self._free) + len(self._evictable)
 
     @property
     def in_use(self) -> int:
         return int(np.count_nonzero(self._ref))
+
+    @property
+    def capacity(self) -> int:
+        """Admission-visible pool size: the pending-shrink target when a
+        resize is draining, else ``num_blocks`` — requests sized against
+        the old capacity could never be admitted after the shrink lands."""
+        return self._target if self._target is not None else self.num_blocks
+
+    @property
+    def pending_target(self) -> int | None:
+        return self._target
+
+    @property
+    def shrink_ready(self) -> bool:
+        """True when a pending shrink has drained (no live block at or
+        above the fence) and :meth:`finalize_shrink` may run."""
+        return (self._target is not None
+                and not np.any(self._ref[self._target:]))
+
+    def assert_quiescent(self) -> None:
+        """Leak check for a drained scheduler: every block must be either
+        free or retired-but-cached (refcount 0, published), and the three
+        states must tile the pool exactly.  Raises AssertionError with the
+        full ledger on any leak."""
+        leaked = [int(b) for b in np.nonzero(self._ref)[0]]
+        if leaked:
+            raise AssertionError(
+                f"leaked blocks (refcount > 0 after drain): "
+                f"{[(b, int(self._ref[b])) for b in leaked]}")
+        if self._free and min(self._free) < 0:
+            raise AssertionError("negative id on the free list")
+        if self.free_count + self.cached_count != self.num_blocks:
+            raise AssertionError(
+                f"block ledger does not tile the pool: free={self.free_count}"
+                f" cached={self.cached_count} != total={self.num_blocks}")
 
     def refcount(self, bid: int) -> int:
         self._check(bid)
@@ -109,6 +157,9 @@ class BlockAllocator:
     def alloc(self) -> int:
         """Take a private block (refcount 1), evicting the LRU published
         block if the free list is dry."""
+        if self.refuse_fresh:
+            raise RuntimeError("allocation refused (fault injection) — "
+                               "admission must defer, not alloc")
         if self._free:
             bid = self._free.pop()
         elif self._evictable:
@@ -133,6 +184,12 @@ class BlockAllocator:
             raise RuntimeError(f"double free of block {bid}")
         self._ref[bid] -= 1
         if self._ref[bid] == 0:
+            if self._target is not None and bid >= self._target:
+                # draining a pending shrink: the id dies here instead of
+                # returning to circulation
+                if bid in self._hash_of:
+                    del self._by_hash[self._hash_of.pop(bid)]
+                return
             if bid in self._hash_of:      # published: keep content, evict LRU
                 self._evictable[bid] = None
             else:
@@ -161,7 +218,11 @@ class BlockAllocator:
 
     def acquire(self, h: bytes) -> int | None:
         """Look a hash up and take a reference (reviving an evictable
-        block).  Returns None on miss."""
+        block).  Returns None on miss — including while fault injection
+        refuses allocations, so an admission under injection defers
+        cleanly instead of reaching ``cow()``/``alloc()``."""
+        if self.refuse_fresh:
+            return None
         bid = self._by_hash.get(h)
         if bid is None:
             return None
@@ -183,3 +244,83 @@ class BlockAllocator:
         new = self.alloc()
         self.decref(bid)
         return new
+
+    # ---------------------------------------------------------------- resize
+    def resize(self, num_blocks: int) -> bool:
+        """Live-resize the pool (Scheduler.resize drives this and reshapes
+        the device arenas to match).  Growth applies immediately: new ids
+        join the free list.  A shrink drops free and evictable ids at or
+        above the new target at once and *fences* the rest — live blocks
+        above the target drain through their normal decrefs and are never
+        re-issued; call :meth:`finalize_shrink` once :attr:`shrink_ready`.
+        Returns True when the resize is fully applied."""
+        if num_blocks < 1:
+            raise ValueError("num_blocks must be >= 1")
+        if num_blocks >= self.num_blocks:
+            if num_blocks > self.num_blocks:          # grow
+                # append descending so pops hand out ascending ids, matching
+                # the construction-time order
+                self._free.extend(
+                    range(num_blocks - 1, self.num_blocks - 1, -1))
+                self._ref = np.concatenate(
+                    [self._ref,
+                     np.zeros(num_blocks - self.num_blocks, np.int64)])
+                self.num_blocks = num_blocks
+            if self._target is not None:
+                # cancelling a pending shrink: ids dropped while the fence
+                # was up (filtered free ids, decref'd-dead ids) return to
+                # circulation so the ledger tiles the pool again
+                have = (set(self._free) | set(self._evictable)
+                        | {int(b) for b in np.nonzero(self._ref)[0]})
+                self._free.extend(sorted(
+                    set(range(self.num_blocks)) - have, reverse=True))
+                self._target = None
+            return True
+        self._target = num_blocks
+        self._free = [b for b in self._free if b < num_blocks]
+        for bid in [b for b in self._evictable if b >= num_blocks]:
+            del self._evictable[bid]
+            del self._by_hash[self._hash_of.pop(bid)]
+        if self.shrink_ready:
+            self.finalize_shrink()
+            return True
+        return False
+
+    def finalize_shrink(self) -> None:
+        """Complete a drained shrink: truncate the refcount ledger to the
+        fence.  The caller owns slicing the device arenas in lockstep."""
+        if self._target is None:
+            return
+        if not self.shrink_ready:
+            live = np.nonzero(self._ref[self._target:])[0] + self._target
+            raise RuntimeError(
+                f"shrink to {self._target} not drained: live ids "
+                f"{[int(b) for b in live]}")
+        self._ref = self._ref[:self._target]
+        self.num_blocks = self._target
+        self._target = None
+
+    # -------------------------------------------------------------- snapshot
+    def state(self) -> dict:
+        """JSON-safe snapshot of the full ledger (free-list order and LRU
+        order preserved — restore is deterministic)."""
+        return {
+            "num_blocks": self.num_blocks, "block": self.block,
+            "free": [int(b) for b in self._free],
+            "ref": [int(r) for r in self._ref],
+            "published": [[int(b), h.hex()] for b, h in self._hash_of.items()],
+            "evictable": [int(b) for b in self._evictable],
+            "target": self._target,
+        }
+
+    @classmethod
+    def from_state(cls, st: dict) -> "BlockAllocator":
+        a = cls(int(st["num_blocks"]), int(st["block"]))
+        a._free = [int(b) for b in st["free"]]
+        a._ref = np.asarray(st["ref"], np.int64)
+        a._hash_of = {int(b): bytes.fromhex(h) for b, h in st["published"]}
+        a._by_hash = {h: b for b, h in a._hash_of.items()}
+        a._evictable = collections.OrderedDict(
+            (int(b), None) for b in st["evictable"])
+        a._target = None if st.get("target") is None else int(st["target"])
+        return a

@@ -29,6 +29,32 @@ The first generated token comes from the prefill logits (same contract as
 stream (``fold_in(base_key, uid)``), split once per *sampled* token —
 greedy requests never consume randomness, so temperature=0 results are
 key-independent.
+
+Failure paths thread through the same lifecycle (DESIGN.md §11):
+
+  deadlines — ``Request.deadline_s`` (TTL from submit) retires overdue
+  work at the next ``step()`` with ``finish_reason="deadline"`` (partial
+  tokens included) and frees its slot/blocks; ``cancel(uid)`` does the
+  same on demand with ``finish_reason="cancelled"``.
+
+  preemption — when the best queued request outranks the least important
+  active slot (``Request.priority`` first, then submit order), the victim
+  is evicted: its full blocks are published to the prefix registry, its
+  blocks decrefed, and its partial state requeued for recompute; on
+  re-admission the resume prompt (prompt + generated so far) reacquires
+  the published blocks, so only the tail is recomputed.  Preemption is
+  strictly rank-decreasing (never an equal-or-better victim), so the
+  highest-ranked request in the system always runs to completion — no
+  livelock.
+
+  live resize — ``resize(num_slots=…, num_blocks=…)`` grows pools
+  immediately; shrinks fence the excess and defer until the draining
+  slots/blocks empty, never dropping in-flight requests.
+
+  snapshot/restore — ``snapshot()`` captures scheduler + allocator +
+  request + pool state host-side; ``Scheduler.from_snapshot`` resumes
+  mid-stream with bit-identical surviving token streams (the serving twin
+  of ``training/fault.py``).
 """
 from __future__ import annotations
 
@@ -53,13 +79,18 @@ class Request:
     with leading batch dim 1 (at minimum ``tokens [1, S]``; multimodal
     frontends add their embedding arrays).  ``temperature``/``top_k`` are
     per-request sampling parameters: temperature 0 is greedy (consumes no
-    PRNG), top_k 0 disables the top-k filter."""
+    PRNG), top_k 0 disables the top-k filter.  ``priority`` orders
+    admission and preemption (higher wins; ties go to the older request);
+    ``deadline_s`` is a TTL from submit after which the request is retired
+    with ``finish_reason="deadline"``."""
     uid: int
     inputs: dict
     max_new_tokens: int
     key: jax.Array | None = None          # per-request sampling stream
     temperature: float = 0.0
     top_k: int = 0
+    priority: int = 0
+    deadline_s: float | None = None
 
 
 @dataclasses.dataclass
@@ -67,10 +98,20 @@ class FinishedRequest:
     uid: int
     tokens: np.ndarray                    # [n_generated] int32
     logprobs: np.ndarray                  # [n_generated] float32
-    finish_reason: str                    # "eos" | "length"
+    finish_reason: str          # "eos" | "length" | "deadline" | "cancelled"
     prompt_len: int
     submit_time: float                    # perf_counter at submit()
     finish_time: float                    # perf_counter at retirement
+
+
+@dataclasses.dataclass
+class _Resume:
+    """Partial generation state of a preempted request: everything needed
+    to continue its token stream bit-identically after re-admission."""
+    tokens: list[int]
+    logprobs: list[float]
+    key: jax.Array | None                 # PRNG stream state at preemption
+    last_tok: int
 
 
 @dataclasses.dataclass
@@ -78,17 +119,22 @@ class _Queued:
     req: Request
     prompt_len: int
     submit_time: float
+    deadline: float | None = None         # absolute (scheduler clock)
+    resume: _Resume | None = None         # set on preempted re-queues
 
 
 @dataclasses.dataclass
 class _Slot:
     uid: int
-    max_new: int
+    req: Request                          # original request (preemption
+    max_new: int                          # rebuilds the queue entry)
     key: jax.Array | None
     prompt_len: int
     submit_time: float
     temperature: float = 0.0
     top_k: int = 0
+    priority: int = 0
+    deadline: float | None = None
     tokens: list[int] = dataclasses.field(default_factory=list)
     logprobs: list[float] = dataclasses.field(default_factory=list)
     last_tok: int = 0
@@ -103,11 +149,16 @@ class Scheduler:
                  *, eos_id: int | None = None, key: jax.Array | None = None,
                  paged: bool = False, block_size: int = 64,
                  num_blocks: int | None = None, prefix_cache: bool = True,
-                 bucket_prompts: bool = True):
+                 bucket_prompts: bool = True, preempt: bool = True,
+                 clock=None):
         if num_slots < 1:
             raise ValueError("num_slots must be >= 1")
         self.model = model
         self.params = params
+        self.preempt = preempt
+        # injectable clock (deadlines, latency stamps): tests and the
+        # fault harness drive a virtual clock for determinism
+        self._now = clock if clock is not None else time.perf_counter
         # Touch the model's PlanBook up front: every TT layer's execution
         # plan is resolved (or confirmed resolved) here, outside any jit
         # trace, so admission prefills and the masked decode step perform
@@ -142,12 +193,21 @@ class Scheduler:
         self.finished: list[FinishedRequest] = []
         self.steps_run = 0                # decode steps executed
         self.tokens_out = 0               # total generated tokens
+        self.preemptions = 0              # slots evicted + requeued
+        self.cancelled = 0                # requests cancelled via cancel()
+        self.expired = 0                  # requests retired past deadline
+        self._target_slots: int | None = None   # pending slot shrink
+        self.hold_admissions = False      # fault/SLO gate: skip admission
         # shared across Scheduler instances of the same model: a server
         # creating one Scheduler per batch must not recompile the pick
         self._pick = model._jit_get("pick", self._build_pick)
 
     # ------------------------------------------------------------- interface
     def submit(self, req: Request, submit_time: float | None = None) -> None:
+        """Queue a request.  Raises ValueError *here* — not by hanging the
+        drain loop forever — when the request could never be admitted:
+        its lifetime reservation must fit the pool even when every other
+        request has retired."""
         S = int(req.inputs["tokens"].shape[1])
         if self.model.cfg.frontend == "vit":
             S += int(req.inputs["image_embeds"].shape[1])
@@ -157,14 +217,36 @@ class Scheduler:
             raise ValueError(
                 f"request uid={req.uid}: prompt ({S}) + max_new_tokens "
                 f"({req.max_new_tokens}) exceeds cache_len={self.cache_len}")
-        if self.paged and logical_blocks(
-                S + req.max_new_tokens, self.block) > self.num_blocks:
-            raise ValueError(
-                f"request uid={req.uid} needs more blocks than the pool "
-                f"has ({self.num_blocks}) — it could never be admitted")
+        if self.paged:
+            need = logical_blocks(S + req.max_new_tokens, self.block)
+            cap = self.allocator.capacity      # pending-shrink aware
+            if need > cap:
+                raise ValueError(
+                    f"request uid={req.uid} can never be admitted: prompt "
+                    f"({S}) + max_new_tokens ({req.max_new_tokens}) needs "
+                    f"{need} blocks of {self.block} tokens but the pool "
+                    f"has only {cap}")
+        t = self._now() if submit_time is None else submit_time
         self.queue.append(_Queued(
-            req, S, time.perf_counter() if submit_time is None
-            else submit_time))
+            req, S, t,
+            deadline=None if req.deadline_s is None else t + req.deadline_s))
+
+    def cancel(self, uid: int) -> bool:
+        """Explicitly cancel a request, queued or in flight.  Retires it
+        with ``finish_reason="cancelled"`` (partial tokens included) and
+        frees its slot/blocks.  Returns False for an unknown uid."""
+        for qi, q in enumerate(self.queue):
+            if q.req.uid == uid:
+                del self.queue[qi]
+                self.finished.append(self._finish_queued(q, "cancelled"))
+                self.cancelled += 1
+                return True
+        for i, s in enumerate(self.slots):
+            if s is not None and s.uid == uid:
+                self.finished.append(self._evict(i, "cancelled"))
+                self.cancelled += 1
+                return True
+        return False
 
     @property
     def num_active(self) -> int:
@@ -177,7 +259,9 @@ class Scheduler:
     def stats(self) -> dict:
         """Pool/paging counters for reporting (serve.py, bench_serve_tt)."""
         out = {"tokens_out": self.tokens_out, "steps_run": self.steps_run,
-               "kv_pool_bytes": self.kv_pool_bytes()}
+               "kv_pool_bytes": self.kv_pool_bytes(),
+               "preemptions": self.preemptions,
+               "cancelled": self.cancelled, "expired": self.expired}
         if self.paged:
             out.update(
                 block_size=self.block, num_blocks=self.num_blocks,
@@ -202,38 +286,195 @@ class Scheduler:
         counter added to :meth:`stats` gets excluded by construction."""
         self.finished.clear()
         self.tokens_out = self.steps_run = 0
+        self.preemptions = self.cancelled = self.expired = 0
         if self.paged:
             self.block_hwm = self.allocator.in_use
             self.prefix_hit_tokens = self.prefix_prompt_tokens = 0
             self.prefill_tokens_skipped = 0
 
     def step(self) -> list[FinishedRequest]:
-        """Admit into free slots (paged mode additionally requires the
-        block reservation to fit — admission by memory), then run one
+        """One scheduler tick: expire overdue work, land any drained
+        resize, admit into free slots best-rank-first (paged mode
+        additionally requires the block reservation to fit — admission by
+        memory; preemption may evict lower-ranked slots), then run one
         masked decode step.  Returns the requests retired during this
         call."""
         done: list[FinishedRequest] = []
-        blocked = False                    # head failure is slot-independent
-        for i in range(self.num_slots):
-            while self.queue and self.slots[i] is None:
-                if not self._try_admit(self.queue[0], i, done):
-                    blocked = True         # head doesn't fit: keep FIFO order
-                    break
-                self.queue.popleft()
-            if blocked:
-                break
+        self._expire(self._now(), done)
+        self._apply_pending_resize()
+        if not self.hold_admissions:
+            self._admit_phase(done)
         if self.num_active:
             self._decode_once(done)
+        # retirements this step may have been the last thing a deferred
+        # shrink was waiting on — land it now, not one step later
+        self._apply_pending_resize()
         self.finished.extend(done)
         return done
 
     def run(self) -> dict[int, FinishedRequest]:
-        """Drain queue + active slots; returns {uid: FinishedRequest}."""
+        """Drain queue + active slots; returns {uid: FinishedRequest}.
+
+        Guards against silent hangs: a step that makes no progress at all
+        (nothing admitted, decoded, retired or expired) while requests are
+        still queued raises RuntimeError with the pool ledger instead of
+        spinning forever."""
         out = {}
         while not self.idle:
+            before = (len(self.queue), self.num_active, self.steps_run,
+                      len(self.finished))
             for f in self.step():
                 out[f.uid] = f
+            after = (len(self.queue), self.num_active, self.steps_run,
+                     len(self.finished))
+            if before == after and after[1] == 0:
+                q = self.queue[0]
+                detail = ""
+                if self.paged:
+                    need = logical_blocks(
+                        q.prompt_len + q.req.max_new_tokens, self.block)
+                    detail = (f" (head uid={q.req.uid} needs {need} blocks, "
+                              f"{self.allocator.available} available)")
+                raise RuntimeError(
+                    f"scheduler stalled: {len(self.queue)} queued requests, "
+                    f"no active slots, and a step made no progress" + detail)
         return out
+
+    # ----------------------------------------------------- deadlines/cancels
+    def _finish_queued(self, q: _Queued, reason: str) -> FinishedRequest:
+        """Retire a request straight out of the queue (cancel/deadline);
+        a preempted re-queue keeps its partial tokens."""
+        r = q.resume
+        return FinishedRequest(
+            uid=q.req.uid,
+            tokens=np.asarray(r.tokens if r else [], np.int32),
+            logprobs=np.asarray(r.logprobs if r else [], np.float32),
+            finish_reason=reason, prompt_len=q.prompt_len,
+            submit_time=q.submit_time, finish_time=self._now())
+
+    def _evict(self, i: int, reason: str) -> FinishedRequest:
+        """Retire active slot ``i`` early (cancel/deadline): emit its
+        partial tokens and free the slot + blocks."""
+        f = self._retire(self.slots[i], reason)
+        if self.paged:
+            self._release_blocks(i)
+        self.slots[i] = None
+        return f
+
+    def _expire(self, now: float, done: list[FinishedRequest]) -> None:
+        """Retire everything past its deadline — queued requests before
+        they ever reach a prefill, active slots with their partial tokens."""
+        if any(q.deadline is not None and now >= q.deadline
+               for q in self.queue):
+            keep: deque[_Queued] = deque()
+            for q in self.queue:
+                if q.deadline is not None and now >= q.deadline:
+                    done.append(self._finish_queued(q, "deadline"))
+                    self.expired += 1
+                else:
+                    keep.append(q)
+            self.queue = keep
+        for i, s in enumerate(self.slots):
+            if s is not None and s.deadline is not None \
+                    and now >= s.deadline:
+                done.append(self._evict(i, "deadline"))
+                self.expired += 1
+
+    # ------------------------------------------------------------ preemption
+    @staticmethod
+    def _rank(priority: int, submit_time: float) -> tuple:
+        """Admission/preemption order: smaller sorts first (better).
+        Higher priority wins; ties go to the older request."""
+        return (-priority, submit_time)
+
+    def _qrank(self, q: _Queued) -> tuple:
+        return self._rank(q.req.priority, q.submit_time)
+
+    def _srank(self, s: _Slot) -> tuple:
+        return self._rank(s.priority, s.submit_time)
+
+    def _slot_limit(self) -> int:
+        """Admissible slot range: a pending shrink stops filling the
+        draining tail."""
+        return (self._target_slots if self._target_slots is not None
+                else self.num_slots)
+
+    def _admit_phase(self, done: list[FinishedRequest]) -> None:
+        """Admit queued requests best-rank-first.  When the best queued
+        request cannot start (no free slot, or its block reservation does
+        not fit), preemption may evict a strictly lower-ranked active slot
+        — rank order is static, so a preemptor can never itself be
+        preempted by its victim and the top-ranked request in the system
+        always runs to completion (anti-livelock).  If the best request
+        still cannot start, admission stops: lower-ranked requests never
+        jump over it."""
+        while self.queue:
+            qi = min(range(len(self.queue)),
+                     key=lambda j: self._qrank(self.queue[j]))
+            q = self.queue[qi]
+            limit = self._slot_limit()
+            free = next((i for i in range(limit) if self.slots[i] is None),
+                        None)
+            if free is None:
+                if not self._preempt_for(q):
+                    break
+                continue                  # a slot was freed: retry
+            if self._try_admit(q, free, done):
+                del self.queue[qi]
+                continue
+            if not self._preempt_for(q):  # paged: blocks unavailable
+                break
+
+    def _preempt_for(self, q: _Queued) -> bool:
+        """Evict the worst-ranked active slot if it ranks strictly below
+        ``q``.  Returns True iff a victim was preempted."""
+        if not self.preempt:
+            return False
+        cand = [(self._srank(s), i)
+                for i, s in enumerate(self.slots) if s is not None]
+        if not cand:
+            return False
+        rank, victim = max(cand)
+        if rank <= self._qrank(q):        # never an equal-or-better victim
+            return False
+        self._preempt(victim)
+        return True
+
+    def _resume_tokens(self, s: _Slot) -> np.ndarray:
+        """Token sequence of the resume prompt: original prompt followed
+        by everything generated so far."""
+        orig = np.asarray(s.req.inputs["tokens"]).reshape(-1)
+        return np.concatenate([orig, np.asarray(s.tokens, orig.dtype)])
+
+    def _preempt(self, i: int) -> None:
+        """Evict slot ``i`` and requeue it for recompute.  Full blocks of
+        already-computed KV are published to the prefix registry first, so
+        re-admission reacquires them (refcount-0 evictable blocks survive
+        unless the preemptor itself needs them) and recomputes only the
+        tail.  The partial token/logprob/PRNG state rides along on the
+        queue entry — the resumed stream is the same stream."""
+        s = self.slots[i]
+        if self.paged:
+            blocks = self._slot_blocks[i]
+            if self.prefix_cache and blocks:
+                # KV rows exist for the prompt + all generated tokens except
+                # last_tok (still pending as the next decode input)
+                toks = self._resume_tokens(s)
+                n_valid = s.prompt_len + len(s.tokens) - 1
+                n_pub = min(n_valid // self.block, len(blocks))
+                if n_pub > 0:
+                    hashes = chain_hashes(toks[:n_pub * self.block],
+                                          self.block)
+                    for bid, h in zip(blocks[:n_pub], hashes):
+                        self.allocator.publish(bid, h)
+            self._release_blocks(i)
+        self.slots[i] = None
+        self.queue.append(_Queued(
+            req=s.req, prompt_len=s.prompt_len, submit_time=s.submit_time,
+            deadline=s.deadline,
+            resume=_Resume(list(s.tokens), list(s.logprobs), s.key,
+                           s.last_tok)))
+        self.preemptions += 1
 
     # -------------------------------------------------------------- sampling
     def _build_pick(self):
@@ -335,12 +576,27 @@ class Scheduler:
                 uid=req.uid, tokens=np.zeros((0,), np.int32),
                 logprobs=np.zeros((0,), np.float32), finish_reason="length",
                 prompt_len=q.prompt_len, submit_time=q.submit_time,
-                finish_time=time.perf_counter()))
+                finish_time=self._now()))
             return True
         if self.paged:
             return self._admit_paged(q, slot_idx, done)
         self._admit_dense(q, slot_idx, done)
         return True
+
+    def _admit_inputs(self, q: _Queued) -> tuple[dict, int]:
+        """Model inputs + effective prompt length for an admission.  A
+        preempted re-queue resumes with prompt = original prompt + tokens
+        generated so far: the prefill (or resume prefill on a prefix hit)
+        rebuilds the KV state and its last-position logits pick the next
+        token — exactly the pick the interrupted decode step would have
+        made."""
+        if q.resume is None:
+            return q.req.inputs, q.prompt_len
+        orig = np.asarray(q.req.inputs["tokens"])
+        toks = np.concatenate(
+            [orig, np.asarray([q.resume.tokens], orig.dtype)], axis=1)
+        inputs = dict(q.req.inputs, tokens=jnp.asarray(toks))
+        return inputs, q.prompt_len + len(q.resume.tokens)
 
     def _row_prefill(self, inputs):
         if self.bucket_prompts:
@@ -352,15 +608,23 @@ class Scheduler:
 
     def _start_slot(self, q: _Queued) -> _Slot:
         req = q.req
-        return _Slot(uid=req.uid, max_new=req.max_new_tokens,
-                     key=self._req_key(req), prompt_len=q.prompt_len,
-                     submit_time=q.submit_time,
-                     temperature=float(req.temperature),
-                     top_k=int(req.top_k))
+        s = _Slot(uid=req.uid, req=req, max_new=req.max_new_tokens,
+                  key=self._req_key(req), prompt_len=q.prompt_len,
+                  submit_time=q.submit_time,
+                  temperature=float(req.temperature),
+                  top_k=int(req.top_k), priority=int(req.priority),
+                  deadline=q.deadline)
+        if q.resume is not None:          # continue the interrupted stream
+            s.tokens = list(q.resume.tokens)
+            s.logprobs = list(q.resume.logprobs)
+            s.key = q.resume.key          # PRNG state, not a fresh fold_in
+            s.last_tok = q.resume.last_tok
+        return s
 
     def _admit_dense(self, q: _Queued, slot_idx: int,
                      done: list[FinishedRequest]) -> None:
-        logits, row_cache = self._row_prefill(q.req.inputs)
+        inputs, _ = self._admit_inputs(q)
+        logits, row_cache = self._row_prefill(inputs)
         slot = self._start_slot(q)
         tok, lp = self._pick_one(logits[0, -1], slot)
         slot.tokens.append(tok)
@@ -378,16 +642,18 @@ class Scheduler:
     def _admit_paged(self, q: _Queued, slot_idx: int,
                      done: list[FinishedRequest]) -> bool:
         req = q.req
-        S = q.prompt_len
+        inputs, S = self._admit_inputs(q)
         blk = self.block
         alloc = self.allocator
-        need = logical_blocks(min(S + req.max_new_tokens, self.cache_len),
-                              blk)
+        # lifetime reservation — invariant under preemption/resume:
+        # original prompt + already-generated + remaining budget
+        need = logical_blocks(min(q.prompt_len + req.max_new_tokens,
+                                  self.cache_len), blk)
         # ---- prefix lookup: acquire the longest chain of resident blocks
         hashes: list[bytes] = []
         shared: list[int] = []
         if self.prefix_cache:
-            hashes = chain_hashes(np.asarray(req.inputs["tokens"]), blk)
+            hashes = chain_hashes(np.asarray(inputs["tokens"]), blk)
             for h in hashes:
                 bid = alloc.acquire(h)
                 if bid is None:
@@ -425,14 +691,14 @@ class Scheduler:
         # ---- prefill: full prompt (splice) or suffix only (resume)
         slot = self._start_slot(q)
         if start == 0:
-            logits, row_cache = self._row_prefill(req.inputs)
+            logits, row_cache = self._row_prefill(inputs)
             self._ensure_pool(row_cache)
             self.cache = self.model.jitted_splice_paged()(
                 self.cache, row_cache, jnp.asarray(slot_idx, jnp.int32),
                 jnp.asarray(dst_t))
         else:
             suffix = {k: (v[:, start:] if k == "tokens" else v)
-                      for k, v in req.inputs.items()}
+                      for k, v in inputs.items()}
             logits, self.cache = self.model.jitted_prefill_resume(
                 self.cache_len)(self.params, suffix, self.cache, slot_idx,
                                 src_t, dst_t, start, S - start)
@@ -464,6 +730,322 @@ class Scheduler:
             for bid in blocks:
                 self.allocator.decref(bid)
             self._slot_blocks[slot_idx] = None
+
+    # ----------------------------------------------------------------- resize
+    def resize(self, num_slots: int | None = None,
+               num_blocks: int | None = None) -> dict:
+        """Live pool resize — the knob an autoscaler turns (ROADMAP 4).
+        Growth applies immediately (slot rows / arena blocks are padded
+        in place, new block ids join the free list).  A shrink never
+        drops in-flight requests: the slot tail stops admitting and the
+        block fence stops re-issuing high ids, and the actual array
+        slicing lands at a later ``step()`` once the tail has drained.
+        Returns the current/pending geometry."""
+        if num_slots is not None:
+            if num_slots < 1:
+                raise ValueError("num_slots must be >= 1")
+            if num_slots >= self.num_slots:
+                if num_slots > self.num_slots:
+                    self._grow_slots(num_slots)
+                self._target_slots = None
+            else:
+                self._target_slots = num_slots
+                self._apply_slot_shrink()
+        if num_blocks is not None:
+            if not self.paged:
+                raise ValueError("num_blocks resize requires paged=True")
+            old = self.num_blocks
+            if self.allocator.resize(num_blocks):
+                if num_blocks != old:
+                    self._remap_arenas(old, num_blocks)
+                    self.num_blocks = num_blocks
+            # else: fenced — _apply_pending_resize lands it when drained
+        return {"num_slots": self.num_slots,
+                "num_blocks": self.num_blocks if self.paged else None,
+                "pending_slots": self._target_slots,
+                "pending_blocks": (self.allocator.pending_target
+                                   if self.paged else None)}
+
+    def _apply_pending_resize(self) -> None:
+        self._apply_slot_shrink()
+        if self.paged and self.allocator.shrink_ready:
+            old, new = self.num_blocks, self.allocator.pending_target
+            self.allocator.finalize_shrink()
+            self._remap_arenas(old, new)
+            self.num_blocks = new
+
+    def _grow_slots(self, n: int) -> None:
+        old = self.num_slots
+        self.slots.extend([None] * (n - old))
+        if self.paged:
+            self._slot_blocks.extend([None] * (n - old))
+        if self.cache is not None:
+            self.cache = self._reshape_slots(self.cache, n)
+        self.num_slots = n
+
+    def _apply_slot_shrink(self) -> bool:
+        """Land a pending slot shrink once the tail slots have drained."""
+        t = self._target_slots
+        if t is None:
+            return True
+        if any(self.slots[i] is not None
+               for i in range(t, self.num_slots)):
+            return False                  # defer: tail still busy
+        self.slots = self.slots[:t]
+        if self.paged:
+            self._slot_blocks = self._slot_blocks[:t]
+        if self.cache is not None:
+            self.cache = self._reshape_slots(self.cache, t)
+        self.num_slots = t
+        self._target_slots = None
+        return True
+
+    @staticmethod
+    def _axis_resize(leaf, n: int, axis: int):
+        cur = leaf.shape[axis]
+        if n == cur:
+            return leaf
+        if n < cur:
+            return jax.lax.slice_in_dim(leaf, 0, n, axis=axis)
+        pad = jnp.zeros(leaf.shape[:axis] + (n - cur,) + leaf.shape[axis + 1:],
+                        leaf.dtype)
+        return jnp.concatenate([leaf, pad], axis=axis)
+
+    def _reshape_slots(self, cache: dict, n: int) -> dict:
+        """Pad (grow) or slice (drained shrink) every slot-dimensioned
+        leaf to ``n`` slots; arenas are slot-independent and untouched."""
+        out = {"pos": self._axis_resize(cache["pos"], n, 0)}
+        if not self.paged:
+            for k, v in cache.items():
+                if k != "pos":
+                    out[k] = jax.tree.map(
+                        lambda leaf: self._axis_resize(leaf, n, 1), v)
+            return out
+        bt = cache["block_tables"]
+        if n < bt.shape[0]:
+            out["block_tables"] = bt[:n]
+        else:                             # fresh rows point at the sentinel
+            pad = jnp.full((n - bt.shape[0], bt.shape[1]),
+                           self.num_blocks, bt.dtype)
+            out["block_tables"] = jnp.concatenate([bt, pad], axis=0)
+        for gi, (period, _count) in enumerate(self.model.groups):
+            g = {}
+            for i, bd in enumerate(period):
+                kinds = block_cache_kinds(bd)
+                g[f"b{i}"] = {
+                    name: (self._axis_resize(leaf, n, 1)
+                           if kinds[name] == "slot" else leaf)
+                    for name, leaf in cache[f"g{gi}"][f"b{i}"].items()}
+            out[f"g{gi}"] = g
+        return out
+
+    def _remap_arenas(self, old_nb: int, new_nb: int) -> None:
+        """Reshape every arena leaf ``[layers, old_nb+1, block, …]`` to the
+        new block count and move the write sentinel to its new index.  Any
+        table entry at or above ``min(old, new)`` is a sentinel reference
+        or a stale retired-slot id — both collapse onto the new sentinel
+        (live ids are below the fence by construction)."""
+        if self.cache is None:
+            return
+        cache = dict(self.cache)
+        bt = cache["block_tables"]
+        cache["block_tables"] = jnp.where(
+            bt >= min(old_nb, new_nb), jnp.asarray(new_nb, bt.dtype), bt)
+        for gi, (period, _count) in enumerate(self.model.groups):
+            g = {}
+            for i, bd in enumerate(period):
+                kinds = block_cache_kinds(bd)
+                b = {}
+                for name, leaf in cache[f"g{gi}"][f"b{i}"].items():
+                    if kinds[name] == "slot":
+                        b[name] = leaf
+                    elif new_nb > old_nb:
+                        # grow: the old sentinel slab becomes data block
+                        # ``old_nb`` (free-listed, content meaningless)
+                        b[name] = self._axis_resize(leaf, new_nb + 1, 1)
+                    else:
+                        # shrink: drained tail sliced off; zero the slab
+                        # that becomes the new sentinel
+                        b[name] = leaf[:, :new_nb + 1].at[:, new_nb].set(0)
+                g[f"b{i}"] = b
+            cache[f"g{gi}"] = g
+        self.cache = cache
+
+    # --------------------------------------------------------------- snapshot
+    SNAPSHOT_VERSION = 1
+
+    def snapshot(self) -> dict:
+        """Host-side snapshot of the complete serving state: queue, slots
+        (partial tokens + per-request PRNG stream state), allocator
+        ledger, pool cache contents and counters.  Everything is numpy /
+        plain python — ``serving.faults.save_snapshot`` persists it, and
+        :meth:`from_snapshot` resumes mid-stream with surviving token
+        streams bit-identical to an uninterrupted run (the serving twin
+        of ``training/fault.py``'s checkpoint/restart contract)."""
+        def arr(x):
+            return None if x is None else np.asarray(x)
+
+        def enc_req(req: Request) -> dict:
+            return {"uid": req.uid,
+                    "inputs": {k: np.asarray(v)
+                               for k, v in req.inputs.items()},
+                    "max_new_tokens": req.max_new_tokens,
+                    "key": arr(req.key), "temperature": req.temperature,
+                    "top_k": req.top_k, "priority": req.priority,
+                    "deadline_s": req.deadline_s}
+
+        def enc_resume(r: _Resume | None):
+            return None if r is None else {
+                "tokens": list(r.tokens), "logprobs": list(r.logprobs),
+                "key": arr(r.key), "last_tok": r.last_tok}
+
+        snap = {
+            "version": self.SNAPSHOT_VERSION,
+            "now": self._now(),
+            "config": {
+                "num_slots": self.num_slots, "cache_len": self.cache_len,
+                "eos_id": self.eos_id, "paged": self.paged,
+                "block_size": self.block if self.paged else None,
+                "num_blocks": self.num_blocks if self.paged else None,
+                "prefix_cache": (self.prefix_cache if self.paged else True),
+                "bucket_prompts": self.bucket_prompts,
+                "preempt": self.preempt},
+            "base_key": arr(self.base_key),
+            "queue": [{"req": enc_req(q.req), "prompt_len": q.prompt_len,
+                       "submit_time": q.submit_time, "deadline": q.deadline,
+                       "resume": enc_resume(q.resume)} for q in self.queue],
+            "slots": [None if s is None else
+                      {"req": enc_req(s.req), "prompt_len": s.prompt_len,
+                       "submit_time": s.submit_time, "deadline": s.deadline,
+                       "temperature": s.temperature, "top_k": s.top_k,
+                       "priority": s.priority, "tokens": list(s.tokens),
+                       "logprobs": list(s.logprobs), "last_tok": s.last_tok,
+                       "key": arr(s.key)} for s in self.slots],
+            "finished": [{"uid": f.uid, "tokens": np.asarray(f.tokens),
+                          "logprobs": np.asarray(f.logprobs),
+                          "finish_reason": f.finish_reason,
+                          "prompt_len": f.prompt_len,
+                          "submit_time": f.submit_time,
+                          "finish_time": f.finish_time}
+                         for f in self.finished],
+            "target_slots": self._target_slots,
+            "counters": {"steps_run": self.steps_run,
+                         "tokens_out": self.tokens_out,
+                         "preemptions": self.preemptions,
+                         "cancelled": self.cancelled,
+                         "expired": self.expired},
+            "cache": (None if self.cache is None
+                      else jax.tree.map(np.asarray, self.cache)),
+        }
+        if self.paged:
+            snap["slot_blocks"] = [None if b is None else list(b)
+                                   for b in self._slot_blocks]
+            snap["allocator"] = self.allocator.state()
+            snap["counters"].update(
+                block_hwm=self.block_hwm,
+                prefix_hit_tokens=self.prefix_hit_tokens,
+                prefix_prompt_tokens=self.prefix_prompt_tokens,
+                prefill_tokens_skipped=self.prefill_tokens_skipped)
+        return snap
+
+    @classmethod
+    def from_snapshot(cls, model: Model, params, snap: dict, *,
+                      clock=None, rebase_clock: bool = False) -> "Scheduler":
+        """Rebuild a scheduler mid-stream from :meth:`snapshot`.  Pass
+        ``rebase_clock=True`` when restoring in a *new process* (the
+        monotonic clock rebased): pending submit times and deadlines are
+        shifted so in-flight TTLs keep their remaining budget."""
+        if int(snap.get("version", -1)) != cls.SNAPSHOT_VERSION:
+            raise ValueError(
+                f"snapshot version {snap.get('version')!r} != "
+                f"{cls.SNAPSHOT_VERSION}")
+        cfg = snap["config"]
+        base_key = snap.get("base_key")
+        sched = cls(
+            model, params, num_slots=int(cfg["num_slots"]),
+            cache_len=int(cfg["cache_len"]),
+            eos_id=None if cfg["eos_id"] is None else int(cfg["eos_id"]),
+            key=None if base_key is None else jnp.asarray(base_key),
+            paged=bool(cfg["paged"]),
+            block_size=int(cfg["block_size"] or 64),
+            num_blocks=(None if cfg["num_blocks"] is None
+                        else int(cfg["num_blocks"])),
+            prefix_cache=bool(cfg["prefix_cache"]),
+            bucket_prompts=bool(cfg["bucket_prompts"]),
+            preempt=bool(cfg["preempt"]), clock=clock)
+        shift = (sched._now() - float(snap["now"])) if rebase_clock else 0.0
+
+        def t_of(v):
+            return None if v is None else float(v) + shift
+
+        def dec_key(k):
+            return None if k is None else jnp.asarray(k)
+
+        def dec_req(d: dict) -> Request:
+            return Request(
+                uid=int(d["uid"]),
+                inputs={k: jnp.asarray(v) for k, v in d["inputs"].items()},
+                max_new_tokens=int(d["max_new_tokens"]),
+                key=dec_key(d["key"]), temperature=float(d["temperature"]),
+                top_k=int(d["top_k"]), priority=int(d["priority"]),
+                deadline_s=(None if d["deadline_s"] is None
+                            else float(d["deadline_s"])))
+
+        def dec_resume(d):
+            return None if d is None else _Resume(
+                tokens=[int(t) for t in d["tokens"]],
+                logprobs=[float(x) for x in d["logprobs"]],
+                key=dec_key(d["key"]), last_tok=int(d["last_tok"]))
+
+        sched.queue = deque(
+            _Queued(req=dec_req(d["req"]), prompt_len=int(d["prompt_len"]),
+                    submit_time=float(d["submit_time"]) + shift,
+                    deadline=t_of(d["deadline"]),
+                    resume=dec_resume(d["resume"]))
+            for d in snap["queue"])
+        slots: list[_Slot | None] = []
+        for d in snap["slots"]:
+            if d is None:
+                slots.append(None)
+                continue
+            req = dec_req(d["req"])
+            slots.append(_Slot(
+                uid=req.uid, req=req, max_new=req.max_new_tokens,
+                key=dec_key(d["key"]), prompt_len=int(d["prompt_len"]),
+                submit_time=float(d["submit_time"]) + shift,
+                temperature=float(d["temperature"]), top_k=int(d["top_k"]),
+                priority=int(d["priority"]), deadline=t_of(d["deadline"]),
+                tokens=[int(t) for t in d["tokens"]],
+                logprobs=[float(x) for x in d["logprobs"]],
+                last_tok=int(d["last_tok"])))
+        sched.slots = slots
+        sched.finished = [FinishedRequest(
+            uid=int(f["uid"]), tokens=np.asarray(f["tokens"], np.int32),
+            logprobs=np.asarray(f["logprobs"], np.float32),
+            finish_reason=str(f["finish_reason"]),
+            prompt_len=int(f["prompt_len"]),
+            submit_time=float(f["submit_time"]),
+            finish_time=float(f["finish_time"])) for f in snap["finished"]]
+        c = snap["counters"]
+        sched.steps_run = int(c["steps_run"])
+        sched.tokens_out = int(c["tokens_out"])
+        sched.preemptions = int(c["preemptions"])
+        sched.cancelled = int(c["cancelled"])
+        sched.expired = int(c["expired"])
+        sched._target_slots = (None if snap["target_slots"] is None
+                               else int(snap["target_slots"]))
+        if snap["cache"] is not None:
+            sched.cache = jax.tree.map(jnp.asarray, snap["cache"])
+        if sched.paged:
+            sched.allocator = BlockAllocator.from_state(snap["allocator"])
+            sched._slot_blocks = [
+                None if b is None else [int(x) for x in b]
+                for b in snap["slot_blocks"]]
+            sched.block_hwm = int(c["block_hwm"])
+            sched.prefix_hit_tokens = int(c["prefix_hit_tokens"])
+            sched.prefix_prompt_tokens = int(c["prefix_prompt_tokens"])
+            sched.prefill_tokens_skipped = int(c["prefill_tokens_skipped"])
+        return sched
 
     # ---------------------------------------------------------------- decode
     def _decode_once(self, done: list[FinishedRequest]) -> None:
@@ -511,23 +1093,26 @@ class Scheduler:
             return "length"
         return None
 
-    def _retire(self, slot: _Slot) -> FinishedRequest:
+    def _retire(self, slot: _Slot,
+                reason: str | None = None) -> FinishedRequest:
         return FinishedRequest(
             uid=slot.uid,
             tokens=np.asarray(slot.tokens, np.int32),
             logprobs=np.asarray(slot.logprobs, np.float32),
-            finish_reason=self._finished_reason(slot),
+            finish_reason=reason or self._finished_reason(slot),
             prompt_len=slot.prompt_len,
             submit_time=slot.submit_time,
-            finish_time=time.perf_counter())
+            finish_time=self._now())
 
 
 def make_requests(batch: dict, max_new_tokens: int,
                   key: jax.Array | None = None, temperature: float = 0.0,
-                  top_k: int = 0) -> list[Request]:
+                  top_k: int = 0, priority: int = 0,
+                  deadline_s: float | None = None) -> list[Request]:
     """Split a pre-batched input dict (engine.generate contract) into one
     Request per row; row index becomes the uid.  The batch-level sampling
-    params become per-request params."""
+    params become per-request params; ``priority``/``deadline_s`` apply
+    uniformly to every row."""
     arrays = {k: v for k, v in batch.items() if k != "cache_len"}
     B = arrays["tokens"].shape[0]
     out = []
@@ -537,5 +1122,6 @@ def make_requests(batch: dict, max_new_tokens: int,
             inputs={k: v[b:b + 1] for k, v in arrays.items()},
             max_new_tokens=max_new_tokens,
             key=None if key is None else jax.random.fold_in(key, b),
-            temperature=temperature, top_k=top_k))
+            temperature=temperature, top_k=top_k,
+            priority=priority, deadline_s=deadline_s))
     return out

@@ -185,6 +185,42 @@ def test_allocator_random_walk_invariants():
     walk()
 
 
+def test_allocator_resize_grow_and_shrink():
+    """Grow is immediate (new ids join the free list); a shrink below a
+    live id fences the tail — capacity and availability drop at once, the
+    live id drains through its normal decref, and the caller finalizes."""
+    a = BlockAllocator(4, BLOCK)
+    b0, b1 = a.alloc(), a.alloc()         # ids 0, 1
+    assert a.resize(6)
+    assert a.num_blocks == 6 and a.available == 4
+    assert not a.resize(1)                # b1 sits above the fence
+    assert a.pending_target == 1 and a.capacity == 1
+    assert a.available == 0               # free ids >= fence are gone
+    assert not a.shrink_ready
+    a.decref(b1)                          # drains the fence
+    assert a.shrink_ready
+    a.finalize_shrink()
+    assert a.num_blocks == 1 and a.pending_target is None
+    assert a.refcount(b0) == 1
+    a.decref(b0)
+    a.assert_quiescent()
+
+
+def test_allocator_shrink_cancel_resurrects_ids():
+    """Growing (or re-stating the current size) while a shrink is pending
+    cancels it — ids dropped while the fence was up must return to the
+    free list so the ledger still tiles the pool."""
+    a = BlockAllocator(4, BLOCK)
+    bids = [a.alloc() for _ in range(3)]  # ids 0, 1, 2
+    assert not a.resize(2)                # id 2 live above the fence
+    a.decref(bids[2])                     # dies at the fence (not refiled)
+    assert a.resize(4)                    # cancel: back to full size
+    assert a.pending_target is None and a.num_blocks == 4
+    for b in bids[:2]:
+        a.decref(b)
+    a.assert_quiescent()                  # ids 2 and 3 resurrected
+
+
 # ---------------------------------------------------------------------------
 # Paged ≡ dense token identity across the five cache families
 # ---------------------------------------------------------------------------
@@ -210,6 +246,7 @@ def test_paged_matches_sequential_across_families(arch):
     out = dict(sched.run())
     for f in sched.finished:
         out[f.uid] = f
+    sched.allocator.assert_quiescent()    # drained: no leaked blocks
     for uid in range(2):
         ref, ref_lp = _reference(model, params, toks[uid], budgets[uid],
                                  cache_len)
@@ -289,6 +326,7 @@ def test_prefix_reuse_shares_blocks_and_skips_prefill():
     out = dict(sched.run())
     for f in sched.finished:
         out[f.uid] = f
+    sched.allocator.assert_quiescent()    # drained: no leaked blocks
     st = sched.stats()
     assert st["prefix_hit_tokens"] == 12
     assert st["prefill_tokens_skipped"] == 12
@@ -314,6 +352,7 @@ def test_prefix_full_coverage_cow():
         sched.submit(Request(uid=uid, inputs={"tokens": t0},
                              max_new_tokens=steps))
     out = sched.run()
+    sched.allocator.assert_quiescent()    # drained: no leaked blocks
     st = sched.stats()
     assert st["prefix_hit_tokens"] == S   # full coverage
     assert st["prefill_tokens_skipped"] == S - 1   # last token recomputed
@@ -353,6 +392,7 @@ def test_memory_admission_queues_until_blocks_free():
     sched.step()
     assert sched.num_active == 1 and len(sched.queue) == 1   # head waits
     out = sched.run()
+    sched.allocator.assert_quiescent()    # drained: no leaked blocks
     for uid in range(2):
         ref, _ = _reference(model, params, toks[uid], steps, cache_len)
         np.testing.assert_array_equal(out[uid].tokens, ref)

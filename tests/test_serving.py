@@ -244,6 +244,114 @@ def test_scheduler_single_slot_and_zero_budget():
                              max_new_tokens=cache_len))
 
 
+def test_scheduler_starved_pool_raises_not_hangs():
+    """Zero admittable slots with a non-empty queue: the head's block
+    reservation can fit the pool eventually (so submit accepts it) but
+    admission is gated; a step making no progress at all with nothing
+    active must raise rather than spin forever."""
+    from repro.serving.paging import logical_blocks
+
+    cfg, model, params = _build("deepseek_7b")
+    S, cache_len, steps = 8, 16, 4
+    toks = concrete_batch(cfg, 1, S)["tokens"]
+    need = logical_blocks(S + steps, 4)
+    sched = Scheduler(model, params, num_slots=1, cache_len=cache_len,
+                      paged=True, block_size=4, num_blocks=need,
+                      prefix_cache=False)
+    sched.submit(Request(uid=0, inputs={"tokens": toks},
+                         max_new_tokens=steps))
+    # simulate exhaustion that never clears: a leaked external reference
+    held = [sched.allocator.alloc() for _ in range(need)]
+    with pytest.raises(RuntimeError, match="no progress"):
+        sched.run()
+    for b in held:
+        sched.allocator.decref(b)
+    assert sched.run()[0].finish_reason == "length"  # recovers once freed
+    sched.allocator.assert_quiescent()
+
+
+def test_scheduler_cancel_while_queued():
+    """cancel() of a request that never reached a slot retires it with
+    zero tokens and reason "cancelled"; the rest of the queue drains
+    normally."""
+    cfg, model, params = _build("deepseek_7b")
+    S, cache_len = 8, 8 + 6
+    toks = concrete_batch(cfg, 3, S)["tokens"]
+    sched = Scheduler(model, params, num_slots=1, cache_len=cache_len)
+    for uid in range(3):
+        sched.submit(Request(uid=uid, inputs={"tokens": toks[uid:uid + 1]},
+                             max_new_tokens=4))
+    sched.step()                          # uid 0 active; 1, 2 queued
+    assert sched.cancel(1)
+    assert not sched.cancel(99)           # unknown uid
+    sched.run()
+    out = {f.uid: f for f in sched.finished}
+    assert out[1].finish_reason == "cancelled"
+    assert out[1].tokens.shape == (0,)
+    assert out[0].finish_reason == out[2].finish_reason == "length"
+    ref, _ = _sequential_reference(model, params, toks[2], 4, cache_len)
+    np.testing.assert_array_equal(out[2].tokens, ref)
+
+
+def test_scheduler_deadline_expires_before_prefill():
+    """A queued request whose TTL lapses while it waits for a slot is
+    retired with zero tokens — the deadline check runs before admission,
+    so no prefill compute (or block allocation) is ever spent on it."""
+    cfg, model, params = _build("deepseek_7b")
+    S, cache_len = 8, 16
+    toks = concrete_batch(cfg, 2, S)["tokens"]
+    clk = {"t": 0.0}
+    sched = Scheduler(model, params, num_slots=1, cache_len=cache_len,
+                      paged=True, block_size=4, clock=lambda: clk["t"])
+    sched.submit(Request(uid=0, inputs={"tokens": toks[0:1]},
+                         max_new_tokens=6))
+    sched.submit(Request(uid=1, inputs={"tokens": toks[1:2]},
+                         max_new_tokens=6, deadline_s=2.0))
+    while not sched.idle:
+        clk["t"] += 1.0                   # uid 1's TTL lapses in the queue
+        sched.step()
+    out = {f.uid: f for f in sched.finished}
+    assert out[1].finish_reason == "deadline"
+    assert out[1].tokens.shape == (0,)
+    assert out[0].finish_reason == "length"
+    assert sched.expired == 1
+    sched.allocator.assert_quiescent()
+
+
+def test_scheduler_resize_smaller_while_busy():
+    """resize() below the live slot/block footprint defers: nothing is
+    dropped, admission respects the new limits immediately, the arrays
+    shrink once the tail drains, and outputs match the reference."""
+    cfg, model, params = _build("deepseek_7b")
+    S, cache_len, steps = 8, 16, 5
+    toks = concrete_batch(cfg, 3, S)["tokens"]
+
+    def submit_all(s):
+        for uid in range(3):
+            s.submit(Request(uid=uid, inputs={"tokens": toks[uid:uid + 1]},
+                             max_new_tokens=steps))
+
+    ref = Scheduler(model, params, num_slots=3, cache_len=cache_len,
+                    paged=True, block_size=4, num_blocks=12)
+    submit_all(ref)
+    refout = ref.run()
+
+    sched = Scheduler(model, params, num_slots=3, cache_len=cache_len,
+                      paged=True, block_size=4, num_blocks=12)
+    submit_all(sched)
+    sched.step()                          # all three slots busy
+    assert sched.num_active == 3
+    geo = sched.resize(num_slots=1, num_blocks=4)
+    assert geo["pending_slots"] == 1 and geo["pending_blocks"] == 4
+    assert sched.num_slots == 3           # deferred, nothing dropped
+    out = sched.run()
+    assert sched.num_slots == 1 and sched.num_blocks == 4
+    assert sched.cache["block_tables"].shape[0] == 1
+    sched.allocator.assert_quiescent()
+    for uid in range(3):
+        np.testing.assert_array_equal(out[uid].tokens, refout[uid].tokens)
+
+
 def test_jit_cache_lru_bounded():
     """Distinct cache_len values must not grow Model._jit_cache without
     bound (a long-running server leaks traces otherwise); hot entries
