@@ -1,0 +1,146 @@
+"""Data-aware DSE quality gate: analytic-proxy vs measured fronts.
+
+The point this benchmark proves (DESIGN.md §12, ISSUE 7 acceptance): the
+analytic funnel's static ordering — flops/bytes/err_proxy — can crown a
+TT plan that measurably damages model quality, and the study engine's
+quality gate changes that pick.  Per config family:
+
+1. A briefly-trained dense reference model (synthetic affine data — rank
+   must correlate with quality, which an untrained net's noise weights
+   cannot provide) is calibrated (``Model.activation_stats``) and every
+   surviving (plan × weight-dtype) candidate of its FFN projection is
+   evaluated end-to-end by ``core.study.make_model_evaluator``:
+   activation-aware error, perplexity delta vs dense, scheduler decode
+   tok/s — all through frozen ``TTExecutionPlan``s (zero re-resolutions,
+   asserted per trial).
+2. Two fronts are compared: the NO-GATE front (static axes: flops, bytes,
+   err_proxy) and the GATED front (measured axes: flops, bytes, tok/s,
+   ppl-delta) after ``apply_quality_gate`` with a perplexity budget
+   τ = best_delta + 0.25·(worst − best) — plans in the top quarter of
+   observed quality pass, the rest are rejected.
+3. The tripwire: in ≥ 1 family the gated front's cheapest survivor is a
+   DIFFERENT plan than the analytic front's cheapest — with the measured
+   perplexity delta and tok/s of both picks recorded so the flip is
+   auditable, not asserted into existence.
+
+Trial grid: length-2 plans at ranks {4, 8, 16} × {fp32, int8} on the
+smoke FFN shape [d_model → d_ff] — low ranks are statically cheapest and
+(on a trained net) measurably worst, which is exactly the failure mode
+the gate exists to catch.
+
+Writes ``results/BENCH_dse.json``: per family the full trial table, both
+fronts, τ, and the analytic-vs-gated picks.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+from repro.configs import get_config
+from repro.core.dse import (DEFAULT_AXES, DSEConfig, QualityGate,
+                            apply_quality_gate, pareto_front)
+from repro.core.study import EvaluatorConfig, Study, make_model_evaluator
+
+from .common import header, row
+
+FAMILIES = [("deepseek-7b", "dense"), ("qwen3-32b", "dense-qknorm")]
+STATE_DIR = os.path.join("results", "dse_studies")
+
+
+def _sol_row(s) -> dict:
+    return {"plan": s.plan.describe(), "ms": list(s.plan.ms),
+            "ns": list(s.plan.ns), "ranks": list(s.plan.ranks),
+            "weight_dtype": s.weight_dtype, "flops": s.flops,
+            "bytes": s.bytes, "err_proxy": s.err_proxy,
+            "act_err": s.act_err, "ppl_delta": s.ppl_delta,
+            "tok_s": s.tok_s}
+
+
+def _family(arch: str, label: str, quick: bool, seed: int = 0) -> dict:
+    cfg = get_config(arch, "smoke")
+    M, N = cfg.d_ff, cfg.d_model
+    # length-2 plans, ranks {4, 8, 16}, fp32 + int8 twins — quick mode
+    # keeps the SAME grid and training depth (the flip lives in the
+    # factorization spread at low rank, which a coarser grid loses) and
+    # economizes on trial count + serving steps instead
+    dse = DSEConfig(vl=4, rank_step=4, rank_cap=16, max_d=2, min_factor=2,
+                    weight_dtypes=("fp32", "int8"))
+    ecfg = EvaluatorConfig(train_steps=60,
+                           n_calib=2, n_eval=2, batch=2, seq=32,
+                           measure_tok_s=True,
+                           serve_steps=4 if quick else 8)
+    evaluate = make_model_evaluator(cfg, ecfg, seed=seed)
+    state = os.path.join(STATE_DIR, f"{arch}_{M}x{N}.json")
+    if os.path.exists(state):
+        os.unlink(state)                  # benches re-measure, not resume
+    study = Study.create(state, M, N, dse, seed=seed,
+                         max_trials=8 if quick else 12)
+    study.run(evaluate, batch_size=4)
+    res = study.result()
+    if not res.solutions:
+        raise AssertionError(
+            f"{arch}: no completed trials — "
+            f"{[t.metrics for t in study.trials]}")
+
+    # analytic view: static axes only, cheapest survivor is the pick
+    front_nogate = pareto_front(res.solutions, axes=DEFAULT_AXES)
+    analytic_pick = res.solutions[0]      # static (flops, params, bytes)
+
+    # gated view: perplexity budget τ from the observed spread
+    deltas = [s.ppl_delta for s in res.solutions]
+    lo, hi = min(deltas), max(deltas)
+    tau = lo + 0.25 * (hi - lo)
+    metrics_of = {(s.plan, s.weight_dtype):
+                  {"act_err": s.act_err, "ppl_delta": s.ppl_delta,
+                   "tok_s": s.tok_s} for s in res.solutions}
+    gate = QualityGate(
+        evaluate=lambda s: metrics_of[(s.plan, s.weight_dtype)],
+        max_ppl_delta=tau, top_k=len(res.solutions))
+    gated = apply_quality_gate(res, gate)
+    gated_pick = gated.solutions[0] if gated.solutions else None
+    front_gated = gated.measured_front(
+        axes=("flops", "bytes", "tok_s", "ppl_delta"))
+
+    flip = (gated_pick is not None
+            and (gated_pick.plan, gated_pick.weight_dtype)
+            != (analytic_pick.plan, analytic_pick.weight_dtype))
+    header(f"{arch} [{N}→{M}] τ={tau:.4f}",
+           ["pick", "plan", "dtype", "flops", "bytes", "ppl_delta",
+            "tok_s"])
+    for name, s in (("analytic", analytic_pick), ("gated", gated_pick)):
+        print(row(name, s.plan.describe(), s.weight_dtype, s.flops,
+                  s.bytes, f"{s.ppl_delta:+.4f}", f"{s.tok_s:.1f}"))
+    print(f"# no-gate front: {len(front_nogate)} solutions | gated "
+          f"front: {len(front_gated)} | gate rejected "
+          f"{gated.counts['quality_gated']}/{len(res.solutions)} | "
+          f"pick changed: {flip}")
+    return {"arch": arch, "family": label, "M": M, "N": N,
+            "tau": tau, "gate_changes_pick": flip,
+            "trials": [_sol_row(s) for s in res.solutions],
+            "analytic_pick": _sol_row(analytic_pick),
+            "gated_pick": _sol_row(gated_pick) if gated_pick else None,
+            "quality_gated": gated.counts["quality_gated"],
+            "front_nogate": [_sol_row(s) for s in front_nogate],
+            "front_gated": [_sol_row(s) for s in front_gated]}
+
+
+def run(quick: bool = False) -> None:
+    os.makedirs(STATE_DIR, exist_ok=True)
+    fams = FAMILIES[:1] if quick else FAMILIES
+    out = {"schema": 1, "quick": quick,
+           "families": [_family(arch, label, quick)
+                        for arch, label in fams]}
+    flips = [f["arch"] for f in out["families"] if f["gate_changes_pick"]]
+    print(f"\n# families where the gate changed the best pick: "
+          f"{flips or 'NONE'}")
+    # the acceptance tripwire: the measured gate must matter somewhere
+    assert flips, ("quality gate changed no family's pick — the measured "
+                   "accuracy loop is not doing its job")
+    os.makedirs("results", exist_ok=True)
+    with open(os.path.join("results", "BENCH_dse.json"), "w") as f:
+        json.dump(out, f, indent=1)
+    print("# wrote results/BENCH_dse.json")
+
+
+if __name__ == "__main__":
+    run()

@@ -16,6 +16,9 @@ Tables/figures covered:
   DESIGN §8   bench_quant           int8-resident kernels: weights x
                                     backend x depth (+ fused-under-int8
                                     showcase) -> results/BENCH_quant.json
+  DESIGN §12  bench_dse_quality     analytic-proxy vs quality-gated DSE
+                                    fronts per config family ->
+                                    results/BENCH_dse.json
 """
 from __future__ import annotations
 
@@ -26,7 +29,7 @@ import time
 
 BENCHES = ["ds_cloud", "ds_reduction", "alignment", "einsum_kernels",
            "end_to_end", "breakdown", "fc_fraction", "flops_vs_time",
-           "serve_tt", "quant"]
+           "serve_tt", "quant", "dse_quality"]
 
 
 def main() -> None:

@@ -4,6 +4,16 @@ whole-model compression.
 
     PYTHONPATH=src python examples/dse_compress_model.py --arch qwen3-32b \
         --rank 16 --families ffn,attn
+
+With ``--calibrate`` the analytic table is followed by a data-aware study
+(DESIGN.md §12) of the FFN projection on the smoke twin of the same
+architecture: each candidate plan is scored against calibration
+activations and measured for end-to-end perplexity delta through a
+frozen-plan TT twin — the step that catches statically-cheap plans the
+proxy ranking would wrongly crown.
+
+    PYTHONPATH=src python examples/dse_compress_model.py \
+        --arch deepseek-7b --calibrate --trials 4
 """
 import argparse
 
@@ -28,6 +38,40 @@ def fc_layers_of(cfg):
     return out
 
 
+def calibrate(args):
+    """Data-aware pass: a small study on the smoke twin's FFN shape."""
+    import tempfile
+
+    from repro.core.dse import DSEConfig
+    from repro.core.study import (EvaluatorConfig, Study,
+                                  make_model_evaluator)
+
+    cfg = get_config(args.arch, "smoke")
+    M, N = cfg.d_ff, cfg.d_model
+    dse = DSEConfig(vl=4, rank_step=4, rank_cap=16, max_d=2, min_factor=2,
+                    weight_dtypes=("fp32", "int8"))
+    ecfg = EvaluatorConfig(train_steps=40, n_calib=2, n_eval=2,
+                           batch=2, seq=32)
+    print(f"\ncalibrated study on {cfg.name} smoke twin "
+          f"[{N}->{M}], {args.trials} trials:")
+    with tempfile.TemporaryDirectory() as tmp:
+        study = Study.create(f"{tmp}/study.json", M, N, dse,
+                             max_trials=args.trials)
+        study.run(make_model_evaluator(cfg, ecfg), batch_size=2)
+        print(f"{'plan':46s} {'dtype':5s} {'act_err':>8s} {'ppl_d':>8s}")
+        for t in study.ranking():
+            print(f"{t.solution.plan.describe():46s} "
+                  f"{t.solution.weight_dtype:5s} "
+                  f"{t.metrics['act_err']:8.4f} "
+                  f"{t.metrics['ppl_delta']:+8.4f}")
+        best = study.best()
+        cheap = study.trials[0]
+        if (best.tid != cheap.tid):
+            print(f"-> measured best (tid {best.tid}) is NOT the "
+                  f"statically cheapest (tid {cheap.tid}) — the proxy "
+                  f"ranking would have picked the wrong plan")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen3-32b")
@@ -35,6 +79,11 @@ def main():
     ap.add_argument("--length", type=int, default=2)
     ap.add_argument("--min-factor", type=int, default=8)
     ap.add_argument("--families", default="ffn,attn,lm_head")
+    ap.add_argument("--calibrate", action="store_true",
+                    help="follow up with a data-aware study of the FFN "
+                         "shape on the smoke twin (DESIGN.md §12)")
+    ap.add_argument("--trials", type=int, default=4,
+                    help="trials for --calibrate")
     args = ap.parse_args()
 
     cfg = get_config(args.arch, "full")
@@ -64,6 +113,8 @@ def main():
               f"{dp/plan.params:9.1f} {dense_flops(M, N, False)/plan.flops:8.1f}")
     print(f"\nper-layer FC params: {tot_dense:,} -> {tot_tt:,} "
           f"({tot_dense/tot_tt:.1f}x compression of factorized families)")
+    if args.calibrate:
+        calibrate(args)
 
 
 if __name__ == "__main__":

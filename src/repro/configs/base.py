@@ -20,6 +20,15 @@ class TTConfig:
     rank: int = 16
     length: int = 2                          # paper §6.4 deploys length-2
     min_factor: int = 8                      # TPU MXU-utilization constraint
+    # Surgical per-shape factorization picks — the study engine's trial
+    # injection (DESIGN.md §12).  Entries are ((M, N), (ms, ns, ranks)):
+    # a projection of shape [N → M] in a covered family uses exactly that
+    # TTPlan instead of the config-level best_plan pick.  When any
+    # override is present, NON-overridden shapes stay dense even inside
+    # covered families, so one candidate plan can be evaluated end-to-end
+    # in isolation (same Model entry points, plans still resolved once by
+    # the PlanBook — zero re-resolutions during trial evaluation).
+    plan_overrides: tuple = ()
     backend: str = "xla"                     # xla | pallas_step | pallas_fused2
                                              #     | pallas_fused | auto
     autotune: str = "cached"                 # off | cached | measure — tile
@@ -29,6 +38,15 @@ class TTConfig:
                                              # dtype of the kernel path
                                              # (DESIGN.md §8); int8 keeps the
                                              # packed cores int8 in VMEM
+
+    def override_for(self, M: int, N: int
+                     ) -> tuple[tuple, tuple, tuple] | None:
+        """The (ms, ns, ranks) override pinned for a [N → M] projection,
+        or None."""
+        for key, plan in self.plan_overrides:
+            if tuple(key) == (M, N):
+                return tuple(plan[0]), tuple(plan[1]), tuple(plan[2])
+        return None
 
     @property
     def plan_policy(self) -> tuple[str, str, str]:

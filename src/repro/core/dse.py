@@ -24,7 +24,9 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Iterable, Sequence
+import math
+import warnings
+from typing import Callable, Iterable, Iterator, Sequence
 
 from .flops import (dense_flops, dense_params, einsum_loop_bounds,
                     max_tt_rank_at_cut, num_permutations_aligned, prod,
@@ -177,16 +179,49 @@ def count_stages(M: int, N: int, cfg: DSEConfig = DSEConfig()) -> dict[str, floa
 # Enumerated pipeline (stages 2–4) → concrete solutions
 # ---------------------------------------------------------------------------
 
-# first-order relative error contributed per core at each resident dtype;
-# the chain is multilinear so the proxy grows linearly in d — matches
-# quant.chain_error_bound's shape.  int8: symmetric 254-step grid
-# (core.quant round-trip bound); bf16: 8-bit significand (7 stored + 1
-# implicit), half-ulp rounding 2^-8 per element.  fp32 is the reference
-# (0) — a nonzero bf16 proxy is what keeps fp32 on the pareto front
-# instead of being spuriously dominated at equal FLOPs.
-CORE_REL_ERR = {"fp32": 0.0, "bf16": 2.0 ** -8, "int8": 1.0 / 254.0}
-
 _WEIGHT_ITEMSIZE = {"fp32": 4, "bf16": 2, "int8": 1}
+
+
+def core_err_bound(core_shape: Sequence[int], weight_dtype: str) -> float:
+    """First-order relative error contributed by ONE resident core at
+    ``weight_dtype`` — a *computed* upper bound, not a per-dtype constant.
+
+    The chain output is multilinear in the d cores, so per-core relative
+    perturbations add to first order (``quant.chain_error_bound``'s shape):
+
+    * fp32 is the reference representation: 0.
+    * bf16 rounds each element to an 8-bit significand (7 stored + 1
+      implicit); half-ulp rounding is a *relative* perturbation per
+      element, so ‖ΔG‖/‖G‖ ≤ 2⁻⁹ independent of the core size.
+    * int8 quantizes on the symmetric 254-step grid with per-core scale
+      s = max|G|/127 and |Δ| ≤ s/2 per element — an *absolute* grid, so
+      the relative error depends on the core's max/norm ratio.  For the
+      iid (Glorot-style) init the stack uses, E max|G| ≈ σ√(2 ln size)
+      and ‖G‖ ≈ σ√size, giving
+
+        ‖ΔG‖/‖G‖ ≤ (s/2)·√size / ‖G‖ ≈ √(2 ln size) / 254
+
+      — bigger cores quantize *relatively* worse, which the old constant
+      ``1/254`` per core missed entirely.
+    """
+    if weight_dtype not in _WEIGHT_ITEMSIZE:
+        raise ValueError(
+            f"unknown weight dtype {weight_dtype!r}: expected one of "
+            f"{tuple(_WEIGHT_ITEMSIZE)}")
+    if weight_dtype == "fp32":
+        return 0.0
+    if weight_dtype == "bf16":
+        return 2.0 ** -9
+    size = max(prod(core_shape), 2)
+    return math.sqrt(2.0 * math.log(size)) / 254.0
+
+
+def plan_err_proxy(plan: TTPlan, weight_dtype: str) -> float:
+    """Computed first-order upper bound on the relative output error of a
+    TT chain whose cores are resident at ``weight_dtype`` — Σ_t per-core
+    bounds (the chain is multilinear, so core perturbations add)."""
+    return sum(core_err_bound(shape, weight_dtype)
+               for shape in plan.core_shapes)
 
 
 def weight_bytes(core_params: int, d: int, weight_dtype: str) -> int:
@@ -214,11 +249,28 @@ class Solution:
     max_einsum_flops: int
     weight_dtype: str = "fp32"     # resident core dtype of this candidate
     bytes: int = 0                 # weight_bytes(core params, d, dtype)
-    quant_rel_err: float = 0.0     # first-order error proxy (0 for fp32)
+    err_proxy: float = 0.0         # computed first-order error upper bound
+                                   # (plan_err_proxy; 0 for fp32)
+    # measured trial metrics, attached by the study engine / quality gate
+    # (core.study): None until the candidate has actually been evaluated
+    act_err: float | None = None   # activation-aware ‖WX−TT(W)X‖/‖WX‖
+    ppl_delta: float | None = None  # end-to-end perplexity delta vs dense
+    tok_s: float | None = None     # measured serving decode throughput
 
     @property
     def d(self) -> int:
         return self.plan.d
+
+    @property
+    def quant_rel_err(self) -> float:
+        """DEPRECATED alias of :attr:`err_proxy` (the old name of the
+        analytic accuracy axis; kept so existing callers keep working)."""
+        warnings.warn("Solution.quant_rel_err is deprecated — use "
+                      "Solution.err_proxy", DeprecationWarning, stacklevel=2)
+        return self.err_proxy
+
+
+_NO_DEFAULT = object()
 
 
 @dataclasses.dataclass
@@ -228,8 +280,12 @@ class DSEResult:
     counts: dict[str, float]
     solutions: list[Solution]      # sorted by FLOPs ascending
 
-    def best(self, length: int | None = None, rank: int | None = None
-             ) -> Solution | None:
+    def best(self, length: int | None = None, rank: int | None = None,
+             default=_NO_DEFAULT) -> Solution | None:
+        """First (= cheapest, list is FLOPs-sorted) solution matching the
+        filters.  No match raises a ValueError naming the filters unless a
+        ``default`` is supplied (pass ``default=None`` for the legacy
+        None-on-miss behavior)."""
         for s in self.solutions:
             if length is not None and s.d != length:
                 continue
@@ -237,7 +293,22 @@ class DSEResult:
                                         for r in s.plan.ranks):
                 continue
             return s
-        return None
+        if default is not _NO_DEFAULT:
+            return default
+        raise ValueError(
+            f"no surviving solution with length={length} rank={rank} for "
+            f"[{self.M}x{self.N}] ({len(self.solutions)} survivors) — "
+            f"relax the filters or widen DSEConfig (rank grid/min_factor)")
+
+    def measured_front(self, axes: Sequence[str] = (
+            "flops", "bytes", "tok_s", "ppl_delta")) -> list[Solution]:
+        """Pareto front over measured trial metrics: only solutions that
+        carry every requested axis (i.e. were actually evaluated) compete.
+        Default axes are the quality-gate contract: static cost (flops,
+        bytes) × measured serving throughput × measured quality."""
+        evaluated = [s for s in self.solutions
+                     if all(getattr(s, a) is not None for a in axes)]
+        return pareto_front(evaluated, axes=axes)
 
 
 def _uniform_rank_grid(ms, ns, cfg: DSEConfig) -> Iterable[int]:
@@ -250,70 +321,175 @@ def _uniform_rank_grid(ms, ns, cfg: DSEConfig) -> Iterable[int]:
         r += cfg.rank_step
 
 
-def explore(M: int, N: int, cfg: DSEConfig = DSEConfig(),
-            with_counts: bool = True, measure_top: int = 0) -> DSEResult:
-    """Run the full paper pipeline for one FC layer ``[N → M]``.
+def generate_candidates(M: int, N: int, cfg: DSEConfig = DSEConfig(),
+                        counts: dict | None = None) -> Iterator[Solution]:
+    """Stages 2–4 of the funnel as a lazy candidate stream (the extracted
+    enumerate/prune core of :func:`explore` — the study engine
+    (``core.study``) consumes this directly as its trial space).
 
-    ``measure_top > 0`` adds stage 4b: re-rank that many of the leading
-    survivors by *measured* kernel time (``rerank_measured``) instead of
-    trusting the static FLOPs/thread-table ordering."""
-    counts = count_stages(M, N, cfg) if with_counts else {}
+    Yields one :class:`Solution` per surviving plan × enumerated weight
+    dtype, in shape-enumeration order (deterministic).  ``counts``, if
+    supplied, is filled in place with the funnel tallies as the stream is
+    consumed (``vectorized_enumerated`` / ``initial_layer`` /
+    ``scalability`` count PLANS; the weight-dtype twins are memory-model
+    variants of a plan, tallied as ``dtype_enumerated``)."""
     dense_f, dense_p = dense_flops(M, N), dense_params(M, N)
-
-    survivors: list[Solution] = []
-    n_vec = n_init = n_scal = 0
+    c = counts if counts is not None else {}
+    c.update(vectorized_enumerated=0, initial_layer=0, scalability=0,
+             dtype_enumerated=0)
     for ms, ns in aligned_combination_shapes(M, N, cfg.max_d, cfg.min_d,
                                              cfg.min_factor):
         for R in _uniform_rank_grid(ms, ns, cfg):
-            n_vec += 1
+            c["vectorized_enumerated"] += 1
             plan = make_plan(ms, ns, R)
             f = tt_flops(ms, ns, plan.ranks)
             p = tt_params(ms, ns, plan.ranks)
             # stage 3: initial-layer constraint (§4.2.2)
             if f >= dense_f or p >= dense_p:
                 continue
-            n_init += 1
+            c["initial_layer"] += 1
             # stage 4: scalability constraint (§4.2.3)
             bounds = einsum_loop_bounds(ms, ns, plan.ranks, cfg.batch)
             heaviest = max(b["flops"] for b in bounds)
             if plan.d > cfg.max_scalable_d and heaviest < cfg.heavy_flops_min:
                 continue
             threads = tuple(select_threads(b["flops"], cfg) for b in bounds)
-            n_scal += 1
+            c["scalability"] += 1
             # one candidate per enumerated weight dtype: FLOPs are dtype-
             # invariant, the memory footprint and the quantization-error
             # proxy are not — this is what puts mixed-precision solutions
             # on the pareto front (DESIGN.md §8)
             for wd in cfg.weight_dtypes:
                 wb = weight_bytes(plan.params, plan.d, wd)  # validates wd
-                survivors.append(Solution(
-                    plan, f, p, threads, heaviest, weight_dtype=wd,
-                    bytes=wb, quant_rel_err=plan.d * CORE_REL_ERR[wd]))
+                c["dtype_enumerated"] += 1
+                yield Solution(plan, f, p, threads, heaviest,
+                               weight_dtype=wd, bytes=wb,
+                               err_proxy=plan_err_proxy(plan, wd))
 
+
+def count_enumerated(M: int, N: int, cfg: DSEConfig = DSEConfig()) -> int:
+    """Analytic count of the enumerated stage-2 grid — the number of
+    (shape, uniform rank) pairs :func:`generate_candidates` visits, i.e.
+    ``explore()``'s ``vectorized_enumerated``.  Unlike the Table-1/2
+    ``vectorized`` column (independent per-cut rank choices at
+    min_factor 2) this prices exactly the uniform-rank grid under
+    ``cfg.min_factor``, so tests can assert parity with enumeration."""
+    n = 0
+    for ms, ns in aligned_combination_shapes(M, N, cfg.max_d, cfg.min_d,
+                                             cfg.min_factor):
+        d = len(ms)
+        cap = min(cfg.rank_cap,
+                  min(max_tt_rank_at_cut(ms, ns, t) for t in range(1, d)))
+        if cap >= cfg.vl:
+            n += (cap - cfg.vl) // cfg.rank_step + 1
+    return n
+
+
+@dataclasses.dataclass(frozen=True)
+class QualityGate:
+    """Measured-quality admission contract for :func:`explore` (and the
+    study engine): the leading ``top_k`` survivors are handed to
+    ``evaluate`` (a trial evaluator returning a metrics dict with any of
+    ``act_err`` / ``ppl_delta`` / ``tok_s`` — ``core.study`` builds the
+    model-level one), the metrics are attached to the solutions, and any
+    candidate whose measured perplexity delta exceeds ``max_ppl_delta``
+    is REJECTED from the result — the funnel can no longer crown a plan
+    that destroys model quality."""
+    evaluate: Callable[[Solution], dict]
+    max_ppl_delta: float
+    top_k: int = 8
+
+    def admits(self, metrics: dict) -> bool:
+        ppl = metrics.get("ppl_delta")
+        return ppl is None or ppl <= self.max_ppl_delta
+
+
+_METRIC_FIELDS = ("act_err", "ppl_delta", "tok_s")
+
+
+def with_metrics(sol: Solution, metrics: dict) -> Solution:
+    """Attach measured trial metrics to a solution (ignores unknown
+    keys so evaluators can report extra diagnostics)."""
+    known = {k: metrics[k] for k in _METRIC_FIELDS if k in metrics}
+    return dataclasses.replace(sol, **known) if known else sol
+
+
+def apply_quality_gate(res: DSEResult, gate: QualityGate) -> DSEResult:
+    """Evaluate the leading ``gate.top_k`` solutions, attach their
+    measured metrics, drop the ones the gate rejects.  The tail past
+    ``top_k`` is kept un-evaluated (it was already losing on the static
+    axes).  ``counts`` gains ``quality_evaluated`` / ``quality_gated``."""
+    kept: list[Solution] = []
+    n_eval = n_gated = 0
+    for s in res.solutions[:gate.top_k]:
+        measured = with_metrics(s, gate.evaluate(s))
+        n_eval += 1
+        if (measured.ppl_delta is not None
+                and measured.ppl_delta > gate.max_ppl_delta):
+            n_gated += 1
+            continue
+        kept.append(measured)
+    counts = dict(res.counts, quality_evaluated=n_eval,
+                  quality_gated=n_gated)
+    return DSEResult(res.M, res.N, counts,
+                     kept + res.solutions[gate.top_k:])
+
+
+def explore(M: int, N: int, cfg: DSEConfig = DSEConfig(),
+            with_counts: bool = True, measure_top: int = 0,
+            quality_gate: QualityGate | None = None) -> DSEResult:
+    """Run the full paper pipeline for one FC layer ``[N → M]``.
+
+    ``measure_top > 0`` adds stage 4b: re-rank that many of the leading
+    survivors by *measured* kernel time (``rerank_measured``) instead of
+    trusting the static FLOPs/thread-table ordering.
+
+    ``quality_gate`` adds stage 5 (the accuracy loop, DESIGN.md §12): the
+    leading ``gate.top_k`` survivors are evaluated for measured quality
+    (activation error / perplexity delta / serving tok/s) and candidates
+    above the gate's perplexity-delta threshold are rejected — applied
+    AFTER the measured rerank so the gate sees the deployment ordering."""
+    counts = count_stages(M, N, cfg) if with_counts else {}
+    funnel: dict = {}
+    survivors = list(generate_candidates(M, N, cfg, counts=funnel))
     survivors.sort(key=lambda s: (s.flops, s.params, s.bytes))
-    counts["vectorized_enumerated"] = n_vec
-    counts["initial_layer"] = n_init
-    # the funnel stage counts PLANS surviving the prune; the weight-dtype
-    # twins are memory-model variants of a plan, not pruning outcomes
-    counts["scalability"] = n_scal
-    counts["dtype_enumerated"] = len(survivors)
+    counts.update(funnel)
     res = DSEResult(M, N, counts, survivors)
     if measure_top > 0:
         res = rerank_measured(res, batch=max(cfg.batch, 1),
                               limit=measure_top)
+    if quality_gate is not None:
+        res = apply_quality_gate(res, quality_gate)
     return res
 
 
-def _dominates(o: Solution, s: Solution) -> bool:
-    return (o.flops <= s.flops and o.bytes <= s.bytes
-            and o.quant_rel_err <= s.quant_rel_err
-            and (o.flops < s.flops or o.bytes < s.bytes
-                 or o.quant_rel_err < s.quant_rel_err))
+# axes measured "bigger is better" — negated before comparison so the
+# pareto machinery uniformly minimizes
+_MAXIMIZE_AXES = frozenset({"tok_s"})
+DEFAULT_AXES = ("flops", "bytes", "err_proxy")
 
 
-def pareto_front(solutions: Sequence[Solution]) -> list[Solution]:
-    """Non-dominated set over (flops, bytes, quant_rel_err), all minimized,
-    returned in (flops, bytes, err) order.
+def _axis_values(s: Solution, axes: Sequence[str]) -> tuple:
+    vals = []
+    for a in axes:
+        v = getattr(s, a)
+        if v is None:
+            raise ValueError(
+                f"solution {s.plan.describe()} has no measured {a!r} — "
+                f"evaluate it (quality gate / study trial) before asking "
+                f"for a front over {tuple(axes)}")
+        vals.append(-v if a in _MAXIMIZE_AXES else v)
+    return tuple(vals)
+
+
+def pareto_front(solutions: Sequence[Solution],
+                 axes: Sequence[str] = DEFAULT_AXES) -> list[Solution]:
+    """Non-dominated set over ``axes`` (attribute names of
+    :class:`Solution`; all minimized except ``tok_s``), returned sorted by
+    the axis tuple.  The default axes are the analytic front
+    (flops, bytes, err_proxy); the quality-gate contract uses
+    ``("flops", "bytes", "tok_s", "ppl_delta")`` via
+    :meth:`DSEResult.measured_front`.
 
     With mixed weight dtypes enumerated (``DSEConfig.weight_dtypes``) the
     int8 twin of a plan has identical FLOPs, a ~4× smaller byte footprint
@@ -326,13 +502,20 @@ def pareto_front(solutions: Sequence[Solution]) -> list[Solution]:
     always dominated by some member of the front built so far — so one
     pass against the accepted front suffices (the survivor lists here are
     thousands long after dtype enumeration; all-pairs would be O(n²))."""
-    order = sorted(solutions,
-                   key=lambda s: (s.flops, s.bytes, s.quant_rel_err))
-    front: list[Solution] = []
-    for s in order:
-        if not any(_dominates(o, s) for o in front):
-            front.append(s)
-    return front
+    axes = tuple(axes)
+    decorated = sorted(((_axis_values(s, axes), s) for s in solutions),
+                       key=lambda vs: vs[0])
+
+    def dominates(o: tuple, s: tuple) -> bool:
+        return all(a <= b for a, b in zip(o, s)) and o != s
+
+    front: list[tuple] = []
+    out: list[Solution] = []
+    for v, s in decorated:
+        if not any(dominates(o, v) for o in front):
+            front.append(v)
+            out.append(s)
+    return out
 
 
 def rerank_measured(res: DSEResult, batch: int = 32, limit: int = 8,
@@ -424,7 +607,8 @@ def best_plan(M: int, N: int, rank: int = 8, length: int | None = 2,
     if min_factor is not None:
         cfg = dataclasses.replace(cfg, min_factor=min_factor)
     res = explore(M, N, cfg, with_counts=False)
-    sol = res.best(length=length, rank=rank)
+    sol = res.best(length=length, rank=rank, default=None)
     if sol is None and length is not None:
-        sol = res.best(length=None, rank=rank)   # relax the length preference
+        # relax the length preference
+        sol = res.best(length=None, rank=rank, default=None)
     return sol.plan if sol else None

@@ -1,0 +1,570 @@
+"""DSE study engine: persistent, resumable, data-aware trial evaluation
+(DESIGN.md §12).
+
+``core.dse`` is the analytic funnel — enumerate, prune, rank by static
+cost.  This module closes the accuracy loop around it, Optuna-style
+(SNIPPETS §2): a :class:`Study` owns a trial space (the funnel's
+survivors), evaluates trials in parallel batches against *measured*
+objectives, and persists every outcome to a schema-versioned JSON file so
+an interrupted study resumes bit-deterministically.
+
+Three layers, composable:
+
+* :class:`Study` — the engine: trial bookkeeping, atomic persistence
+  (temp + ``os.replace``, same idiom as the autotune cache), batched
+  parallel execution, seeded resume, pluggable objectives.
+* :func:`activation_score` — the data term: whitened weight-space error
+  ``‖(W − Ŵ)X‖_F / ‖W X‖_F`` evaluated from a calibration second moment
+  ``Σ = E[xxᵀ]`` (Data-Driven Low-Rank Compression, arxiv 2107.05787) —
+  no activations stored, only the [N, N] Gram from
+  ``Model.activation_stats``.
+* :func:`make_model_evaluator` — the end-to-end trial evaluator: builds a
+  TT twin of a dense reference model with exactly one projection
+  factorized (``TTConfig.plan_overrides``), decompose-initialized from
+  the dense weights, optionally finetuned (``training.finetune``), and
+  measures activation error, perplexity delta, and serving decode tok/s
+  through the frozen-plan ``Model``/``TTExecutionPlan`` path — asserting
+  ZERO plan re-resolutions during the measured window.
+
+State file schema (``STUDY_SCHEMA``):
+
+.. code-block:: json
+
+    {"schema": 1, "M": 128, "N": 64, "seed": 0,
+     "trials": [{"tid": 0, "seed": 913, "status": "done",
+                 "solution": {"ms": [...], "ns": [...], "ranks": [...],
+                              "weight_dtype": "fp32"},
+                 "metrics": {"act_err": 0.01, "ppl_delta": 0.2,
+                             "tok_s": 512.0}}]}
+
+Unknown schemas are refused loudly (a study is an experiment record —
+silently reinterpreting one corrupts science); plan identity is stored as
+(ms, ns, ranks) and re-derived through ``generate_candidates``-equivalent
+pricing on load, so static costs can never drift from the code that
+computed them.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import tempfile
+import threading
+from concurrent.futures import ThreadPoolExecutor
+from typing import Callable, Sequence
+
+import numpy as np
+
+from .dse import (DSEConfig, DSEResult, Solution, count_stages,
+                  generate_candidates, plan_err_proxy, weight_bytes,
+                  with_metrics)
+from .flops import einsum_loop_bounds, tt_flops, tt_params
+from .tt import TTPlan, tt_decompose, tt_reconstruct
+
+STUDY_SCHEMA = 1
+
+
+# ---------------------------------------------------------------------------
+# Solution (de)serialization — plan identity only; costs re-priced on load
+# ---------------------------------------------------------------------------
+
+def solution_from_plan(ms: Sequence[int], ns: Sequence[int],
+                       ranks: Sequence[int], weight_dtype: str,
+                       cfg: DSEConfig = DSEConfig()) -> Solution:
+    """Price a (ms, ns, ranks, dtype) identity into a full Solution with
+    the same static costs :func:`repro.core.dse.generate_candidates`
+    would attach — the load-path twin of candidate generation."""
+    plan = TTPlan(tuple(int(m) for m in ms), tuple(int(n) for n in ns),
+                  tuple(int(r) for r in ranks))
+    f = tt_flops(plan.ms, plan.ns, plan.ranks)
+    p = tt_params(plan.ms, plan.ns, plan.ranks)
+    bounds = einsum_loop_bounds(plan.ms, plan.ns, plan.ranks, cfg.batch)
+    from .dse import select_threads
+    threads = tuple(select_threads(b["flops"], cfg) for b in bounds)
+    return Solution(plan, f, p, threads,
+                    max(b["flops"] for b in bounds),
+                    weight_dtype=weight_dtype,
+                    # packed core elements (plan.params), NOT the padded
+                    # kernel layout count p — must match the generator
+                    bytes=weight_bytes(plan.params, plan.d, weight_dtype),
+                    err_proxy=plan_err_proxy(plan, weight_dtype))
+
+
+def _sol_to_dict(s: Solution) -> dict:
+    return {"ms": list(s.plan.ms), "ns": list(s.plan.ns),
+            "ranks": list(s.plan.ranks), "weight_dtype": s.weight_dtype}
+
+
+# ---------------------------------------------------------------------------
+# Trials
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class Trial:
+    tid: int
+    solution: Solution
+    seed: int
+    status: str = "pending"            # pending | done | failed
+    metrics: dict = dataclasses.field(default_factory=dict)
+
+    @property
+    def measured(self) -> Solution:
+        return with_metrics(self.solution, self.metrics)
+
+
+def trial_seed(study_seed: int, tid: int) -> int:
+    """Deterministic per-trial seed — a pure function of (study seed,
+    tid), NOT of execution order, so a resumed study re-derives identical
+    randomness for its remaining trials."""
+    return (study_seed * 1_000_003 + tid * 9_176) % (2 ** 31 - 1)
+
+
+# ---------------------------------------------------------------------------
+# The study engine
+# ---------------------------------------------------------------------------
+
+class Study:
+    """Persistent, resumable DSE study over one FC layer's trial space.
+
+    Lifecycle: :meth:`create` enumerates the funnel's survivors into
+    pending trials and persists them; :meth:`run` evaluates pending
+    trials in parallel batches, checkpointing state after every batch
+    (so a kill mid-study loses at most one in-flight batch, and those
+    trials simply re-run on resume — same seeds, same results);
+    :meth:`load` / :meth:`open` resume.  Results are recorded by trial
+    id, never by completion order, so rankings are deterministic under
+    any worker interleaving."""
+
+    def __init__(self, path: str, M: int, N: int, seed: int,
+                 trials: list[Trial], dse: DSEConfig = DSEConfig()):
+        self.path = path
+        self.M, self.N, self.seed = int(M), int(N), int(seed)
+        self.trials = trials
+        self.dse = dse
+
+    # -------------------------------------------------------- construction
+    @classmethod
+    def create(cls, path: str, M: int, N: int,
+               cfg: DSEConfig = DSEConfig(), seed: int = 0,
+               max_trials: int | None = None) -> "Study":
+        """Seed a fresh study: the funnel's survivors (static-cost order,
+        cheapest first) become the trial space.  Refuses to clobber an
+        existing state file — resuming and re-creating must never be
+        confusable."""
+        if os.path.exists(path):
+            raise FileExistsError(
+                f"study state already exists at {path} — Study.load() to "
+                f"resume, or remove the file to start over")
+        sols = sorted(generate_candidates(M, N, cfg),
+                      key=lambda s: (s.flops, s.params, s.bytes))
+        if max_trials is not None:
+            sols = sols[:max_trials]
+        trials = [Trial(tid=i, solution=s, seed=trial_seed(seed, i))
+                  for i, s in enumerate(sols)]
+        study = cls(path, M, N, seed, trials, cfg)
+        study.save()
+        return study
+
+    @classmethod
+    def load(cls, path: str, cfg: DSEConfig = DSEConfig()) -> "Study":
+        with open(path) as f:
+            state = json.load(f)
+        schema = state.get("schema")
+        if schema != STUDY_SCHEMA:
+            raise ValueError(
+                f"study state {path} has schema {schema!r}, this code "
+                f"speaks {STUDY_SCHEMA} — refusing to reinterpret an "
+                f"experiment record")
+        trials = [Trial(tid=int(t["tid"]),
+                        solution=solution_from_plan(
+                            cfg=cfg, **t["solution"]),
+                        seed=int(t["seed"]),
+                        status=t.get("status", "pending"),
+                        metrics=dict(t.get("metrics", {})))
+                  for t in state["trials"]]
+        return cls(path, state["M"], state["N"], state["seed"], trials, cfg)
+
+    @classmethod
+    def open(cls, path: str, M: int, N: int,
+             cfg: DSEConfig = DSEConfig(), seed: int = 0,
+             max_trials: int | None = None) -> "Study":
+        """Resume-or-create entry point (what the CLI uses)."""
+        if os.path.exists(path):
+            return cls.load(path, cfg)
+        return cls.create(path, M, N, cfg, seed, max_trials)
+
+    # -------------------------------------------------------- persistence
+    def to_state(self) -> dict:
+        return {"schema": STUDY_SCHEMA, "M": self.M, "N": self.N,
+                "seed": self.seed,
+                "trials": [{"tid": t.tid, "seed": t.seed,
+                            "status": t.status,
+                            "solution": _sol_to_dict(t.solution),
+                            "metrics": t.metrics}
+                           for t in self.trials]}
+
+    def save(self) -> None:
+        """Atomic write: temp file + ``os.replace`` in the target's
+        directory (same filesystem ⇒ atomic rename), the autotune-cache
+        idiom — a crash mid-save leaves the previous state intact, never
+        a torn JSON."""
+        d = os.path.dirname(os.path.abspath(self.path))
+        os.makedirs(d, exist_ok=True)
+        fd, tmp = tempfile.mkstemp(dir=d, suffix=".tmp")
+        try:
+            with os.fdopen(fd, "w") as f:
+                json.dump(self.to_state(), f, indent=1, sort_keys=True)
+            os.replace(tmp, self.path)
+        finally:
+            if os.path.exists(tmp):
+                os.unlink(tmp)
+
+    # ---------------------------------------------------------- execution
+    def pending(self) -> list[Trial]:
+        return [t for t in self.trials if t.status == "pending"]
+
+    def run(self, evaluate: Callable[..., dict], batch_size: int = 4,
+            max_trials: int | None = None, workers: int | None = None,
+            log: Callable[[str], None] | None = None) -> int:
+        """Evaluate pending trials in tid order, ``batch_size`` at a time
+        on a thread pool (trial evaluation is jax-compute-bound, which
+        releases the GIL; process workers would re-trace every model per
+        trial).  ``evaluate(solution, seed)`` → metrics dict; a raising
+        trial is recorded ``failed`` with the error message, it does not
+        take the study down.  State is checkpointed after every batch.
+        Returns the number of trials evaluated this call."""
+        todo = self.pending()
+        if max_trials is not None:
+            todo = todo[:max_trials]
+        done = 0
+        for i in range(0, len(todo), max(batch_size, 1)):
+            batch = todo[i:i + max(batch_size, 1)]
+            with ThreadPoolExecutor(
+                    max_workers=workers or max(len(batch), 1)) as pool:
+                futs = [pool.submit(self._run_one, evaluate, t)
+                        for t in batch]
+                for t, fut in zip(batch, futs):
+                    t.status, t.metrics = fut.result()
+            done += len(batch)
+            self.save()
+            if log is not None:
+                for t in batch:
+                    log(f"trial {t.tid} [{t.solution.plan.describe()} "
+                        f"{t.solution.weight_dtype}] → {t.status} "
+                        f"{t.metrics}")
+        return done
+
+    @staticmethod
+    def _run_one(evaluate, trial: Trial) -> tuple[str, dict]:
+        try:
+            metrics = evaluate(trial.solution, trial.seed)
+        except Exception as e:                      # noqa: BLE001
+            return "failed", {"error": f"{type(e).__name__}: {e}"}
+        return "done", {k: (float(v) if isinstance(v, (int, float))
+                            else v) for k, v in metrics.items()}
+
+    # ------------------------------------------------------------ results
+    def completed(self) -> list[Trial]:
+        return [t for t in self.trials if t.status == "done"]
+
+    def ranking(self, objective: Callable[[Trial], float] | None = None
+                ) -> list[Trial]:
+        """Completed trials sorted ascending by ``objective`` (default:
+        measured perplexity delta, static FLOPs as tiebreak), tid as the
+        final tiebreak so equal-objective orderings are deterministic."""
+        obj = objective or (lambda t: (
+            t.metrics.get("ppl_delta", float("inf")), t.solution.flops))
+        return sorted(self.completed(), key=lambda t: (obj(t), t.tid))
+
+    def best(self, objective: Callable[[Trial], float] | None = None
+             ) -> Trial:
+        ranked = self.ranking(objective)
+        if not ranked:
+            raise ValueError(f"study {self.path} has no completed trials")
+        return ranked[0]
+
+    def result(self, with_counts: bool = False) -> DSEResult:
+        """The study as a :class:`DSEResult`: every completed trial's
+        solution with its measured metrics attached — feeds straight into
+        ``DSEResult.measured_front`` / ``pareto_front``."""
+        counts = count_stages(self.M, self.N, self.dse) if with_counts \
+            else {}
+        counts = dict(counts, trials=len(self.trials),
+                      trials_done=len(self.completed()))
+        sols = sorted((t.measured for t in self.completed()),
+                      key=lambda s: (s.flops, s.params, s.bytes))
+        return DSEResult(self.M, self.N, counts, sols)
+
+
+# ---------------------------------------------------------------------------
+# Activation-aware scoring (the data term)
+# ---------------------------------------------------------------------------
+
+def activation_score(W, plan: TTPlan, sigma, weight_dtype: str = "fp32"
+                     ) -> float:
+    """Data-aware relative error of factorizing ``W [M, N]`` per ``plan``:
+    ``‖(W − Ŵ) X‖_F / ‖W X‖_F`` over the calibration distribution,
+    computed from the input second moment ``Σ = E[xxᵀ] [N, N]`` as
+    ``√(tr(ΔΣΔᵀ) / tr(WΣWᵀ))`` with ``Δ = W − Ŵ`` — exact for the
+    captured batches, no activations materialized.
+
+    ``Ŵ`` is the TT-SVD reconstruction at the plan's ranks; for int8
+    candidates the cores are additionally round-tripped through the
+    serving quantizer, so the score prices what the deployed kernels
+    actually multiply by — the fp32 and int8 twins of one plan get
+    genuinely different data-aware scores."""
+    W = np.asarray(W, np.float64)
+    if W.shape != (plan.M, plan.N):
+        raise ValueError(f"W shape {W.shape} does not match plan "
+                         f"[{plan.M}x{plan.N}]")
+    cores = tt_decompose(W, plan)
+    if weight_dtype == "int8":
+        import jax.numpy as jnp
+
+        from .quant import dequantize_cores, quantize_cores
+        q, s = quantize_cores([np.asarray(c) for c in cores])
+        cores = [np.asarray(c) for c in dequantize_cores(q, s,
+                                                         jnp.float32)]
+    W_hat = np.asarray(tt_reconstruct([np.asarray(c, np.float64)
+                                       for c in cores]), np.float64)
+    sigma = np.asarray(sigma, np.float64)
+    delta = W - W_hat
+    num = float(np.trace(delta @ sigma @ delta.T))
+    den = float(np.trace(W @ sigma @ W.T))
+    return float(np.sqrt(max(num, 0.0) / max(den, 1e-30)))
+
+
+# ---------------------------------------------------------------------------
+# Model-level trial evaluator (the end-to-end term)
+# ---------------------------------------------------------------------------
+
+def _dense_weights_by_shape(params) -> dict[tuple[int, int], np.ndarray]:
+    """Map (N, M) → one dense weight slice [N, M] from a parameter tree
+    (first layer of a scanned stack — the representative the data-aware
+    score factorizes)."""
+    out: dict[tuple[int, int], np.ndarray] = {}
+
+    def walk(node):
+        if not isinstance(node, dict):
+            return
+        for k, v in node.items():
+            if k == "w" and not isinstance(v, dict):
+                w = np.asarray(v)
+                w = w.reshape((-1,) + w.shape[-2:])[0]
+                out.setdefault((w.shape[0], w.shape[1]), w)
+            elif isinstance(v, dict):
+                walk(v)
+    walk(params)
+    return out
+
+
+def _copy_backbone(tt_params: dict, dense_params: dict) -> dict:
+    """Overlay every non-TT leaf of the twin with the dense reference's
+    value, so dense and twin differ ONLY in the factorized projection."""
+    def walk(t_node, d_node):
+        out = {}
+        for k, v in t_node.items():
+            if k == "tt":
+                out[k] = v
+            elif isinstance(v, dict):
+                out[k] = walk(v, d_node.get(k, {})
+                              if isinstance(d_node, dict) else {})
+            else:
+                dv = (d_node.get(k) if isinstance(d_node, dict) else None)
+                out[k] = dv if dv is not None else v
+        return out
+    return walk(tt_params, dense_params)
+
+
+def _decode_tok_s(model, params, slots: int, prompt: int, steps: int
+                  ) -> float:
+    """Steady-state decode tok/s through the continuous-batching
+    scheduler at full occupancy (the ``bench_serve_tt`` evaluator shape:
+    admissions + compiles outside the timed window)."""
+    import time
+
+    from repro.data.pipeline import make_batch
+    from repro.serving.scheduler import Request, Scheduler
+
+    budget = steps + 4
+    sched = Scheduler(model, params, num_slots=slots,
+                      cache_len=prompt + budget + 2)
+    for b in range(slots):
+        toks = make_batch(model.cfg, 1, prompt, step=b)["tokens"]
+        sched.submit(Request(uid=b, inputs={"tokens": toks},
+                             max_new_tokens=budget))
+    sched.step()                   # admissions + first masked step
+    sched.step()                   # warm steady step
+    t0 = time.perf_counter()
+    for _ in range(steps):
+        sched.step()
+    return slots * steps / (time.perf_counter() - t0)
+
+
+# trials evaluating right now, across all evaluators (Study.run batches
+# share the process).  The global kernels.plan.PLAN_RESOLUTIONS counter is
+# only meaningful for the zero-replan assert when exactly one trial is in
+# flight — a concurrent trial's *build-time* priming legitimately bumps it
+# inside this trial's measured window.  The always-on invariant is
+# model-scoped instead: this twin's PlanBook must not grow.
+_IN_FLIGHT = 0
+_IN_FLIGHT_LOCK = threading.Lock()
+
+
+@dataclasses.dataclass(frozen=True)
+class EvaluatorConfig:
+    family: str = "ffn"            # families the twin may factorize in
+    n_calib: int = 2               # calibration batches (activation stats)
+    n_eval: int = 2                # held-out batches (perplexity)
+    batch: int = 2
+    seq: int = 32
+    calib_seed: int = 7777         # disjoint from the training default
+    measure_tok_s: bool = False    # serving throughput per trial (slow)
+    serve_slots: int = 2
+    serve_prompt: int = 8
+    serve_steps: int = 16
+    finetune_steps: int = 0        # >0: rank-adaptive core finetune before
+                                   # the perplexity measurement
+    train_steps: int = 0           # >0: train the dense reference first —
+                                   # an untrained net's weights are noise,
+                                   # so rank wouldn't correlate with
+                                   # quality and every trial would tie
+
+
+def make_model_evaluator(cfg, ecfg: EvaluatorConfig = EvaluatorConfig(),
+                         seed: int = 0):
+    """Build the end-to-end trial evaluator for one model config.
+
+    Returns ``evaluate(solution, seed=0) → metrics`` (satisfies both the
+    :class:`Study` trial signature and ``dse.QualityGate.evaluate``).
+    Setup — dense reference build/init, calibration capture, dense
+    perplexity — runs ONCE here; each trial then:
+
+    1. scores the candidate plan data-aware (:func:`activation_score`
+       against the captured Σ and the real dense weight),
+    2. builds a TT twin with exactly that projection factorized
+       (``TTConfig.plan_overrides``), backbone copied from the dense
+       reference, cores TT-SVD-initialized from the dense weight
+       (``training.finetune.tt_params_from_dense``) and optionally
+       finetuned,
+    3. measures perplexity delta (and, if configured, scheduler decode
+       tok/s) through the frozen-plan path, asserting ZERO plan
+       re-resolutions inside the measured window (``plan_resolutions``
+       is returned in the metrics and must be 0).
+
+    The returned metrics dict carries ``act_err`` / ``ppl_delta`` /
+    ``tok_s`` (the ``Solution`` measured fields) plus diagnostics
+    (``dense_ppl``, ``tt_ppl``, ``plan_resolutions``, finetune deltas).
+    """
+    import dataclasses as _dc
+
+    import jax
+
+    from repro.configs import build
+    from repro.data.pipeline import calibration_batches
+    from repro.kernels import plan as plan_mod
+    from repro.training.finetune import (FinetuneConfig, finetune_tt,
+                                         tt_params_from_dense)
+
+    dense_cfg = _dc.replace(cfg, tt=_dc.replace(cfg.tt, enabled=False,
+                                                plan_overrides=()))
+    model = build(dense_cfg)
+    params = model.init(jax.random.PRNGKey(seed))
+    if ecfg.train_steps > 0:
+        import jax.numpy as jnp
+
+        from repro.data.pipeline import make_batch
+        from repro.training.optimizer import adamw_init
+        from repro.training.train_loop import TrainConfig, make_train_step
+        tcfg = TrainConfig(compute_dtype=jnp.float32, remat=False)
+        state = {"params": params, "opt": adamw_init(params)}
+        step = jax.jit(make_train_step(model, tcfg), donate_argnums=(0,))
+        for i in range(ecfg.train_steps):
+            state, _ = step(state, make_batch(dense_cfg, ecfg.batch,
+                                              ecfg.seq, step=i))
+        params = state["params"]
+    calib = calibration_batches(dense_cfg, ecfg.batch, ecfg.seq,
+                                ecfg.n_calib, seed=ecfg.calib_seed)
+    evalb = calibration_batches(dense_cfg, ecfg.batch, ecfg.seq,
+                                ecfg.n_eval, seed=ecfg.calib_seed + 1)
+    stats = model.activation_stats(params, calib)
+    weights = _dense_weights_by_shape(params)
+
+    def mean_loss(m, p):
+        fn = jax.jit(lambda pp, bb: m.loss(pp, bb, remat=False))
+        return float(np.mean([float(fn(p, b)) for b in evalb]))
+
+    dense_loss = mean_loss(model, params)
+    dense_ppl = float(np.exp(dense_loss))
+
+    def evaluate(sol: Solution, eval_seed: int = 0) -> dict:
+        plan = sol.plan
+        key = (plan.N, plan.M)
+        if key not in stats or key not in weights:
+            raise ValueError(
+                f"no calibrated projection of shape [N={plan.N} → "
+                f"M={plan.M}] in {dense_cfg.name}: calibrated shapes "
+                f"{sorted(stats)} — the trial space must come from the "
+                f"model's own projection shapes")
+        w = weights[key]                               # [N, M], y = x @ w
+        act_err = activation_score(w.T, plan, stats[key]["sigma"],
+                                   sol.weight_dtype)
+
+        tt_cfg = _dc.replace(cfg, tt=_dc.replace(
+            cfg.tt, enabled=True,
+            families=("ffn", "attn", "lm_head"),
+            plan_overrides=(((plan.M, plan.N),
+                             (plan.ms, plan.ns, plan.ranks)),),
+            weights="int8" if sol.weight_dtype == "int8" else "fp32"))
+        twin = build(tt_cfg)
+        tt_params = _copy_backbone(twin.init(jax.random.PRNGKey(seed)),
+                                   params)
+        tt_params = tt_params_from_dense(tt_params, params)
+        metrics: dict = {"act_err": act_err, "dense_ppl": dense_ppl}
+        if ecfg.finetune_steps > 0:
+            pre = mean_loss(twin, tt_params)
+            tt_params, hist = finetune_tt(
+                twin, tt_params, calib,
+                FinetuneConfig(steps=ecfg.finetune_steps))
+            metrics["finetune_loss_pre"] = pre
+            metrics["finetune_loss_post"] = hist[-1]
+        if sol.weight_dtype == "int8":
+            tt_params = twin.quantize_params(tt_params)
+        global _IN_FLIGHT
+        with _IN_FLIGHT_LOCK:
+            _IN_FLIGHT += 1
+        try:
+            twin.plan_book                   # prime: resolve plans NOW
+            mean_loss(twin, tt_params)       # warm traces (int8 twin may
+            #                                  resolve its one extra plan
+            #                                  on the first quantized call)
+            book_before = len(twin.plan_book)
+            global_before = plan_mod.plan_resolutions()
+            solo_before = _IN_FLIGHT == 1
+            tt_loss = mean_loss(twin, tt_params)
+            if ecfg.measure_tok_s:
+                metrics["tok_s"] = _decode_tok_s(
+                    twin, tt_params, ecfg.serve_slots, ecfg.serve_prompt,
+                    ecfg.serve_steps)
+            replans = len(twin.plan_book) - book_before
+            global_replans = plan_mod.plan_resolutions() - global_before
+            solo = solo_before and _IN_FLIGHT == 1
+        finally:
+            with _IN_FLIGHT_LOCK:
+                _IN_FLIGHT -= 1
+        # solo ⇒ the global counter is attributable to this trial too —
+        # the stronger assert (it also catches direct plan_tt_forward
+        # calls that bypass the book).  Concurrent ⇒ the book-local
+        # invariant is the sound one.
+        if replans or (solo and global_replans):
+            raise RuntimeError(
+                f"{max(replans, global_replans)} plan re-resolutions "
+                f"during trial evaluation of {plan.describe()} — the "
+                f"measured window must run entirely through frozen "
+                f"TTExecutionPlans")
+        metrics["plan_resolutions"] = replans
+        metrics["tt_ppl"] = float(np.exp(tt_loss))
+        metrics["ppl_delta"] = metrics["tt_ppl"] - dense_ppl
+        return metrics
+
+    return evaluate

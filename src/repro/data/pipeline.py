@@ -67,6 +67,17 @@ def make_batch(cfg: ModelConfig, B: int, S: int, step: int,
     return out
 
 
+def calibration_batches(cfg: ModelConfig, B: int, S: int, n: int,
+                        seed: int = 7777) -> list[dict]:
+    """A fixed, seed-determined calibration set for data-aware DSE
+    (DESIGN.md §12).  Deliberately a *list*, not an iterator: the study
+    engine evaluates many candidate plans against the SAME batches, and
+    resume-determinism requires the set to be a pure function of
+    (cfg, B, S, n, seed).  Uses a seed space disjoint from the training
+    default so calibration never aliases training data."""
+    return [make_batch(cfg, B, S, step=i, seed=seed) for i in range(n)]
+
+
 class DataIterator:
     """Checkpointable iterator facade over make_batch."""
 

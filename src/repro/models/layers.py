@@ -6,6 +6,7 @@ available feature rather than a bolt-on (DESIGN.md §4).
 """
 from __future__ import annotations
 
+import contextlib
 import functools
 
 import jax
@@ -15,10 +16,75 @@ import numpy as np
 from repro.configs.base import TTConfig
 from repro.core.dse import DSEConfig, explore
 from repro.core.flops import prod
-from repro.core.tt import TTPlan
+from repro.core.tt import TTPlan, make_plan
 from repro.kernels.ops import tt_forward
 from repro.kernels.plan import PlanBook, TTExecutionPlan
 from .spec import ParamSpec
+
+
+# ---------------------------------------------------------------------------
+# Activation statistics tap (data-aware DSE calibration, DESIGN.md §12)
+# ---------------------------------------------------------------------------
+
+# When a capture is active this holds the accumulator dict; linear_apply
+# streams each projection's input second moment into it via
+# jax.debug.callback, so the tap works inside lax.scan'd layer stacks and
+# vmapped MoE experts (sums are order-invariant — callback ordering and
+# batching don't matter).  None ⇒ zero overhead on every normal path.
+_ACT_TAP: dict | None = None
+
+
+@contextlib.contextmanager
+def capture_activation_stats():
+    """Collect per-projection input statistics during *eager* forward
+    passes (``Model.activation_stats`` is the entry point).
+
+    Yields the accumulator: ``{(N, M): {"gram": Σ xᵀx [N,N] float64,
+    "count": rows}}`` keyed by projection signature, aggregated across
+    every layer/expert sharing that shape.  The input covariance
+    Σ = gram/count is exactly what activation-aware TT scoring needs
+    (‖(W−Ŵ)X‖²_F = tr(Δ Σ Δᵀ)·count) without ever materializing X.
+
+    Do NOT trace a jitted entry point while a capture is active: the
+    callback would be baked into the cached executable with a stale
+    store.  Call ``jax.effects_barrier()`` before reading the store (the
+    callbacks are dispatched asynchronously); the caller-facing wrapper
+    does this."""
+    global _ACT_TAP
+    prev, store = _ACT_TAP, {}
+    _ACT_TAP = store
+    try:
+        yield store
+    finally:
+        _ACT_TAP = prev
+
+
+def _tap_accumulate(store: dict, key: tuple, gram, count) -> None:
+    """Host-side accumulator: sums away any leading batching axes the
+    callback picked up under vmap, then folds into the store."""
+    g = np.asarray(gram, np.float64)
+    g = g.reshape((-1,) + g.shape[-2:]).sum(0)
+    c = float(np.sum(np.asarray(count, np.float64)))
+    slot = store.setdefault(key, {"gram": np.zeros(g.shape, np.float64),
+                                  "count": 0.0})
+    slot["gram"] += g
+    slot["count"] += c
+
+
+def _tap_record(params: dict, x: jax.Array) -> None:
+    if "w" in params:
+        N, M = (int(params["w"].shape[-2]), int(params["w"].shape[-1]))
+    else:
+        tt = params["tt"]
+        d = sum(1 for k in tt if k.startswith("c"))
+        shapes = [tt[f"c{t}"].shape[-4:] for t in range(d)]
+        N = prod(int(s[1]) for s in shapes)
+        M = prod(int(s[2]) for s in shapes)
+    x2 = x.reshape(-1, x.shape[-1]).astype(jnp.float32)
+    gram = x2.T @ x2
+    rows = jnp.asarray(x2.shape[0], jnp.float32)
+    jax.debug.callback(
+        functools.partial(_tap_accumulate, _ACT_TAP, (N, M)), gram, rows)
 
 
 # ---------------------------------------------------------------------------
@@ -31,7 +97,8 @@ def plan_for(M: int, N: int, rank: int, length: int, min_factor: int
     cfg = DSEConfig(vl=rank, rank_step=rank, rank_cap=rank,
                     min_factor=min_factor, max_d=max(length, 4))
     res = explore(M, N, cfg, with_counts=False)
-    sol = res.best(length=length, rank=rank) or res.best(rank=rank)
+    sol = (res.best(length=length, rank=rank, default=None)
+           or res.best(rank=rank, default=None))
     return sol.plan if sol else None
 
 
@@ -57,7 +124,16 @@ def linear_spec(in_dim: int, out_dim: int, tt: TTConfig | None,
     a dense weight."""
     use_tt = (tt is not None and tt.enabled and family in tt.families)
     if use_tt:
-        plan = plan_for(out_dim, in_dim, tt.rank, tt.length, tt.min_factor)
+        if tt.plan_overrides:
+            # Study-trial mode: only the overridden shape is factorized —
+            # everything else stays dense so one candidate is measured in
+            # isolation (TTConfig.plan_overrides contract).
+            ov = tt.override_for(out_dim, in_dim)
+            plan = (make_plan(list(ov[0]), list(ov[1]), list(ov[2]))
+                    if ov is not None else None)
+        else:
+            plan = plan_for(out_dim, in_dim, tt.rank, tt.length,
+                            tt.min_factor)
         if plan is not None:
             out = {"tt": _tt_core_specs(plan, dtype)}
             if bias:
@@ -91,6 +167,8 @@ def linear_apply(params: dict, x: jax.Array,
     ``{c0..c{d-1} int8, scales [d] fp32}`` produced by
     ``quantize_tt_params`` — the int8 cores are handed to the kernels
     as-is and stay int8 in VMEM."""
+    if _ACT_TAP is not None and ("tt" in params or "w" in params):
+        _tap_record(params, x)
     if "tt" in params:
         tt = params["tt"]
         d = sum(1 for k in tt if k.startswith("c"))

@@ -190,6 +190,27 @@ class Model:
         nll = (lse - ll) * msk
         return jnp.sum(nll) / jnp.maximum(jnp.sum(msk), 1)
 
+    def activation_stats(self, params, batches: list[dict]) -> dict:
+        """Per-projection input second moments over a calibration set —
+        the data term of activation-aware DSE scoring (DESIGN.md §12).
+
+        Runs the training forward *eagerly* (``remat=False``, no jit)
+        under ``layers.capture_activation_stats`` so every
+        ``linear_apply`` streams its input Gram matrix to the host; scan
+        and vmap inside the stack are fine (the accumulator is
+        order-invariant).  Returns ``{(N, M): {"sigma": [N, N] float64,
+        "count": rows}}`` where sigma = E[x xᵀ] aggregated across all
+        layers sharing that projection shape."""
+        from .layers import capture_activation_stats
+        with capture_activation_stats() as store:
+            with jax.disable_jit():
+                for b in batches:
+                    self.loss(params, b, remat=False)
+            jax.effects_barrier()
+        return {key: {"sigma": slot["gram"] / max(slot["count"], 1.0),
+                      "count": slot["count"]}
+                for key, slot in store.items()}
+
     # ---------------------------------------------------------------- serving
     def prefill(self, params, batch) -> tuple[jax.Array, dict]:
         """Process the full prompt; return (last-token logits, cache).

@@ -4,6 +4,11 @@ int8 uniform quantization with error feedback: the quantization residual is
 carried in an fp32 state and added back before the next step's quantization,
 so the scheme is unbiased over time (1-bit-Adam family result).
 
+Not to be confused with *weight* compression: TT factorization of the
+weights and its accuracy-recovery finetune live in ``core.tt`` /
+``training/finetune.py`` (the DSE study's rank-adaptive finetune stage,
+DESIGN.md §12).  This module only touches gradients on the wire.
+
 Two integration points:
 
 * ``ef_compress_tree`` — quantize/dequantize grads inside the train step

@@ -1,0 +1,193 @@
+"""Rank-adaptive TT finetune: train the TT cores only, backbone frozen.
+
+The DSE study (core/study.py, DESIGN.md §12) evaluates candidate TT plans
+end-to-end; a near-miss plan — slightly over the quality gate's perplexity
+budget — can often buy back the gap with a few dozen gradient steps on the
+cores alone, which is cheap because the cores are the *compressed*
+parameterization (that is the paper's whole point).  This module provides
+that loop:
+
+* ``tt_params_from_dense`` — initialize a TT twin's cores by TT-SVD of the
+  dense reference weights (``core.tt.tt_decompose`` per stacked layer
+  slice), so the twin starts as the best rank-r approximation rather than
+  at random.
+* ``split_tt`` / ``merge_tt`` — partition a parameter tree into the TT-core
+  subtree (trainable) and everything else (frozen).  The optimizer only
+  ever sees the TT subtree: freezing by tree-split, not by grad-zeroing,
+  so AdamW weight decay cannot silently erode the "frozen" backbone.
+* ``finetune_tt`` — the short finetune driver (jitted step, deterministic
+  batch schedule, loss history out).
+
+Distinct from ``training/compression.py``, which is *gradient* compression
+(int8 error-feedback for the cross-pod hop) — that module is about wire
+bytes during training; this one is about recovering model quality after
+weight-space TT compression.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.tt import TTPlan, tt_decompose
+from repro.models.model import Model
+from .optimizer import OptConfig, adamw_init, adamw_update
+
+
+# ---------------------------------------------------------------------------
+# Tree surgery
+# ---------------------------------------------------------------------------
+
+def split_tt(params: dict) -> tuple[dict, dict]:
+    """Partition ``params`` into (tt_subtree, frozen_rest).
+
+    The tt_subtree keeps only branches that lead to a ``"tt"`` core
+    bundle (preserving the path structure so ``merge_tt`` can overlay it
+    back); the rest tree holds every other leaf — dense weights, norms,
+    embeddings, biases."""
+    def walk(node: dict) -> tuple[dict, dict]:
+        tt: dict = {}
+        rest: dict = {}
+        for k, v in node.items():
+            if k == "tt" and isinstance(v, dict):
+                tt[k] = v
+            elif isinstance(v, dict):
+                t, r = walk(v)
+                if t:
+                    tt[k] = t
+                rest[k] = r
+            else:
+                rest[k] = v
+        return tt, rest
+    return walk(params)
+
+
+def merge_tt(tt: dict, rest: dict) -> dict:
+    """Inverse of :func:`split_tt`: overlay the TT subtree onto the frozen
+    rest, reconstructing the full parameter tree."""
+    def walk(t: dict, r: dict) -> dict:
+        out = dict(r)
+        for k, v in t.items():
+            out[k] = v if k == "tt" else walk(v, r.get(k, {}))
+        return out
+    return walk(tt, rest)
+
+
+def count_tt_params(params: dict) -> int:
+    tt, _ = split_tt(params)
+    return sum(int(np.prod(x.shape)) for x in jax.tree.leaves(tt))
+
+
+# ---------------------------------------------------------------------------
+# Decompose-init: start the TT twin at the rank-r optimum of the dense net
+# ---------------------------------------------------------------------------
+
+def tt_params_from_dense(tt_params: dict, dense_params: dict,
+                         plans: dict | None = None) -> dict:
+    """Replace every randomly-initialized TT core bundle in ``tt_params``
+    with the TT-SVD of the matching dense weight from ``dense_params``
+    (same tree minus the factorization).  Leaves with no dense
+    counterpart are kept as-is.
+
+    Dense linear storage is ``w [N_in, M_out]`` applied as ``y = x @ w``,
+    while TT cores implement ``y = W x`` with ``W [M, N] = wᵀ`` — the
+    transpose below is that convention bridge.  Stacked layers (scan
+    groups, leading axes on ``w``) are decomposed per slice, exactly how
+    the scan machinery slices the cores back out."""
+    def walk(t_node, d_node):
+        if not isinstance(t_node, dict):
+            return t_node
+        out = {}
+        for k, v in t_node.items():
+            if (k == "tt" and isinstance(v, dict)
+                    and isinstance(d_node, dict) and "w" in d_node):
+                out[k] = _decompose_bundle(v, d_node["w"])
+            elif isinstance(v, dict) and isinstance(d_node, dict):
+                out[k] = walk(v, d_node.get(k, {}))
+            else:
+                out[k] = v
+        return out
+    return walk(tt_params, dense_params)
+
+
+def _decompose_bundle(bundle: dict, w) -> dict:
+    d = sum(1 for k in bundle if k.startswith("c"))
+    shapes = [bundle[f"c{t}"].shape for t in range(d)]
+    core_shapes = [s[-4:] for s in shapes]
+    stack = shapes[0][:-4]
+    ns = tuple(int(s[1]) for s in core_shapes)
+    ms = tuple(int(s[2]) for s in core_shapes)
+    ranks = tuple([1] + [int(s[3]) for s in core_shapes[:-1]] + [1])
+    plan = TTPlan(ms, ns, ranks)
+    w_np = np.asarray(jax.device_get(w), np.float64)
+    w_flat = w_np.reshape((-1,) + w_np.shape[len(stack):])
+    per_slice = [tt_decompose(w_flat[i].T, plan)
+                 for i in range(w_flat.shape[0])]
+    out = {}
+    for t in range(d):
+        stacked = np.stack([sl[t] for sl in per_slice], axis=0)
+        tgt = bundle[f"c{t}"]
+        out[f"c{t}"] = jnp.asarray(
+            stacked.reshape(stack + stacked.shape[1:]), tgt.dtype)
+    for k, v in bundle.items():
+        if not k.startswith("c"):
+            out[k] = v
+    return out
+
+
+# ---------------------------------------------------------------------------
+# The finetune loop
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class FinetuneConfig:
+    steps: int = 16
+    opt: OptConfig = OptConfig(lr=3e-3, warmup_steps=2, total_steps=16,
+                               weight_decay=0.0)
+
+
+def make_tt_finetune_step(model: Model, opt_cfg: OptConfig):
+    """Returns ``step(tt_params, opt, frozen, batch) → (tt_params, opt,
+    metrics)``.  Gradients are taken w.r.t. the TT subtree only; the
+    frozen backbone enters ``loss`` as a constant, so neither gradients
+    nor optimizer state (nor AdamW decay) ever touch it."""
+    def loss_fn(tt_params, frozen, batch):
+        return model.loss(merge_tt(tt_params, frozen), batch, remat=False)
+
+    def step(tt_params, opt, frozen, batch):
+        loss, grads = jax.value_and_grad(loss_fn)(tt_params, frozen, batch)
+        new_tt, new_opt, metrics = adamw_update(grads, opt, tt_params,
+                                                opt_cfg)
+        metrics["loss"] = loss
+        return new_tt, new_opt, metrics
+
+    return step
+
+
+def finetune_tt(model: Model, params: dict, batches: list[dict],
+                fcfg: FinetuneConfig = FinetuneConfig()
+                ) -> tuple[dict, list[float]]:
+    """Short rank-adaptive finetune of the TT cores (backbone frozen).
+
+    Cycles deterministically through ``batches`` for ``fcfg.steps`` steps.
+    Returns (params with finetuned cores, per-step loss history).  Raises
+    ValueError if the tree has no TT bundles — a silent no-op here would
+    let the study count a dense model as 'finetuned'."""
+    tt_params, frozen = split_tt(params)
+    if not jax.tree.leaves(tt_params):
+        raise ValueError("finetune_tt: parameter tree has no TT core "
+                         "bundles — nothing to finetune")
+    # the jitted step donates its tt/opt inputs (in-place updates across
+    # steps); copy first so the caller's ``params`` buffers stay alive
+    tt_params = jax.tree.map(jnp.copy, tt_params)
+    opt = adamw_init(tt_params)
+    step = jax.jit(make_tt_finetune_step(model, fcfg.opt),
+                   donate_argnums=(0, 1))
+    history: list[float] = []
+    for i in range(fcfg.steps):
+        tt_params, opt, metrics = step(tt_params, opt, frozen,
+                                       batches[i % len(batches)])
+        history.append(float(metrics["loss"]))
+    return merge_tt(tt_params, frozen), history

@@ -225,3 +225,148 @@ def test_ds_reduction_factor_bounds():
     c = count_stages(1024, 1024, DSEConfig())
     red = c["all_initial"] / c["aligned"]
     assert red > 2.0
+
+
+# ---------------------------------------------------------------------------
+# ISSUE 7 satellites: funnel invariants, err_proxy, best() edge cases
+# ---------------------------------------------------------------------------
+
+def test_count_enumerated_matches_explored_grid():
+    """The analytic stage-2 grid count must agree with what explore()
+    actually enumerates, across several small shapes and grid configs."""
+    from repro.core.dse import count_enumerated
+
+    for M, N in [(64, 64), (128, 64), (256, 128), (120, 36)]:
+        for cfg in (DSEConfig(vl=4, rank_step=4, rank_cap=16, max_d=3),
+                    DSEConfig(vl=8, rank_step=8, rank_cap=64, max_d=4,
+                              min_factor=4),
+                    DSEConfig(vl=2, rank_step=6, rank_cap=10, max_d=2)):
+            res = explore(M, N, cfg, with_counts=False)
+            assert res.counts["vectorized_enumerated"] == \
+                count_enumerated(M, N, cfg), (M, N, cfg)
+
+
+def test_best_no_match_raises_clear_valueerror():
+    res = explore(64, 64, DSEConfig(vl=8, rank_step=8, rank_cap=8),
+                  with_counts=False)
+    with pytest.raises(ValueError, match=r"length=99.*64x64"):
+        res.best(length=99)
+    # the sentinel default restores the legacy None-on-miss contract
+    assert res.best(length=99, default=None) is None
+    assert res.best(length=99, default="fallback") == "fallback"
+
+
+def test_err_proxy_is_computed_not_constant():
+    """fp32 cores contribute zero; int8 error grows with core size (the
+    old per-dtype constant missed this); unknown dtypes are rejected."""
+    import math
+
+    from repro.core.dse import core_err_bound, plan_err_proxy
+    from repro.core.tt import make_plan
+
+    assert core_err_bound((1, 8, 8, 4), "fp32") == 0.0
+    small = core_err_bound((1, 4, 4, 2), "int8")
+    big = core_err_bound((8, 64, 64, 8), "int8")
+    assert 0 < small < big < 1
+    assert big == pytest.approx(
+        math.sqrt(2 * math.log(8 * 64 * 64 * 8)) / 254.0)
+    with pytest.raises(ValueError):
+        core_err_bound((1, 4, 4, 1), "fp16")
+    plan = make_plan((16, 8), (8, 16), 8)
+    assert plan_err_proxy(plan, "fp32") == 0.0
+    assert plan_err_proxy(plan, "int8") == pytest.approx(
+        sum(core_err_bound(s, "int8") for s in plan.core_shapes))
+
+
+def test_quant_rel_err_deprecated_alias():
+    res = explore(64, 64, DSEConfig(vl=8, rank_step=8, rank_cap=8,
+                                    weight_dtypes=("int8",)),
+                  with_counts=False)
+    s = res.solutions[0]
+    with pytest.warns(DeprecationWarning, match="err_proxy"):
+        assert s.quant_rel_err == s.err_proxy
+
+
+def test_generate_candidates_matches_explore():
+    """explore() is now a thin wrapper: the generator must yield exactly
+    the solutions explore returns (as a set; explore sorts)."""
+    from repro.core.dse import generate_candidates
+
+    cfg = DSEConfig(vl=4, rank_step=4, rank_cap=8, max_d=3,
+                    weight_dtypes=("fp32", "int8"))
+    counts = {}
+    gen = list(generate_candidates(128, 64, cfg, counts=counts))
+    res = explore(128, 64, cfg, with_counts=False)
+    key = lambda s: (s.plan.ms, s.plan.ns, s.plan.ranks, s.weight_dtype)
+    assert sorted(map(key, gen)) == sorted(map(key, res.solutions))
+    assert counts["dtype_enumerated"] == len(gen)
+    assert res.counts["scalability"] * 2 == counts["dtype_enumerated"]
+
+
+def test_measured_front_requires_metrics():
+    import dataclasses as dc
+
+    res = explore(128, 64, DSEConfig(vl=4, rank_step=4, rank_cap=8),
+                  with_counts=False)
+    # nothing evaluated → empty measured front, and a direct pareto call
+    # over missing axes fails loudly
+    assert res.measured_front() == []
+    with pytest.raises(ValueError, match="no measured"):
+        pareto_front(res.solutions, axes=("flops", "tok_s"))
+    # attach metrics to two: they become the front's only competitors
+    a = dc.replace(res.solutions[0], tok_s=100.0, ppl_delta=0.5)
+    b = dc.replace(res.solutions[1], tok_s=50.0, ppl_delta=0.9)
+    res2 = type(res)(res.M, res.N, res.counts,
+                     [a, b] + res.solutions[2:])
+    front = res2.measured_front()
+    assert a in front
+    # b is dominated on tok_s+ppl_delta but may win flops/bytes; both
+    # must at least carry full metrics
+    assert all(s.tok_s is not None for s in front)
+
+
+def test_pareto_front_nondomination_hypothesis():
+    """Property: no member of the front is dominated by any solution;
+    every excluded solution is dominated by some front member; the front
+    is deterministic under input permutation."""
+    hypothesis = pytest.importorskip("hypothesis")
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    from repro.core.dse import Solution
+    from repro.core.tt import make_plan
+
+    plan = make_plan((16, 8), (8, 16), 8)
+
+    def sol(flops, nbytes, err):
+        return Solution(plan, flops, 0, (1,), flops, bytes=nbytes,
+                        err_proxy=float(err))
+
+    triples = st.lists(
+        st.tuples(st.integers(1, 50), st.integers(1, 50),
+                  st.integers(0, 50)),
+        min_size=1, max_size=40)
+
+    def dominated(x, y):
+        ax = (x.flops, x.bytes, x.err_proxy)
+        ay = (y.flops, y.bytes, y.err_proxy)
+        return all(a <= b for a, b in zip(ay, ax)) and ay != ax
+
+    @given(triples, st.randoms())
+    @settings(max_examples=60, deadline=None)
+    def check(ts, rng):
+        sols = [sol(*t) for t in ts]
+        front = pareto_front(sols)
+        for f in front:
+            assert not any(dominated(f, o) for o in sols)
+        for s in sols:
+            if (s.flops, s.bytes, s.err_proxy) not in \
+                    [(f.flops, f.bytes, f.err_proxy) for f in front]:
+                assert any(dominated(s, f) for f in front)
+        shuffled = list(sols)
+        rng.shuffle(shuffled)
+        assert [(f.flops, f.bytes, f.err_proxy)
+                for f in pareto_front(shuffled)] == \
+            [(f.flops, f.bytes, f.err_proxy) for f in front]
+
+    check()

@@ -1,0 +1,357 @@
+"""The DSE study engine (core/study.py, DESIGN.md §12): persistence,
+seeded resume determinism, activation-aware scoring, the calibration tap,
+and the rank-adaptive TT finetune (training/finetune.py)."""
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.dse import DSEConfig, generate_candidates
+from repro.core.study import (EvaluatorConfig, STUDY_SCHEMA, Study,
+                              activation_score, make_model_evaluator,
+                              solution_from_plan, trial_seed)
+from repro.core.tt import make_plan, tt_reconstruct
+
+DSE = DSEConfig(vl=4, rank_step=4, rank_cap=8, max_d=3, min_factor=2,
+                weight_dtypes=("fp32", "int8"))
+
+
+def stub_evaluate(sol, seed=0):
+    """Deterministic fake trial: metrics are a pure function of the
+    (solution, seed) pair, like the real evaluator."""
+    h = (sol.flops * 31 + seed) % 997
+    return {"act_err": h / 997.0, "ppl_delta": sol.plan.d + h / 997.0,
+            "tok_s": 1000.0 - sol.flops / 100.0}
+
+
+# ---------------------------------------------------------------------------
+# Study engine
+# ---------------------------------------------------------------------------
+
+def test_study_create_persists_static_sorted_trials(tmp_path):
+    p = str(tmp_path / "study.json")
+    st = Study.create(p, 128, 64, DSE, seed=3, max_trials=5)
+    assert os.path.exists(p)
+    assert len(st.trials) == 5
+    flops = [t.solution.flops for t in st.trials]
+    assert flops == sorted(flops)
+    assert all(t.status == "pending" for t in st.trials)
+    assert [t.seed for t in st.trials] == \
+        [trial_seed(3, i) for i in range(5)]
+    with pytest.raises(FileExistsError):
+        Study.create(p, 128, 64, DSE)
+
+
+def test_study_refuses_unknown_schema(tmp_path):
+    p = str(tmp_path / "study.json")
+    with open(p, "w") as f:
+        json.dump({"schema": STUDY_SCHEMA + 41, "trials": []}, f)
+    with pytest.raises(ValueError, match="schema"):
+        Study.load(p)
+
+
+def test_study_run_and_reload_roundtrip(tmp_path):
+    p = str(tmp_path / "study.json")
+    st = Study.create(p, 128, 64, DSE, seed=0, max_trials=4)
+    n = st.run(stub_evaluate, batch_size=2)
+    assert n == 4 and not st.pending()
+    again = Study.load(p, DSE)
+    assert [(t.tid, t.status, t.metrics) for t in again.trials] == \
+        [(t.tid, t.status, t.metrics) for t in st.trials]
+    assert [t.tid for t in again.ranking()] == \
+        [t.tid for t in st.ranking()]
+
+
+def test_study_interrupted_resume_is_deterministic(tmp_path):
+    """The ISSUE 7 acceptance contract: interrupt after trial k, resume
+    from persisted state → identical final ranking and metrics."""
+    pa, pb = str(tmp_path / "a.json"), str(tmp_path / "b.json")
+    ref = Study.create(pa, 128, 64, DSE, seed=7, max_trials=4)
+    ref.run(stub_evaluate, batch_size=4)
+
+    interrupted = Study.create(pb, 128, 64, DSE, seed=7, max_trials=4)
+    interrupted.run(stub_evaluate, batch_size=1, max_trials=2)
+    del interrupted
+    resumed = Study.load(pb, DSE)
+    assert len(resumed.completed()) == 2
+    resumed.run(stub_evaluate, batch_size=2)
+    assert [(t.tid, t.metrics) for t in resumed.trials] == \
+        [(t.tid, t.metrics) for t in ref.trials]
+    assert [t.tid for t in resumed.ranking()] == \
+        [t.tid for t in ref.ranking()]
+
+
+def test_study_failed_trial_is_contained(tmp_path):
+    def flaky(sol, seed=0):
+        if sol.weight_dtype == "int8":
+            raise RuntimeError("int8 eval exploded")
+        return stub_evaluate(sol, seed)
+
+    p = str(tmp_path / "study.json")
+    st = Study.create(p, 128, 64, DSE, seed=0, max_trials=4)
+    st.run(flaky, batch_size=2)
+    failed = [t for t in st.trials if t.status == "failed"]
+    done = st.completed()
+    assert failed and done
+    assert all("int8 eval exploded" in t.metrics["error"] for t in failed)
+    # failed trials never enter rankings or the result front
+    assert all(t.status == "done" for t in st.ranking())
+    assert len(st.result().solutions) == len(done)
+
+
+def test_study_atomic_save_leaves_no_temp_files(tmp_path):
+    p = str(tmp_path / "study.json")
+    st = Study.create(p, 128, 64, DSE, max_trials=2)
+    st.run(stub_evaluate, batch_size=1)
+    assert [f for f in os.listdir(tmp_path) if f.endswith(".tmp")] == []
+
+
+def test_solution_from_plan_prices_like_generator():
+    """Load-path pricing must agree with generate_candidates exactly —
+    otherwise a study's static costs drift from the funnel's."""
+    for sol in list(generate_candidates(128, 64, DSE))[:8]:
+        rebuilt = solution_from_plan(sol.plan.ms, sol.plan.ns,
+                                     sol.plan.ranks, sol.weight_dtype,
+                                     DSE)
+        assert (rebuilt.flops, rebuilt.params, rebuilt.bytes,
+                rebuilt.err_proxy, rebuilt.threads) == \
+            (sol.flops, sol.params, sol.bytes, sol.err_proxy, sol.threads)
+
+
+def test_trial_seed_is_pure_and_spread():
+    seeds = [trial_seed(5, i) for i in range(50)]
+    assert seeds == [trial_seed(5, i) for i in range(50)]
+    assert len(set(seeds)) == 50
+    assert seeds != [trial_seed(6, i) for i in range(50)]
+
+
+# ---------------------------------------------------------------------------
+# Activation-aware scoring
+# ---------------------------------------------------------------------------
+
+def test_activation_score_zero_at_full_rank():
+    rng = np.random.default_rng(0)
+    W = rng.normal(size=(16, 16))
+    plan = make_plan((4, 4), (4, 4), 16)   # ranks clip to exact
+    sigma = np.eye(16)
+    assert activation_score(W, plan, sigma) < 1e-5   # fp32 SVD residual
+    # int8 round-trip adds real quantization error on the same plan
+    assert activation_score(W, plan, sigma, "int8") > 1e-4
+
+
+def test_activation_score_identity_sigma_is_frobenius():
+    rng = np.random.default_rng(1)
+    W = rng.normal(size=(16, 16))
+    plan = make_plan((4, 4), (4, 4), 2)    # lossy
+    got = activation_score(W, plan, np.eye(16))
+    from repro.core.tt import tt_decompose
+    W_hat = np.asarray(tt_reconstruct(
+        [np.asarray(c, np.float64) for c in tt_decompose(W, plan)]))
+    want = np.linalg.norm(W - W_hat) / np.linalg.norm(W)
+    assert got == pytest.approx(want, rel=1e-6)
+
+
+def test_activation_score_weighs_by_input_covariance():
+    """Error that lives in a direction the data never excites must not
+    count; error aligned with the dominant input direction must."""
+    rng = np.random.default_rng(2)
+    W = rng.normal(size=(8, 8))
+    plan = make_plan((4, 2), (2, 4), 2)
+    # data concentrated on the first input coordinate vs the last
+    e = np.zeros((8, 8))
+    sig_a, sig_b = e.copy(), e.copy()
+    sig_a[0, 0] = 1.0
+    sig_b[7, 7] = 1.0
+    s_a = activation_score(W, plan, sig_a)
+    s_b = activation_score(W, plan, sig_b)
+    assert s_a != pytest.approx(s_b, rel=1e-3)  # data-dependence is real
+    with pytest.raises(ValueError, match="shape"):
+        activation_score(W[:4], plan, sig_a)
+
+
+def test_capture_activation_stats_tap():
+    """The linear_apply tap must stream exact Gram sums, keyed by
+    projection signature, aggregated across calls — and stay inert when
+    no capture is active."""
+    from repro.models.layers import capture_activation_stats, linear_apply
+
+    w = jnp.asarray(np.random.default_rng(3).normal(size=(6, 10)),
+                    jnp.float32)
+    x1 = jnp.asarray(np.random.default_rng(4).normal(size=(2, 5, 6)),
+                     jnp.float32)
+    x2 = jnp.asarray(np.random.default_rng(5).normal(size=(3, 6)),
+                     jnp.float32)
+    with capture_activation_stats() as store:
+        linear_apply({"w": w}, x1)
+        linear_apply({"w": w}, x2)
+        jax.effects_barrier()
+    assert set(store) == {(6, 10)}
+    flat = np.concatenate([np.asarray(x1).reshape(-1, 6),
+                           np.asarray(x2).reshape(-1, 6)])
+    np.testing.assert_allclose(store[(6, 10)]["gram"], flat.T @ flat,
+                               rtol=1e-5)
+    assert store[(6, 10)]["count"] == flat.shape[0]
+    # no active capture → no accumulation, no error
+    linear_apply({"w": w}, x2)
+
+
+def test_capture_tap_sums_vmap_batches():
+    from repro.models.layers import capture_activation_stats, linear_apply
+
+    w = jnp.ones((4, 3), jnp.float32)
+    xs = jnp.asarray(np.random.default_rng(6).normal(size=(5, 2, 4)),
+                     jnp.float32)
+    with capture_activation_stats() as store:
+        jax.vmap(lambda x: linear_apply({"w": w}, x))(xs)
+        jax.effects_barrier()
+    flat = np.asarray(xs).reshape(-1, 4)
+    np.testing.assert_allclose(store[(4, 3)]["gram"], flat.T @ flat,
+                               rtol=1e-5)
+    assert store[(4, 3)]["count"] == 10
+
+
+def test_calibration_batches_deterministic_and_disjoint():
+    from repro.configs import get_config
+    from repro.data.pipeline import calibration_batches
+
+    cfg = get_config("deepseek-7b", "smoke")
+    a = calibration_batches(cfg, 2, 16, 3)
+    b = calibration_batches(cfg, 2, 16, 3)
+    for ba, bb in zip(a, b):
+        np.testing.assert_array_equal(ba["tokens"], bb["tokens"])
+    c = calibration_batches(cfg, 2, 16, 3, seed=1234)  # training seed
+    assert any(not np.array_equal(x["tokens"], y["tokens"])
+               for x, y in zip(a, c))
+
+
+# ---------------------------------------------------------------------------
+# TT finetune (training/finetune.py)
+# ---------------------------------------------------------------------------
+
+def _tt_model_and_params(seed=0):
+    from repro.configs import get_config
+    from repro.configs.base import TTConfig
+    import dataclasses as dc
+
+    cfg = get_config("deepseek-7b", "smoke")
+    cfg = dc.replace(cfg, tt=TTConfig(enabled=True, families=("ffn",),
+                                      rank=4, min_factor=2))
+    from repro.configs import build
+    model = build(cfg)
+    return model, model.init(jax.random.PRNGKey(seed))
+
+
+def test_split_merge_tt_roundtrip():
+    from repro.training.finetune import merge_tt, split_tt
+
+    _, params = _tt_model_and_params()
+    tt, rest = split_tt(params)
+    assert jax.tree.leaves(tt), "smoke TT model must have TT bundles"
+    # no leaf appears on both sides, and the merge is the identity
+    merged = merge_tt(tt, rest)
+    ref_leaves = jax.tree.leaves(params)
+    out_leaves = jax.tree.leaves(merged)
+    assert len(ref_leaves) == len(out_leaves)
+    for a, b in zip(ref_leaves, out_leaves):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert len(jax.tree.leaves(tt)) + len(jax.tree.leaves(rest)) == \
+        len(ref_leaves)
+
+
+def test_finetune_raises_on_dense_tree():
+    from repro.configs import build, get_config
+    from repro.training.finetune import FinetuneConfig, finetune_tt
+
+    import dataclasses as dc
+    cfg = get_config("deepseek-7b", "smoke")
+    cfg = dc.replace(cfg, tt=dc.replace(cfg.tt, enabled=False))
+    model = build(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    with pytest.raises(ValueError, match="no TT core bundles"):
+        finetune_tt(model, params, [], FinetuneConfig(steps=1))
+
+
+def test_tt_params_from_dense_full_rank_reconstructs():
+    """At exact (clipped-to-full) ranks the decompose-init twin must
+    reproduce the dense weight bit-for-bit up to SVD tolerance."""
+    from repro.core.tt import tt_decompose
+    from repro.training.finetune import tt_params_from_dense
+
+    rng = np.random.default_rng(7)
+    w = jnp.asarray(rng.normal(size=(16, 12)), jnp.float32)  # [N, M]
+    plan = make_plan((4, 3), (4, 4), 64)       # clips to exact rank
+    bundle = {"tt": {f"c{t}": jnp.zeros(s, jnp.float32)
+                     for t, s in enumerate(plan.core_shapes)}}
+    out = tt_params_from_dense({"proj": bundle}, {"proj": {"w": w}})
+    cores = [np.asarray(out["proj"]["tt"][f"c{t}"], np.float64)
+             for t in range(plan.d)]
+    W_hat = np.asarray(tt_reconstruct(cores))
+    np.testing.assert_allclose(W_hat, np.asarray(w).T, atol=1e-4)
+
+
+def test_finetune_trains_cores_only_backbone_frozen():
+    from repro.data.pipeline import calibration_batches
+    from repro.training.finetune import (FinetuneConfig, finetune_tt,
+                                         split_tt)
+    from repro.training.optimizer import OptConfig
+
+    model, params = _tt_model_and_params()
+    batches = calibration_batches(model.cfg, 2, 16, 2)
+    fcfg = FinetuneConfig(steps=4, opt=OptConfig(
+        lr=1e-2, warmup_steps=1, total_steps=4, weight_decay=0.0))
+    out, history = finetune_tt(model, params, batches, fcfg)
+    assert len(history) == 4
+    # TT cores moved …
+    tt_before, rest_before = split_tt(params)
+    tt_after, rest_after = split_tt(out)
+    moved = any(not np.array_equal(np.asarray(a), np.asarray(b))
+                for a, b in zip(jax.tree.leaves(tt_before),
+                                jax.tree.leaves(tt_after)))
+    assert moved, "finetune must update TT cores"
+    # … and the backbone did NOT (the tree-split freeze contract: no
+    # grads, no optimizer state, no weight decay on frozen leaves)
+    for a, b in zip(jax.tree.leaves(rest_before),
+                    jax.tree.leaves(rest_after)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# End-to-end: the model evaluator through a tiny study
+# ---------------------------------------------------------------------------
+
+def test_model_evaluator_study_end_to_end(tmp_path):
+    """Two real trials on the smoke model: activation score + perplexity
+    delta through the frozen-plan TT twin, zero plan re-resolutions, and
+    persisted-state resume equality."""
+    from repro.configs import get_config
+
+    cfg = get_config("deepseek-7b", "smoke")
+    ecfg = EvaluatorConfig(n_calib=1, n_eval=1, batch=2, seq=16,
+                           measure_tok_s=False)
+    evaluate = make_model_evaluator(cfg, ecfg, seed=0)
+    p = str(tmp_path / "study.json")
+    st = Study.create(p, cfg.d_ff, cfg.d_model, DSE, seed=0,
+                      max_trials=2)
+    st.run(evaluate, batch_size=1)
+    assert {t.status for t in st.trials} == {"done"}
+    for t in st.trials:
+        assert t.metrics["plan_resolutions"] == 0
+        assert 0.0 < t.metrics["act_err"] < 2.0
+        assert np.isfinite(t.metrics["ppl_delta"])
+    # int8 twin of the same plan must score worse on the data-aware axis
+    by = {t.solution.weight_dtype: t.metrics for t in st.trials
+          if t.solution.plan == st.trials[0].solution.plan}
+    if {"fp32", "int8"} <= set(by):
+        assert by["int8"]["act_err"] >= by["fp32"]["act_err"]
+    # a fresh evaluator re-derives identical measurements (the resume
+    # contract end-to-end, not just for the stub)
+    again = make_model_evaluator(cfg, ecfg, seed=0)
+    t0 = st.trials[0]
+    redo = again(t0.solution, t0.seed)
+    assert redo["ppl_delta"] == pytest.approx(
+        t0.metrics["ppl_delta"], abs=1e-9)
+    assert redo["act_err"] == pytest.approx(
+        t0.metrics["act_err"], abs=1e-12)
