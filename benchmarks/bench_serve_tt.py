@@ -17,13 +17,24 @@ high-water mark — the dense-vs-paged pool-bytes column is the memory
 argument of DESIGN.md §7.  The prefix workload admits N requests sharing a
 long prompt prefix twice — prefix cache off vs on — and reports admission
 wall time and the measured hit rate; the reduction is the prefill compute
-the resident blocks saved.  Results land in ``results/BENCH_serve.json``.
+the resident blocks saved.
+
+The cold-start workload (DESIGN.md §13) launches ``launch.serve
+--first-token`` twice as real subprocesses sharing one persistent
+compilation cache: the first pays every compile (cold), the second must
+re-jit NOTHING (asserted via the cache entry count) and be measurably
+faster from process start to first token — the restart cost a crash-safe
+deployment actually pays.  Results land in ``results/BENCH_serve.json``.
 """
 from __future__ import annotations
 
 import dataclasses
 import json
+import os
 import pathlib
+import subprocess
+import sys
+import tempfile
 import time
 
 import jax
@@ -125,6 +136,57 @@ def _prefix_workload(model, params, n_req, prefix_len, tail, steps):
     return out
 
 
+def _cold_start(arch: str = "deepseek-7b", prompt_len: int = 8,
+                steps: int = 4) -> dict:
+    """Process start → first token, cold vs warm, via two real serve.py
+    subprocesses sharing one persistent compile cache.  Identical flags
+    both runs (config differences change XLA cache keys); the warm run
+    carries --assert-cache-hits so zero-recompile is enforced inside the
+    measured process itself."""
+    repo = pathlib.Path(__file__).resolve().parent.parent
+    env = dict(os.environ,
+               PYTHONPATH=str(repo / "src") + os.pathsep
+               + os.environ.get("PYTHONPATH", ""))
+
+    def launch(cache_dir: str, warm: bool) -> dict:
+        cmd = [sys.executable, "-m", "repro.launch.serve", "--arch", arch,
+               "--variant", "smoke", "--first-token",
+               "--compile-cache", cache_dir,
+               "--prompt-len", str(prompt_len), "--steps", str(steps),
+               "--batch", "1", "--slots", "1"]
+        if warm:
+            cmd.append("--assert-cache-hits")
+        out = subprocess.run(cmd, env=env, cwd=repo, capture_output=True,
+                             text=True, check=True).stdout
+        for line in out.splitlines():
+            if line.startswith("COLD_START "):
+                return json.loads(line[len("COLD_START "):])
+        raise RuntimeError(f"no COLD_START line in serve output:\n{out}")
+
+    with tempfile.TemporaryDirectory() as cache_dir:
+        cold = launch(cache_dir, warm=False)
+        warm = launch(cache_dir, warm=True)
+    if warm["start_to_first_token_s"] >= cold["start_to_first_token_s"]:
+        raise AssertionError(
+            f"warm start→first-token ({warm['start_to_first_token_s']}s) "
+            f"not faster than cold ({cold['start_to_first_token_s']}s) — "
+            f"the persistent compile cache bought nothing")
+    rec = {"arch": arch, "prompt_len": prompt_len, "steps": steps,
+           "cold_start_to_first_token_s": cold["start_to_first_token_s"],
+           "warm_start_to_first_token_s": warm["start_to_first_token_s"],
+           "warm_speedup": round(cold["start_to_first_token_s"]
+                                 / warm["start_to_first_token_s"], 2),
+           "compile_cache_entries": cold["cache_entries"],
+           "warm_new_compilations": (warm["cache_entries"]
+                                     - cold["cache_entries"])}
+    print(f"\ncold start ({arch}): start→first-token "
+          f"{rec['cold_start_to_first_token_s']:.2f}s cold → "
+          f"{rec['warm_start_to_first_token_s']:.2f}s warm "
+          f"({rec['warm_speedup']:.2f}x, {rec['compile_cache_entries']} "
+          f"cache entries, {rec['warm_new_compilations']} warm recompiles)")
+    return rec
+
+
 def run(quick: bool = False) -> None:
     S, steps = 16, (8 if quick else 16)
     slot_counts = [2] if quick else [1, 2, 4, 8]
@@ -183,12 +245,16 @@ def run(quick: bool = False) -> None:
           f"{px['on']['wall_s']*1e3:.0f}ms "
           f"({px['speedup']:.2f}x), hit rate {px['on']['hit_rate']:.2f}, "
           f"{px['on']['prefill_tokens_skipped']} prefill tokens skipped")
+    # cold vs warm process start→first token (persistent compile cache)
+    cold_start = _cold_start()
+
     RESULTS.mkdir(exist_ok=True)
     out = RESULTS / "BENCH_serve.json"
     out.write_text(json.dumps(
         {"backend": jax.default_backend(), "records": records,
          "prefix_workload": {"arch": px_arch, "prefix_len": px_len,
-                             "block": BLOCK, **px}}, indent=1))
+                             "block": BLOCK, **px},
+         "cold_start": cold_start}, indent=1))
     print(f"wrote {out}")
 
 

@@ -38,6 +38,13 @@ def main() -> None:
     ap.add_argument("--only", default=None, choices=BENCHES)
     args = ap.parse_args()
 
+    # $REPRO_COMPILE_CACHE (launch.cache): benchmark reruns skip every
+    # compile a previous invocation already paid for
+    from repro.launch.cache import enable_compile_cache
+    cache_dir = enable_compile_cache()
+    if cache_dir:
+        print(f"# persistent compile cache: {cache_dir}")
+
     names = [args.only] if args.only else BENCHES
     t_all = time.time()
     failures = []

@@ -1,0 +1,51 @@
+"""Persistent XLA compilation cache wiring (ROADMAP item 4, DESIGN.md §13).
+
+A restarted serving process pays its biggest cold-start cost re-jitting
+programs that an identical previous process already compiled.
+:func:`enable_compile_cache` points ``jax.experimental.compilation_cache``
+at a durable directory so the second process start performs ZERO new
+compilations — the CI cold-start smoke asserts exactly that via
+:func:`cache_entries`.
+
+Two rules make the zero-recompile guarantee hold:
+
+  * call this BEFORE the first trace (serve.py / dse_study.py do it at
+    the top of ``main()``), and
+  * use identical jax config across runs — config knobs are folded into
+    the cache key, so a run that flips any compilation-affecting option
+    misses every entry the previous run wrote.
+
+The thresholds are forced to "cache everything" (min entry size -1, min
+compile time 0) because serving decode/prefill programs on CPU smoke
+shapes compile fast but numerous — exactly the programs a restart
+re-pays.
+"""
+from __future__ import annotations
+
+import os
+
+ENV_VAR = "REPRO_COMPILE_CACHE"
+
+
+def enable_compile_cache(path: str | None = None) -> str | None:
+    """Enable jax's persistent compilation cache at ``path`` (default:
+    ``$REPRO_COMPILE_CACHE``; no-op returning None when neither is set).
+    Returns the cache directory in use."""
+    path = path or os.environ.get(ENV_VAR)
+    if not path:
+        return None
+    import jax
+    path = os.path.abspath(path)
+    os.makedirs(path, exist_ok=True)
+    jax.config.update("jax_compilation_cache_dir", path)
+    jax.config.update("jax_persistent_cache_min_entry_size_bytes", -1)
+    jax.config.update("jax_persistent_cache_min_compile_time_secs", 0.0)
+    return path
+
+
+def cache_entries(path: str) -> int:
+    """Number of committed compilation-cache entries under ``path``.
+    Unchanged across a run == that run compiled nothing new."""
+    if not path or not os.path.isdir(path):
+        return 0
+    return sum(1 for name in os.listdir(path) if name.endswith("-cache"))

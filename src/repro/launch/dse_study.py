@@ -180,7 +180,14 @@ def main(argv=None) -> dict:
     ap.add_argument("--smoke", action="store_true",
                     help="CI mode: 2 trials, interrupted + resumed, "
                          "bit-determinism asserted")
+    ap.add_argument("--compile-cache", default=None,
+                    help="persistent XLA compilation cache dir (also via "
+                         "$REPRO_COMPILE_CACHE): a resumed study re-jits "
+                         "none of the trial programs a previous process "
+                         "already compiled")
     args = ap.parse_args(argv)
+    from .cache import enable_compile_cache
+    enable_compile_cache(args.compile_cache)
     if args.smoke:
         return run_smoke(args)
     return run_study(args)

@@ -28,12 +28,29 @@ FaultPlan (alloc failures, admission holds, a cancel, a live resize, a
 simulated restart) over a mixed-priority workload; asserts zero leaked
 blocks, zero TT plan re-resolutions and survivor token identity
 (DESIGN.md §11).
+
+Durability (DESIGN.md §13): ``--compile-cache DIR`` enables the
+persistent XLA compilation cache (a restarted process re-jits nothing;
+``--assert-cache-hits`` makes CI fail if it does); ``--first-token``
+prints a machine-readable ``COLD_START`` line with the process-start →
+first-token time (run it twice against one cache dir to measure cold
+vs. warm); ``--durable DIR`` wraps the scheduler in the journal +
+snapshot pipeline so Ctrl-C (and kill -9) preserve in-flight work,
+resumable with ``--restore``; ``--durability-smoke`` is the CI drill for
+kill/truncate/bit-flip recovery.
 """
 from __future__ import annotations
 
 import argparse
 import dataclasses
+import json
+import os
 import time
+
+# captured before the jax import below, so --first-token's "process
+# start → first token" includes jax/XLA startup and every compile —
+# exactly the costs the persistent compilation cache amortises
+_PROC_T0 = time.perf_counter()
 
 import jax
 import jax.numpy as jnp
@@ -45,6 +62,8 @@ from repro.configs.shapes import concrete_batch
 from repro.kernels import plan as ttplan
 from repro.serving.engine import generate_fixed
 from repro.serving.scheduler import Request, Scheduler
+
+from .cache import cache_entries, enable_compile_cache
 
 
 def _percentile(xs: list[float], q: float) -> float:
@@ -95,12 +114,28 @@ def simulate(model, params, args) -> dict:
     # run must never plan again (DESIGN.md §10)
     plans_warm = ttplan.plan_resolutions()
 
+    if args.durable:
+        from repro.serving.durable import DurableScheduler
+        if args.restore:
+            # the warm-up already compiled every program on this Model, so
+            # the recovered scheduler (same model, fresh state) re-jits
+            # nothing while it drains the restored requests
+            sched = DurableScheduler.recover(
+                args.durable, model, params, rebase_clock=True,
+                snapshot_every=args.snapshot_every, log=print)
+        else:
+            sched = DurableScheduler(sched, args.durable,
+                                     snapshot_every=args.snapshot_every)
+
     rng = np.random.default_rng(args.seed)
     arrivals = np.cumsum(rng.exponential(1.0 / args.arrival_rate,
                                          size=args.max_requests))
     start = time.perf_counter()
-    i = 0
+    # --restore drains the recovered requests only: re-submitting the
+    # synthetic workload would collide with the restored uids
+    i = args.max_requests if (args.durable and args.restore) else 0
     interrupted = False
+    preserved = False
     try:
         while i < args.max_requests or not sched.idle:
             now = time.perf_counter() - start
@@ -114,15 +149,29 @@ def simulate(model, params, args) -> dict:
                 continue
             sched.step()
     except KeyboardInterrupt:
-        # graceful drain: retire everything still pending as "cancelled"
-        # (partial tokens kept) so blocks/slots free and the report below
-        # still prints — flagged partial — and we exit 0
         interrupted = True
-        for q in list(sched.queue):
-            sched.cancel(q.req.uid)
-        for s in list(sched.slots):
-            if s is not None:
-                sched.cancel(s.uid)
+        if args.durable:
+            # graceful shutdown == crash recovery entry point: checkpoint
+            # the live state (snapshot generation + journal rotation) and
+            # keep in-flight work — a later --restore run resumes it
+            gen = sched.checkpoint()
+            sched.close()
+            preserved = True
+            print(f"\ninterrupted — state checkpointed to {args.durable} "
+                  f"(generation {gen}, {len(sched.queue)} queued, "
+                  f"{sched.num_active} active); resume with --restore")
+        else:
+            # graceful drain: retire everything still pending as
+            # "cancelled" (partial tokens kept) so blocks/slots free and
+            # the report below still prints — flagged partial — exit 0
+            for q in list(sched.queue):
+                sched.cancel(q.req.uid)
+            for s in list(sched.slots):
+                if s is not None:
+                    sched.cancel(s.uid)
+    if args.durable and not preserved:
+        sched.checkpoint()                 # final snapshot on a clean drain
+        sched.close()
     wall = time.perf_counter() - start
     finished = list(sched.finished)
 
@@ -139,7 +188,7 @@ def simulate(model, params, args) -> dict:
           f"({tok_s:.1f} tok/s), decode steps={sched.steps_run}")
     print(f"per-request latency: p50={p50*1e3:.1f}ms p95={p95*1e3:.1f}ms")
     _print_pool_stats(sched)
-    if interrupted and sched.paged:
+    if interrupted and sched.paged and not preserved:
         sched.allocator.assert_quiescent()  # interrupt must not leak blocks
     replans = ttplan.plan_resolutions() - plans_warm
     print(f"plan resolutions during steady state: {replans} "
@@ -263,6 +312,139 @@ def fault_smoke(model, params, args) -> dict:
             "expired": rep.expired, "survivors": len(rep.survivors)}
 
 
+def first_token(model, params, args) -> dict:
+    """Cold-start probe: one request through the scheduler, reporting
+    process start → first decoded token on a machine-readable
+    ``COLD_START`` line.  Run twice against one ``--compile-cache`` dir —
+    the second (warm) run re-jits nothing and must be faster; CI and
+    bench_serve_tt parse the line and assert exactly that."""
+    cache_len = args.prompt_len + args.steps
+    sched = _make_sched(model, params, args, cache_len)
+    toks = concrete_batch(model.cfg, 1, args.prompt_len,
+                          seed=args.seed)["tokens"]
+    sched.submit(Request(uid=0, inputs={"tokens": toks},
+                         max_new_tokens=args.steps,
+                         temperature=args.temperature, top_k=args.top_k))
+    while sched.tokens_out < 1:
+        sched.step()
+    t_first = time.perf_counter() - _PROC_T0
+    sched.run()                            # drain the rest of the budget
+    out = {"arch": model.cfg.name, "prompt_len": args.prompt_len,
+           "steps": args.steps,
+           "start_to_first_token_s": round(t_first, 4),
+           "compile_cache": args.compile_cache,
+           "cache_entries": (cache_entries(args.compile_cache)
+                             if args.compile_cache else None)}
+    print("COLD_START " + json.dumps(out))
+    return out
+
+
+def durability_smoke(model, params, args) -> dict:
+    """Durability fault drill (CI, DESIGN.md §13).  Three drills:
+
+    1. kill -9 at a seeded step with the journal + snapshot pipeline on a
+       clean store — recovery replays the journal; survivor streams must
+       be bit-identical to an uninterrupted run, zero leaked blocks, zero
+       plan re-resolutions.
+    2. the same kill, but a corruptor truncates / bit-flips the newest
+       committed snapshot generation before recovery runs — the
+       checksummed fallback must restore the previous generation and
+       replay forward across the gap.
+    3. store-level: a snapshot whose newest generation is truncated then
+       bit-flipped must fall back on load, and a fully-corrupt store must
+       raise a clear error — a torn state is never returned.
+    """
+    import tempfile
+
+    from repro.core import durable
+    from repro.serving.faults import (FaultPlan, load_snapshot,
+                                      run_with_faults, save_snapshot)
+
+    steps = args.steps
+    cache_len = args.prompt_len + steps
+    key = jax.random.PRNGKey(args.seed + 1)
+    reqs = []
+    for uid in range(args.max_requests):
+        toks = concrete_batch(model.cfg, 1, args.prompt_len,
+                              seed=args.seed + uid)["tokens"]
+        reqs.append(Request(uid=uid, inputs={"tokens": toks},
+                            max_new_tokens=steps,
+                            temperature=args.temperature, top_k=args.top_k,
+                            key=jax.random.fold_in(key, uid)))
+    kw = dict(num_slots=args.slots, cache_len=cache_len, eos_id=args.eos_id,
+              key=key, paged=args.paged, block_size=args.block_size,
+              num_blocks=args.num_blocks)
+    plan = FaultPlan.random(args.seed, horizon=max(4, steps),
+                            n_alloc_fail=0, n_hold=0, n_cancel=0,
+                            with_restart=False, with_kill=True)
+    print(f"arch={model.cfg.name} slots={args.slots} requests={len(reqs)} "
+          f"pool={'paged' if args.paged else 'dense'} "
+          f"kill@{sorted(plan.kill_steps)}")
+
+    with tempfile.TemporaryDirectory() as d:
+        rep = run_with_faults(model, params, reqs, plan, sched_kwargs=kw,
+                              durable_dir=d, snapshot_every=2)
+    assert rep.kills == 1, rep
+    print(f"kill drill OK: drained in {rep.steps} steps, "
+          f"{len(rep.survivors)} survivors token-identical after recovery")
+
+    rng = np.random.default_rng(args.seed + 7)
+    corruptions: list[str] = []
+
+    def corruptor(root, step):
+        gens = durable.committed_generations(root)
+        if len(gens) < 2:
+            return                        # keep one good generation
+        p = os.path.join(root, f"gen_{gens[-1]:08d}", "arrays.bin")
+        size = os.path.getsize(p)
+        if rng.integers(0, 2) == 0:
+            with open(p, "r+b") as f:
+                f.truncate(int(rng.integers(0, size)))
+            corruptions.append(f"truncate gen {gens[-1]}")
+        else:
+            off = int(rng.integers(0, size))
+            with open(p, "r+b") as f:
+                f.seek(off)
+                b = f.read(1)
+                f.seek(off)
+                f.write(bytes([b[0] ^ (1 << int(rng.integers(0, 8)))]))
+            corruptions.append(f"bit-flip gen {gens[-1]}")
+
+    with tempfile.TemporaryDirectory() as d:
+        rep2 = run_with_faults(model, params, reqs, plan, sched_kwargs=kw,
+                               baseline=rep.baseline, durable_dir=d,
+                               snapshot_every=2, corruptor=corruptor)
+    assert rep2.kills == 1, rep2
+    print(f"corrupting-kill drill OK ({corruptions or 'nothing to corrupt'})"
+          f": recovery fell back past the damage, survivors identical")
+
+    with tempfile.TemporaryDirectory() as d:
+        snap1 = {"version": 0, "gen": np.asarray([1], np.int32)}
+        snap2 = {"version": 0, "gen": np.asarray([2], np.int32)}
+        save_snapshot(d, snap1)
+        save_snapshot(d, snap2)
+        p = os.path.join(d, "gen_00000002", "arrays.bin")
+        with open(p, "r+b") as f:
+            f.truncate(2)
+        assert int(load_snapshot(d)["gen"][0]) == 1   # fell back
+        p1 = os.path.join(d, "gen_00000001", "arrays.bin")
+        with open(p1, "r+b") as f:
+            f.seek(0)
+            b = f.read(1)
+            f.seek(0)
+            f.write(bytes([b[0] ^ 1]))
+        try:
+            load_snapshot(d)
+            raise AssertionError("fully-corrupt store must raise")
+        except durable.CorruptGenerationError:
+            pass
+    print("store drill OK: truncation falls back, full corruption raises "
+          "— a torn state is never returned")
+    print("durability smoke OK")
+    return {"kills": rep.kills + rep2.kills, "corruptions": corruptions,
+            "survivors": len(rep.survivors)}
+
+
 def fixed(model, params, args) -> dict:
     batch = concrete_batch(model.cfg, args.batch, args.prompt_len,
                            seed=args.seed)
@@ -351,9 +533,43 @@ def main(argv=None) -> dict:
                     help="fail if any TT execution plan is resolved during "
                          "the steady-state serving run (CI smoke for the "
                          "plan-compile-execute contract, DESIGN.md §10)")
+    # durability (DESIGN.md §13)
+    ap.add_argument("--compile-cache", default=None,
+                    help="persistent XLA compilation cache dir (also via "
+                         "$REPRO_COMPILE_CACHE); a restarted process "
+                         "reuses every compiled program")
+    ap.add_argument("--assert-cache-hits", action="store_true",
+                    help="fail if this run adds any entry to "
+                         "--compile-cache (CI warm-start smoke: the "
+                         "second run must compile nothing)")
+    ap.add_argument("--first-token", action="store_true",
+                    help="print a COLD_START line with process start -> "
+                         "first token; run twice against one "
+                         "--compile-cache dir for cold vs. warm")
+    ap.add_argument("--durable", default=None,
+                    help="journal + snapshot dir: submits/retires are "
+                         "journaled, snapshots committed every "
+                         "--snapshot-every steps; Ctrl-C preserves "
+                         "in-flight work for --restore")
+    ap.add_argument("--restore", action="store_true",
+                    help="recover the scheduler from --durable (newest "
+                         "clean snapshot + journal replay) and drain the "
+                         "restored requests")
+    ap.add_argument("--snapshot-every", type=int, default=32,
+                    help="decode steps between snapshot generations "
+                         "(--durable)")
+    ap.add_argument("--durability-smoke", action="store_true",
+                    help="CI drill: seeded kill -9 recovery (clean and "
+                         "corrupted store), truncation/bit-flip fallback")
     args = ap.parse_args(argv)
     if args.slots is None:
         args.slots = args.batch
+    if args.restore and not args.durable:
+        ap.error("--restore requires --durable DIR")
+
+    cache_dir = enable_compile_cache(args.compile_cache)
+    args.compile_cache = cache_dir        # resolves $REPRO_COMPILE_CACHE
+    n_cache0 = cache_entries(cache_dir) if cache_dir else 0
 
     tt = None
     if args.tt:
@@ -371,17 +587,34 @@ def main(argv=None) -> dict:
 
     try:
         if args.prefix_smoke:
-            return prefix_smoke(model, params, args)
-        if args.fault_smoke:
-            return fault_smoke(model, params, args)
-        if args.arrival_rate is not None:
-            return simulate(model, params, args)
-        return fixed(model, params, args)
+            out = prefix_smoke(model, params, args)
+        elif args.fault_smoke:
+            out = fault_smoke(model, params, args)
+        elif args.durability_smoke:
+            out = durability_smoke(model, params, args)
+        elif args.first_token:
+            out = first_token(model, params, args)
+        elif args.arrival_rate is not None or args.restore:
+            if args.arrival_rate is None:
+                args.arrival_rate = 1.0   # --restore drains, no arrivals
+            out = simulate(model, params, args)
+        else:
+            out = fixed(model, params, args)
     except KeyboardInterrupt:
         # simulate() drains gracefully on its own; this is the safety net
         # for the other modes — exit 0 without a traceback
         print("\ninterrupted — exiting")
         return {"interrupted": True}
+    if cache_dir:
+        n1 = cache_entries(cache_dir)
+        print(f"compile cache {cache_dir}: {n_cache0} -> {n1} entries "
+              f"({n1 - n_cache0} new compilations persisted)")
+        if args.assert_cache_hits and (n1 != n_cache0 or n_cache0 == 0):
+            raise AssertionError(
+                f"warm start compiled {n1 - n_cache0} new programs "
+                f"(cache had {n_cache0} entries) — the persistent "
+                f"compilation cache must make a restart re-jit nothing")
+    return out
 
 
 if __name__ == "__main__":

@@ -1,0 +1,369 @@
+"""Write-ahead request journal + durable restart pipeline (DESIGN.md §13).
+
+The scheduler's snapshot (`serving.faults.save_snapshot`, a committed
+generation of the `core.durable` store) is a *periodic* capture; the
+journal makes the window between snapshots durable.  Every lifecycle
+transition is appended — fsynced by default — *as it happens*:
+
+    submit  — the full request payload (a submit is acknowledged once
+              ``DurableScheduler.submit`` returns, i.e. after the fsync)
+    retire  — the full :class:`FinishedRequest` (tokens, logprobs,
+              finish_reason); covers EOS/length retirement, cancels,
+              deadline expiry and ``max_new_tokens=0`` short-circuits
+    cancel  — informational marker (the authoritative outcome is the
+              retire record the cancel produced)
+
+Records are JSON lines with a crc32; replay stops at the first torn or
+corrupt record (an unacknowledged tail, the expected shape of a crash
+mid-append) and recovery truncates the file there before appending.
+
+Recovery (:meth:`DurableScheduler.recover`) =
+
+    load the newest *clean* snapshot generation (checksummed; corrupt
+    generations fall back, `core.durable.load_latest_good`)
+  + replay every journal segment at or after that generation, in order:
+      - submits of unknown uids re-enter the queue (same inputs, PRNG
+        key, priority, submit time),
+      - retire records are authoritative: the journaled result is kept
+        verbatim, any live copy of the request is dropped (blocks freed)
+        rather than recomputed,
+  + commit a fresh snapshot generation so the next crash replays only
+    its own window.
+
+A clean shutdown (`serve.py` Ctrl-C) writes the same snapshot + journal
+checkpoint, so crash and clean-stop share one recovery entry point
+(``--restore``).  Survivor token streams are bit-identical to an
+uninterrupted run: slot PRNG state rides in the snapshot, journaled
+submits carry the request's own key, and decode is per-slot masked, so
+batch composition never leaks between streams (PR 6 contract).
+"""
+from __future__ import annotations
+
+import base64
+import json
+import os
+import zlib
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import durable
+from .faults import load_snapshot, save_snapshot
+from .scheduler import FinishedRequest, Request, Scheduler
+
+JOURNAL_PREFIX = "journal"
+
+
+# ------------------------------------------------------------- serialization
+def _enc_arr(a) -> dict:
+    a = np.asarray(a)
+    return {"dtype": a.dtype.name, "shape": list(a.shape),
+            "b64": base64.b64encode(
+                np.ascontiguousarray(a).tobytes()).decode("ascii")}
+
+
+def _dec_arr(d) -> np.ndarray:
+    a = np.frombuffer(base64.b64decode(d["b64"]),
+                      dtype=durable.resolve_dtype(d["dtype"]))
+    return a.reshape(tuple(d["shape"])).copy()
+
+
+def encode_request(req: Request) -> dict:
+    return {"uid": req.uid,
+            "inputs": {k: _enc_arr(v) for k, v in req.inputs.items()},
+            "max_new_tokens": req.max_new_tokens,
+            "key": None if req.key is None else _enc_arr(req.key),
+            "temperature": req.temperature, "top_k": req.top_k,
+            "priority": req.priority, "deadline_s": req.deadline_s}
+
+
+def decode_request(d: dict) -> Request:
+    return Request(
+        uid=int(d["uid"]),
+        inputs={k: jnp.asarray(_dec_arr(v)) for k, v in d["inputs"].items()},
+        max_new_tokens=int(d["max_new_tokens"]),
+        key=None if d["key"] is None else jnp.asarray(_dec_arr(d["key"])),
+        temperature=float(d["temperature"]), top_k=int(d["top_k"]),
+        priority=int(d["priority"]),
+        deadline_s=(None if d["deadline_s"] is None
+                    else float(d["deadline_s"])))
+
+
+def encode_finished(f: FinishedRequest) -> dict:
+    return {"uid": f.uid, "tokens": np.asarray(f.tokens).tolist(),
+            "logprobs": [float(x) for x in np.asarray(f.logprobs)],
+            "finish_reason": f.finish_reason, "prompt_len": f.prompt_len,
+            "submit_time": f.submit_time, "finish_time": f.finish_time}
+
+
+def decode_finished(d: dict) -> FinishedRequest:
+    return FinishedRequest(
+        uid=int(d["uid"]), tokens=np.asarray(d["tokens"], np.int32),
+        logprobs=np.asarray(d["logprobs"], np.float32),
+        finish_reason=str(d["finish_reason"]),
+        prompt_len=int(d["prompt_len"]),
+        submit_time=float(d["submit_time"]),
+        finish_time=float(d["finish_time"]))
+
+
+# ------------------------------------------------------------------ journal
+class RequestJournal:
+    """Append-only crc-checked JSON-lines journal.  ``fsync=True`` makes
+    every append durable before it returns (the acknowledgement point);
+    tests and benchmarks may turn it off."""
+
+    def __init__(self, path: str, fsync: bool = True):
+        self.path = path
+        self.fsync = fsync
+        self._f = open(path, "ab")
+        self._seq = 0
+
+    def append(self, rec: dict) -> None:
+        rec = dict(rec, seq=self._seq)
+        body = json.dumps(rec, sort_keys=True)
+        rec["crc"] = zlib.crc32(body.encode())
+        self._f.write((json.dumps(rec, sort_keys=True) + "\n").encode())
+        self._f.flush()
+        if self.fsync:
+            os.fsync(self._f.fileno())
+        self._seq += 1
+
+    def close(self) -> None:
+        self._f.close()
+
+    @staticmethod
+    def replay(path: str) -> tuple[list[dict], int]:
+        """Read records until the first torn/corrupt line.  Returns
+        (records, good_offset): everything at or past ``good_offset`` is
+        an unacknowledged tail and must be truncated before appending."""
+        records: list[dict] = []
+        offset = 0
+        if not os.path.exists(path):
+            return records, offset
+        with open(path, "rb") as f:
+            for line in f:
+                if not line.endswith(b"\n"):
+                    break                 # torn tail: crash mid-append
+                try:
+                    rec = json.loads(line)
+                    crc = rec.pop("crc")
+                    body = json.dumps(rec, sort_keys=True)
+                    if crc != zlib.crc32(body.encode()):
+                        break
+                except (json.JSONDecodeError, KeyError, TypeError,
+                        UnicodeDecodeError):
+                    break
+                records.append(rec)
+                offset += len(line)
+        return records, offset
+
+
+# ---------------------------------------------------------- durable wrapper
+class DurableScheduler:
+    """A :class:`Scheduler` with a durable shadow: submits/retires are
+    journaled as they happen, snapshots are committed every
+    ``snapshot_every`` decode steps (and on :meth:`checkpoint`), and
+    :meth:`recover` rebuilds the whole serving state after a ``kill -9``.
+    Everything not overridden here delegates to the wrapped scheduler."""
+
+    def __init__(self, sched: Scheduler, root: str, *,
+                 snapshot_every: int | None = None, fsync: bool = True,
+                 keep_generations: int = 3):
+        self.sched = sched
+        self.root = root
+        self.snapshot_every = snapshot_every
+        self.fsync = fsync
+        self.keep_generations = keep_generations
+        os.makedirs(root, exist_ok=True)
+        self._fin_mark = len(sched.finished)
+        gens = durable.committed_generations(root)
+        if gens:
+            # attach to an existing store (in-memory restart, or recover):
+            # continue the newest generation's journal segment
+            self.generation = gens[-1]
+            self.journal = RequestJournal(
+                self._journal_path(self.generation), fsync)
+            self._snap_steps = sched.steps_run
+        else:
+            # first boot: commit generation 1 now so recovery always has
+            # a snapshot to anchor journal replay
+            self.generation = 0
+            self.journal = None
+            self.checkpoint()
+
+    def _journal_path(self, gen: int) -> str:
+        return os.path.join(self.root, f"{JOURNAL_PREFIX}_{gen:08d}.log")
+
+    # ------------------------------------------------------------ lifecycle
+    def submit(self, req: Request, submit_time: float | None = None) -> None:
+        """Validate + enqueue, then journal.  Once this returns, the
+        request survives a crash (fsynced submit record)."""
+        self.sched.submit(req, submit_time)
+        q = self.sched.queue[-1]
+        self.journal.append({"type": "submit", "req": encode_request(req),
+                             "submit_time": q.submit_time})
+
+    def cancel(self, uid: int) -> bool:
+        ok = self.sched.cancel(uid)
+        if ok:
+            self.journal.append({"type": "cancel", "uid": int(uid)})
+        self._sync_finished()
+        return ok
+
+    def step(self):
+        done = self.sched.step()
+        self._sync_finished()
+        if self.snapshot_every is not None and \
+                self.sched.steps_run - self._snap_steps >= self.snapshot_every:
+            self.checkpoint()
+        return done
+
+    def run(self) -> dict[int, FinishedRequest]:
+        """Drain (same stall guard as ``Scheduler.run``), journaling every
+        retirement and keeping the periodic snapshot cadence."""
+        out: dict[int, FinishedRequest] = {}
+        while not self.sched.idle:
+            before = (len(self.sched.queue), self.sched.num_active,
+                      self.sched.steps_run, len(self.sched.finished))
+            for f in self.step():
+                out[f.uid] = f
+            after = (len(self.sched.queue), self.sched.num_active,
+                     self.sched.steps_run, len(self.sched.finished))
+            if before == after and after[1] == 0:
+                raise RuntimeError(
+                    f"scheduler stalled: {len(self.sched.queue)} queued "
+                    f"requests, no active slots, and a step made no "
+                    f"progress")
+        return out
+
+    def _sync_finished(self) -> None:
+        for f in self.sched.finished[self._fin_mark:]:
+            self.journal.append({"type": "retire",
+                                 "fin": encode_finished(f)})
+        self._fin_mark = len(self.sched.finished)
+
+    # ----------------------------------------------------------- durability
+    def checkpoint(self) -> int:
+        """Commit a snapshot generation and rotate the journal: records
+        before this point are superseded (older segments are kept on disk
+        so a corrupt generation can still fall back and replay forward)."""
+        if self.journal is not None:
+            self._sync_finished()
+            self.journal.close()
+        save_snapshot(self.root, self.sched.snapshot())
+        self.generation = durable.committed_generations(self.root)[-1]
+        self.journal = RequestJournal(
+            self._journal_path(self.generation), self.fsync)
+        self._snap_steps = self.sched.steps_run
+        if self.keep_generations:
+            durable.prune_generations(self.root,
+                                      keep=self.keep_generations)
+            self._prune_journals()
+        return self.generation
+
+    def _prune_journals(self) -> None:
+        live = set(durable.committed_generations(self.root))
+        live.add(self.generation)
+        for name in os.listdir(self.root):
+            if not name.startswith(JOURNAL_PREFIX + "_"):
+                continue
+            g = int(name[len(JOURNAL_PREFIX) + 1:].split(".")[0])
+            if g < min(live):
+                os.unlink(os.path.join(self.root, name))
+
+    def close(self) -> None:
+        if self.journal is not None:
+            self._sync_finished()
+            self.journal.close()
+            self.journal = None
+
+    @classmethod
+    def recover(cls, root: str, model, params, *, clock=None,
+                rebase_clock: bool = False,
+                snapshot_every: int | None = None, fsync: bool = True,
+                log=None) -> "DurableScheduler":
+        """Rebuild after a crash (or clean stop): newest clean snapshot
+        generation + ordered replay of every journal segment at or after
+        it, then a fresh checkpoint.  Corrupt generations are skipped
+        (checksummed fallback); a torn journal tail is truncated."""
+        gen, snap = _load_good_snapshot(root, log)
+        sched = Scheduler.from_snapshot(model, params, snap, clock=clock,
+                                        rebase_clock=rebase_clock)
+        segments = sorted(
+            (int(n[len(JOURNAL_PREFIX) + 1:].split(".")[0]),
+             os.path.join(root, n))
+            for n in os.listdir(root)
+            if n.startswith(JOURNAL_PREFIX + "_") and n.endswith(".log"))
+        replayed = 0
+        for g, path in segments:
+            if g < gen:
+                continue
+            records, good = RequestJournal.replay(path)
+            size = os.path.getsize(path)
+            if good < size:               # torn tail: unacknowledged bytes
+                with open(path, "r+b") as f:
+                    f.truncate(good)
+                if log:
+                    log(f"journal {path}: truncated torn tail "
+                        f"({size - good} bytes)")
+            for rec in records:
+                _apply_record(sched, rec)
+                replayed += 1
+        if log:
+            log(f"recovered from {root}: generation {gen}, "
+                f"{replayed} journal records replayed "
+                f"({len(sched.queue)} queued, {sched.num_active} active, "
+                f"{len(sched.finished)} finished)")
+        ds = cls(sched, root, snapshot_every=snapshot_every, fsync=fsync)
+        ds.checkpoint()                   # bound the next crash's replay
+        return ds
+
+    # everything else — stats, resize, snapshot, idle, queue, allocator,
+    # counters — reads/acts straight through to the wrapped scheduler
+    def __getattr__(self, name):
+        return getattr(self.sched, name)
+
+    @property
+    def hold_admissions(self) -> bool:
+        return self.sched.hold_admissions
+
+    @hold_admissions.setter
+    def hold_admissions(self, v: bool) -> None:
+        self.sched.hold_admissions = v
+
+
+def _load_good_snapshot(root: str, log=None) -> tuple[int, dict]:
+    gen, _tree, _arrays, _manifest, skipped = durable.load_latest_good(root)
+    if skipped and log:
+        for msg in skipped:
+            log(f"skipped corrupt generation: {msg}")
+    return gen, load_snapshot(root, generation=gen)
+
+
+def _known_uids(sched: Scheduler) -> set[int]:
+    uids = {f.uid for f in sched.finished}
+    uids.update(q.req.uid for q in sched.queue)
+    uids.update(s.uid for s in sched.slots if s is not None)
+    return uids
+
+
+def _apply_record(sched: Scheduler, rec: dict) -> None:
+    t = rec.get("type")
+    if t == "submit":
+        req = decode_request(rec["req"])
+        if req.uid not in _known_uids(sched):
+            sched.submit(req, submit_time=float(rec["submit_time"]))
+    elif t == "retire":
+        fin = decode_finished(rec["fin"])
+        if any(f.uid == fin.uid for f in sched.finished):
+            return
+        # the journaled result is authoritative (it was acknowledged):
+        # drop any live copy instead of recomputing it
+        sched.drop(fin.uid)
+        sched.finished.append(fin)
+        if fin.finish_reason == "cancelled":
+            sched.cancelled += 1
+        elif fin.finish_reason == "deadline":
+            sched.expired += 1
+    # "cancel" records are informational: the retire record that the
+    # cancel produced carries the acknowledged outcome

@@ -17,20 +17,25 @@ The scheduler runs on a virtual step clock (one "second" per tick), so
 deadlines fire at deterministic steps and restarts preserve remaining
 TTLs without any real-time dependence.
 
-Disk persistence (:func:`save_snapshot` / :func:`load_snapshot`) follows
-``training/checkpoint.py``: one ``.npz`` of array leaves + a JSON
-manifest, written to a temp path and renamed into place, so a torn write
-can never be restored.
+Disk persistence (:func:`save_snapshot` / :func:`load_snapshot`) rides
+the generation-based durable store (``core.durable``, DESIGN.md §13):
+each save commits a new checksummed generation under the snapshot root
+(chunked ``arrays.bin`` + JSON manifest, temp + fsync + atomic rename),
+and each load verifies every array checksum, falling back to the newest
+*clean* generation when the latest is truncated or bit-flipped — a torn
+or corrupted write can never be restored.  The pre-PR-8 single-dir
+layout (``arrays.npz`` + ``manifest.json``) is still readable.
 """
 from __future__ import annotations
 
 import dataclasses
 import json
 import os
-import shutil
+import zipfile
 
 import numpy as np
 
+from repro.core import durable
 from repro.kernels import plan as ttplan
 from .scheduler import FinishedRequest, Request, Scheduler
 
@@ -50,19 +55,27 @@ class FaultPlan:
     ``resizes`` — ``(step, num_slots, num_blocks)`` triples (either value
     may be None to leave that axis alone).
     ``restart_steps`` — before each of these steps the scheduler is
-    snapshotted, discarded, and rebuilt via ``Scheduler.from_snapshot``.
+    snapshotted, discarded, and rebuilt via ``Scheduler.from_snapshot``
+    (a *graceful* restart: the in-memory state is captured first).
+    ``kill_steps`` — ``kill -9`` at these steps: the scheduler is
+    discarded with NO snapshot taken, and recovery must come entirely
+    from the durable store (last committed snapshot generation + journal
+    replay, ``serving.durable.DurableScheduler.recover``) — requires
+    ``run_with_faults(durable_dir=...)``.
     """
     alloc_fail_steps: frozenset = frozenset()
     hold_steps: frozenset = frozenset()
     cancels: tuple = ()                   # ((step, uid), ...)
     resizes: tuple = ()                   # ((step, slots|None, blocks|None), ...)
     restart_steps: frozenset = frozenset()
+    kill_steps: frozenset = frozenset()
 
     @classmethod
     def random(cls, seed: int, *, horizon: int, uids=(),
                n_alloc_fail: int = 2, n_hold: int = 1, n_cancel: int = 1,
                resize_to: tuple | None = None,
-               with_restart: bool = True) -> "FaultPlan":
+               with_restart: bool = True,
+               with_kill: bool = False) -> "FaultPlan":
         """Sample a plan from a seeded generator.  ``horizon`` bounds the
         step indices faults land on (keep it well under the expected drain
         length so every fault actually fires)."""
@@ -86,7 +99,9 @@ class FaultPlan:
             hold_steps=steps(n_hold),
             cancels=cancels, resizes=resizes,
             restart_steps=(frozenset({int(rng.integers(1, horizon))})
-                           if with_restart else frozenset()))
+                           if with_restart else frozenset()),
+            kill_steps=(frozenset({int(rng.integers(1, horizon))})
+                        if with_kill else frozenset()))
 
 
 # -------------------------------------------------------------------- harness
@@ -101,6 +116,7 @@ class FaultReport:
     cancelled: int
     expired: int
     replans: int
+    kills: int = 0                        # hard kills recovered from disk
 
 
 def step_clock(state: dict):
@@ -112,7 +128,10 @@ def run_with_faults(model, params, requests: list[Request], plan: FaultPlan,
                     *, sched_kwargs: dict, max_steps: int = 2000,
                     arrival_steps: list[int] | None = None,
                     baseline: dict | None = None,
-                    check_identity: bool = True) -> FaultReport:
+                    check_identity: bool = True,
+                    durable_dir: str | None = None,
+                    snapshot_every: int | None = None,
+                    corruptor=None) -> FaultReport:
     """Drive a scheduler through ``plan`` on a virtual step clock, then
     assert the invariant suite.  ``sched_kwargs`` configures both the
     faulted scheduler and (unless ``baseline`` results are passed in) an
@@ -124,9 +143,21 @@ def run_with_faults(model, params, requests: list[Request], plan: FaultPlan,
     (per-request PRNG streams), so the baseline submits everything
     upfront regardless.
 
+    ``durable_dir`` wraps the scheduler in a
+    ``serving.durable.DurableScheduler`` (journal + periodic snapshots
+    every ``snapshot_every`` decode steps), which is what makes
+    ``plan.kill_steps`` — hard kills recovered purely from disk —
+    possible.  ``corruptor(durable_dir, step)``, if given, runs between
+    each kill and its recovery: durability fault injection (truncating a
+    committed ``arrays.bin`` mid-file, flipping a bit) exercises the
+    checksum-verified fallback path.
+
     Surviving requests — everything not retired with ``finish_reason`` in
     {"cancelled", "deadline"} — must match the baseline bit-for-bit.
     """
+    if plan.kill_steps and durable_dir is None:
+        raise ValueError("plan.kill_steps require durable_dir (a hard "
+                         "kill recovers from the durable store only)")
     if baseline is None:
         ref = Scheduler(model, params, **sched_kwargs)
         for r in requests:
@@ -140,6 +171,10 @@ def run_with_faults(model, params, requests: list[Request], plan: FaultPlan,
     plans_warm = ttplan.plan_resolutions()
     clk = {"t": 0.0}
     sched = Scheduler(model, params, clock=step_clock(clk), **sched_kwargs)
+    if durable_dir is not None:
+        from .durable import DurableScheduler
+        sched = DurableScheduler(sched, durable_dir,
+                                 snapshot_every=snapshot_every)
     pending = sorted(
         zip(arrival_steps or [0] * len(requests), requests),
         key=lambda p: p[0])
@@ -150,17 +185,34 @@ def run_with_faults(model, params, requests: list[Request], plan: FaultPlan,
 
     step = 0
     restarts = 0
+    kills = 0
     while pending or not sched.idle:
         if step >= max_steps:
             raise RuntimeError(
                 f"fault run did not drain within {max_steps} steps "
                 f"(queue={len(sched.queue)}, active={sched.num_active})")
+        if step in plan.kill_steps:
+            # kill -9: NOTHING in memory survives — no snapshot is taken.
+            # Recovery = newest clean snapshot generation + journal replay.
+            from .durable import DurableScheduler
+            sched.close()                 # the OS would flush fds anyway
+            del sched
+            if corruptor is not None:
+                corruptor(durable_dir, step)
+            sched = DurableScheduler.recover(
+                durable_dir, model, params, clock=step_clock(clk),
+                snapshot_every=snapshot_every)
+            kills += 1
         if step in plan.restart_steps:
             snap = sched.snapshot()
             carry = (sched.preemptions, sched.cancelled, sched.expired)
             del sched
             sched = Scheduler.from_snapshot(model, params, snap,
                                             clock=step_clock(clk))
+            if durable_dir is not None:
+                from .durable import DurableScheduler
+                sched = DurableScheduler(sched, durable_dir,
+                                         snapshot_every=snapshot_every)
             assert (sched.preemptions, sched.cancelled,
                     sched.expired) == carry
             restarts += 1
@@ -211,7 +263,8 @@ def run_with_faults(model, params, requests: list[Request], plan: FaultPlan,
     return FaultReport(
         finished=finished, baseline=baseline, survivors=survivors,
         steps=step, restarts=restarts, preemptions=sched.preemptions,
-        cancelled=sched.cancelled, expired=sched.expired, replans=replans)
+        cancelled=sched.cancelled, expired=sched.expired, replans=replans,
+        kills=kills)
 
 
 # ------------------------------------------------------------------- on disk
@@ -247,26 +300,85 @@ def _join_arrays(obj, arrays: dict):
     return obj
 
 
+def _array_refs(tree, out: set) -> set:
+    """Array keys referenced by ``{"__arr__": key}`` markers in ``tree``."""
+    if isinstance(tree, dict):
+        if set(tree) == {_ARR}:
+            out.add(tree[_ARR])
+        else:
+            for v in tree.values():
+                _array_refs(v, out)
+    elif isinstance(tree, list):
+        for v in tree:
+            _array_refs(v, out)
+    return out
+
+
+def _validate_snapshot(path: str, tree, arrays: dict) -> None:
+    """The manifest tree and the array payload must reference exactly the
+    same key set — a mismatch (partial write, mixed-up files, manual
+    edits) fails HERE with the offending keys, not as a ``KeyError`` deep
+    inside ``_join_arrays``."""
+    if not isinstance(tree, dict) or "version" not in tree:
+        raise RuntimeError(
+            f"snapshot at {path}: manifest tree is not a scheduler "
+            f"snapshot (no 'version' field) — wrong or corrupted file")
+    refs = _array_refs(tree, set())
+    missing = sorted(refs - set(arrays))
+    extra = sorted(set(arrays) - refs)
+    if missing or extra:
+        raise RuntimeError(
+            f"snapshot at {path}: manifest/array mismatch — "
+            f"{len(missing)} referenced arrays missing from the payload "
+            f"({missing[:5]}{'…' if len(missing) > 5 else ''}), "
+            f"{len(extra)} unreferenced arrays present "
+            f"({extra[:5]}{'…' if len(extra) > 5 else ''})")
+
+
 def save_snapshot(path: str, snap: dict) -> str:
-    """Persist a ``Scheduler.snapshot()`` atomically: array leaves in
-    ``arrays.npz``, everything else in ``manifest.json`` with per-leaf
-    markers.  Returns the final directory."""
-    tmp = path + f".tmp.{os.getpid()}"
-    os.makedirs(tmp, exist_ok=True)
+    """Persist a ``Scheduler.snapshot()`` durably: commits the next
+    checksummed generation under ``path`` (``core.durable``: chunked
+    ``arrays.bin`` + manifest, temp + fsync + atomic rename).  Returns
+    ``path`` — :func:`load_snapshot` reads the newest clean generation
+    back from it."""
     arrays: dict[str, np.ndarray] = {}
-    manifest = _split_arrays(snap, arrays, "snap")
-    np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
-    with open(os.path.join(tmp, "manifest.json"), "w") as f:
-        json.dump(manifest, f)
-    if os.path.exists(path):
-        shutil.rmtree(path)
-    os.rename(tmp, path)
+    tree = _split_arrays(snap, arrays, "snap")
+    durable.write_generation(path, tree, arrays)
     return path
 
 
-def load_snapshot(path: str) -> dict:
+def _load_legacy_snapshot(path: str) -> dict:
+    """Pre-PR-8 single-directory layout: ``manifest.json`` + one
+    ``arrays.npz`` directly under ``path`` (DESIGN.md §13 migration
+    note).  Corruption surfaces as a clear RuntimeError, not a raw
+    zipfile/numpy traceback."""
     with open(os.path.join(path, "manifest.json")) as f:
-        manifest = json.load(f)
-    with np.load(os.path.join(path, "arrays.npz")) as npz:
-        arrays = {k: npz[k] for k in npz.files}
-    return _join_arrays(manifest, arrays)
+        tree = json.load(f)
+    npz_path = os.path.join(path, "arrays.npz")
+    try:
+        with np.load(npz_path) as npz:
+            arrays = {k: npz[k] for k in npz.files}
+    except (zipfile.BadZipFile, ValueError, OSError, EOFError) as e:
+        raise RuntimeError(
+            f"legacy snapshot archive {npz_path} is corrupt or "
+            f"truncated ({e}); re-save the snapshot with the current "
+            f"generation-based format") from e
+    _validate_snapshot(path, tree, arrays)
+    return _join_arrays(tree, arrays)
+
+
+def load_snapshot(path: str, generation: int | None = None) -> dict:
+    """Load a persisted snapshot.  Default: the newest generation under
+    ``path`` that passes every array checksum — torn or bit-flipped
+    generations are skipped (never returned), falling back to the last
+    fully-committed one.  ``generation`` pins one generation exactly
+    (no fallback).  Also reads the pre-PR-8 ``arrays.npz`` layout."""
+    if os.path.exists(os.path.join(path, "arrays.npz")):
+        return _load_legacy_snapshot(path)
+    if generation is not None:
+        tree, arrays, _manifest = durable.load_generation(path, generation)
+    else:
+        _gen, tree, arrays, _manifest, _skipped = \
+            durable.load_latest_good(path)
+    _validate_snapshot(path, tree, arrays)
+    return _join_arrays(tree, arrays)

@@ -248,6 +248,25 @@ class Scheduler:
                 return True
         return False
 
+    def drop(self, uid: int) -> bool:
+        """Remove a request — queued or in flight — WITHOUT recording a
+        result: the slot/blocks are freed and nothing lands in
+        ``finished``.  Journal replay uses this when a retire record is
+        authoritative (the journaled tokens were already acknowledged to
+        the client; the restored live copy must simply vanish).  Returns
+        False for an unknown uid."""
+        for qi, q in enumerate(self.queue):
+            if q.req.uid == uid:
+                del self.queue[qi]
+                return True
+        for i, s in enumerate(self.slots):
+            if s is not None and s.uid == uid:
+                if self.paged:
+                    self._release_blocks(i)
+                self.slots[i] = None
+                return True
+        return False
+
     @property
     def num_active(self) -> int:
         return sum(s is not None for s in self.slots)

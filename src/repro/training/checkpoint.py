@@ -1,11 +1,18 @@
-"""Atomic checkpointing of arbitrary pytrees (params + optimizer + data
-iterator state).
+"""Atomic, checksummed checkpointing of arbitrary pytrees (params +
+optimizer + data iterator state).
 
-Format: one ``.npz`` of flattened leaves (keyed by path) + a msgpack
-manifest (step, tree structure hash, wallclock).  Writes go to a temp dir
-and are renamed into place — a torn write can never be restored.  On real
-clusters only process 0 writes (``jax.process_index() == 0``); restores are
-collective reads of the same file.
+Format (PR 8, DESIGN.md §13): one ``step_<NNNNNNNN>`` directory per save
+holding chunk-streamed ``arrays.bin`` + a JSON manifest (step, tree
+structure hash, wallclock, and a per-array index with dtype/shape/offset/
+crc32), written with the ``core.durable`` commit protocol — temp dir,
+fsync of every file, atomic rename, parent-dir fsync — so a torn write
+can never be restored.  Restores verify every checksum while streaming;
+a truncated or bit-flipped checkpoint raises a clear ``RuntimeError``
+naming the file and the remaining good steps, and ``restore(step=None)``
+falls back to the newest step that loads clean.  Pre-PR-8 checkpoints
+(``arrays.npz``) are still readable.  On real clusters only process 0
+writes (``jax.process_index() == 0``); restores are collective reads of
+the same files.
 """
 from __future__ import annotations
 
@@ -14,9 +21,12 @@ import json
 import os
 import shutil
 import time
+import zipfile
 
 import jax
 import numpy as np
+
+from repro.core import durable
 
 
 def _flatten(tree) -> dict[str, np.ndarray]:
@@ -42,20 +52,29 @@ def _flatten_structure(tree) -> list[str]:
 
 
 def save(path: str, tree, step: int, extra: dict | None = None) -> str:
-    """Atomic save.  Returns the final checkpoint directory."""
+    """Atomic checksummed save.  Returns the final checkpoint directory."""
     final = os.path.join(path, f"step_{step:08d}")
     tmp = final + f".tmp.{os.getpid()}"
-    os.makedirs(tmp, exist_ok=True)
-    flat = _flatten(tree)
-    np.savez(os.path.join(tmp, "arrays.npz"), **flat)
-    manifest = {"step": step, "time": time.time(),
-                "fingerprint": tree_fingerprint(tree),
-                "extra": extra or {}}
-    with open(os.path.join(tmp, "manifest.json"), "w") as f:
-        json.dump(manifest, f)
-    if os.path.exists(final):
-        shutil.rmtree(final)
-    os.rename(tmp, final)
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+    try:
+        index = durable.write_arrays(tmp, _flatten(tree))
+        manifest = {"schema": durable.DURABLE_SCHEMA, "step": step,
+                    "time": time.time(),
+                    "fingerprint": tree_fingerprint(tree),
+                    "arrays": index, "extra": extra or {}}
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+            f.flush()
+            os.fsync(f.fileno())
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)
+    except BaseException:
+        shutil.rmtree(tmp, ignore_errors=True)
+        raise
+    durable.fsync_dir(path)
     return final
 
 
@@ -71,23 +90,73 @@ def available_steps(path: str) -> list[int]:
     return sorted(out)
 
 
+def _load_step_arrays(path: str, step: int) -> tuple[dict, dict]:
+    """Load one step's (manifest, arrays-by-key), verifying checksums.
+    Raises RuntimeError naming the damaged file and the other steps that
+    are still available."""
+    d = os.path.join(path, f"step_{step:08d}")
+
+    def _bad(detail: str) -> RuntimeError:
+        good = [s for s in available_steps(path) if s != step]
+        return RuntimeError(
+            f"checkpoint step {step} at {d} is corrupt: {detail}; "
+            + (f"good steps still available: {good} — pass step= to "
+               f"restore one of them" if good
+               else "no other checkpoint steps are available"))
+
+    try:
+        with open(os.path.join(d, "manifest.json")) as f:
+            manifest = json.load(f)
+    except (OSError, json.JSONDecodeError, UnicodeDecodeError) as e:
+        raise _bad(f"unreadable manifest ({e})") from e
+    if "arrays" in manifest:                      # current chunked format
+        try:
+            arrays = durable.read_arrays(os.path.join(d, "arrays.bin"),
+                                         manifest["arrays"])
+        except durable.CorruptGenerationError as e:
+            raise _bad(str(e)) from e
+        return manifest, arrays
+    # pre-PR-8 format: a single numpy archive, no checksums — corruption
+    # still surfaces as a named RuntimeError, not a raw zipfile error
+    npz_path = os.path.join(d, "arrays.npz")
+    try:
+        with np.load(npz_path) as npz:
+            arrays = {k: npz[k] for k in npz.files}
+    except (zipfile.BadZipFile, ValueError, OSError, EOFError) as e:
+        raise _bad(f"legacy archive {npz_path} truncated or damaged "
+                   f"({e})") from e
+    return manifest, arrays
+
+
 def restore(path: str, template, step: int | None = None,
             shardings=None) -> tuple[object, dict]:
-    """Restore into the structure of ``template``; verifies fingerprint.
-    ``shardings``: optional matching tree of NamedShardings — restoring onto
-    a *different* mesh than the one that saved is the elastic-rescale path
-    (fault.py)."""
+    """Restore into the structure of ``template``; verifies the structure
+    fingerprint and every array checksum.  ``step=None`` restores the
+    newest step that loads *clean* — corrupt newer steps are skipped with
+    the reasons attached to the error if nothing survives.  An explicit
+    ``step`` never falls back.  ``shardings``: optional matching tree of
+    NamedShardings — restoring onto a *different* mesh than the one that
+    saved is the elastic-rescale path (fault.py)."""
     steps = available_steps(path)
     if not steps:
         raise FileNotFoundError(f"no checkpoints under {path}")
-    step = steps[-1] if step is None else step
-    d = os.path.join(path, f"step_{step:08d}")
-    with open(os.path.join(d, "manifest.json")) as f:
-        manifest = json.load(f)
+    if step is not None:
+        manifest, arrays = _load_step_arrays(path, step)
+    else:
+        errors: list[str] = []
+        for s in reversed(steps):
+            try:
+                manifest, arrays = _load_step_arrays(path, s)
+                break
+            except RuntimeError as e:
+                errors.append(str(e))
+        else:
+            raise RuntimeError(
+                f"every checkpoint under {path} is corrupt:\n  "
+                + "\n  ".join(errors))
     if manifest["fingerprint"] != tree_fingerprint(template):
         raise ValueError("checkpoint/tree structure mismatch "
                          f"({manifest['fingerprint']})")
-    arrays = np.load(os.path.join(d, "arrays.npz"))
     flat_t, treedef = jax.tree_util.tree_flatten_with_path(template)
     leaves = []
     shard_leaves = (jax.tree.leaves(shardings) if shardings is not None

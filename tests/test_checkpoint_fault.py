@@ -59,6 +59,66 @@ def test_torn_write_never_restored(tmp_path):
     assert m["step"] == 1
 
 
+def test_corrupt_checkpoint_falls_back_to_good_step(tmp_path):
+    """restore(step=None) skips a bit-flipped newest checkpoint (checksum
+    caught while streaming) and restores the previous good step."""
+    s = _state()
+    for step in (1, 2):
+        s["opt"]["step"] = jnp.asarray(step, jnp.int32)
+        ckpt.save(str(tmp_path), s, step=step)
+    p = os.path.join(str(tmp_path), "step_00000002", "arrays.bin")
+    b = bytearray(open(p, "rb").read())
+    b[5] ^= 0x08
+    open(p, "wb").write(bytes(b))
+    restored, m = ckpt.restore(str(tmp_path), s)
+    assert m["step"] == 1 and int(restored["opt"]["step"]) == 1
+
+
+def test_corrupt_checkpoint_explicit_step_names_file_and_good_steps(
+        tmp_path):
+    """An explicit step never falls back: truncation raises a RuntimeError
+    naming the damaged path and listing the steps that are still good."""
+    s = _state()
+    for step in (3, 8):
+        ckpt.save(str(tmp_path), s, step=step)
+    p = os.path.join(str(tmp_path), "step_00000008", "arrays.bin")
+    with open(p, "r+b") as f:
+        f.truncate(7)
+    with pytest.raises(RuntimeError) as ei:
+        ckpt.restore(str(tmp_path), s, step=8)
+    msg = str(ei.value)
+    assert "step_00000008" in msg and "[3]" in msg
+    # and everything corrupt raises, never returns torn state
+    p3 = os.path.join(str(tmp_path), "step_00000003", "arrays.bin")
+    with open(p3, "r+b") as f:
+        f.truncate(7)
+    with pytest.raises(RuntimeError, match="every checkpoint .* corrupt"):
+        ckpt.restore(str(tmp_path), s)
+
+
+def test_legacy_npz_checkpoint_still_restores(tmp_path):
+    """Pre-PR-8 checkpoints (arrays.npz, no per-array index) restore
+    unchanged; a truncated legacy archive raises a named RuntimeError
+    instead of a raw zipfile error."""
+    import numpy as _np
+    s = _state()
+    d = os.path.join(str(tmp_path), "step_00000004")
+    os.makedirs(d)
+    flat = {k: _np.asarray(v) for k, v in ckpt._flatten(s).items()}
+    _np.savez(os.path.join(d, "arrays.npz"), **flat)
+    with open(os.path.join(d, "manifest.json"), "w") as f:
+        json.dump({"step": 4, "fingerprint": ckpt.tree_fingerprint(s),
+                   "extra": {}}, f)
+    restored, m = ckpt.restore(str(tmp_path), s)
+    assert m["step"] == 4
+    for a, b in zip(jax.tree.leaves(s), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    with open(os.path.join(d, "arrays.npz"), "r+b") as f:
+        f.truncate(12)
+    with pytest.raises(RuntimeError, match="legacy archive"):
+        ckpt.restore(str(tmp_path), s, step=4)
+
+
 def test_prune_keeps_newest(tmp_path):
     s = _state()
     for step in range(6):

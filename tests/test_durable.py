@@ -1,0 +1,309 @@
+"""Durable store, request journal, and kill-recovery (DESIGN.md §13).
+
+Store level: a committed generation round-trips bit-exactly (awkward
+dtypes included), torn or bit-flipped generations are detected by
+checksum and fall back to the last clean one, and a fully-corrupt store
+raises instead of returning torn state.  Journal level: appends are
+replayable, a torn tail stops replay at the last acknowledged record.
+Scheduler level: an acknowledged submit survives an immediate kill -9,
+and recovery replays retires idempotently.
+"""
+import json
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import build, get_config
+from repro.configs.shapes import concrete_batch
+from repro.core import durable
+from repro.serving.durable import DurableScheduler, RequestJournal
+from repro.serving.faults import (load_snapshot, save_snapshot, step_clock,
+                                  _split_arrays)
+from repro.serving.scheduler import Request, Scheduler
+
+BLOCK = 4
+
+
+# ---------------------------------------------------------------------------
+# Generation store
+# ---------------------------------------------------------------------------
+
+def _awkward_arrays():
+    import ml_dtypes
+    return {
+        "bf16": np.arange(6).reshape(2, 3).astype(ml_dtypes.bfloat16),
+        "int8": (np.arange(7) - 3).astype(np.int8),
+        "zero_d": np.asarray(2.5, np.float32),
+        "empty_table": np.zeros((0, 4), np.int32),
+        "big": np.arange(70_000, dtype=np.float32),   # spans chunks
+    }
+
+
+def test_write_read_roundtrip_awkward_leaves(tmp_path):
+    arrays = _awkward_arrays()
+    index = durable.write_arrays(str(tmp_path), arrays, chunk_bytes=1024)
+    back = durable.read_arrays(str(tmp_path / "arrays.bin"), index,
+                               chunk_bytes=1024)
+    assert set(back) == set(arrays)
+    for k, a in arrays.items():
+        assert back[k].dtype == a.dtype and back[k].shape == a.shape
+        assert back[k].tobytes() == a.tobytes()       # bit-exact
+
+
+def test_generation_fallback_on_truncation_and_bitflip(tmp_path):
+    root = str(tmp_path)
+    for i in range(3):
+        durable.write_generation(root, {"i": i},
+                                 {"a": np.arange(100) + i})
+    assert durable.committed_generations(root) == [1, 2, 3]
+    # truncate gen 3 mid-file: checksummed load must fall back to gen 2
+    with open(os.path.join(root, "gen_00000003", "arrays.bin"), "r+b") as f:
+        f.truncate(37)
+    gen, tree, arrays, _m, skipped = durable.load_latest_good(root)
+    assert gen == 2 and tree == {"i": 1} and len(skipped) == 1
+    assert "truncated" in skipped[0]
+    # bit-flip gen 2: falls back again, to gen 1
+    p = os.path.join(root, "gen_00000002", "arrays.bin")
+    b = bytearray(open(p, "rb").read())
+    b[11] ^= 0x10
+    open(p, "wb").write(bytes(b))
+    gen, tree, *_ = durable.load_latest_good(root)
+    assert gen == 1 and tree == {"i": 0}
+
+
+def test_all_generations_corrupt_raises_clear_error(tmp_path):
+    root = str(tmp_path)
+    durable.write_generation(root, {}, {"a": np.arange(10)})
+    with open(os.path.join(root, "gen_00000001", "arrays.bin"), "r+b") as f:
+        f.truncate(3)
+    with pytest.raises(durable.CorruptGenerationError,
+                       match="every generation .* corrupt"):
+        durable.load_latest_good(root)
+
+
+def test_empty_store_raises_filenotfound(tmp_path):
+    with pytest.raises(FileNotFoundError):
+        durable.load_latest_good(str(tmp_path))
+
+
+def test_torn_tmp_dirs_are_invisible(tmp_path):
+    """A crash before the atomic rename leaves only a .tmp dir, which a
+    reader must never list as committed."""
+    root = str(tmp_path)
+    durable.write_generation(root, {"ok": True}, {"a": np.arange(4)})
+    torn = os.path.join(root, "gen_00000002.tmp.999")
+    os.makedirs(torn)
+    with open(os.path.join(torn, "manifest.json"), "w") as f:
+        json.dump({"schema": durable.DURABLE_SCHEMA}, f)
+    assert durable.committed_generations(root) == [1]
+    gen, tree, *_ = durable.load_latest_good(root)
+    assert gen == 1 and tree == {"ok": True}
+
+
+def test_wrong_schema_rejected(tmp_path):
+    root = str(tmp_path)
+    durable.write_generation(root, {}, {"a": np.arange(4)})
+    mp = os.path.join(root, "gen_00000001", "manifest.json")
+    m = json.load(open(mp))
+    m["schema"] = durable.DURABLE_SCHEMA + 1
+    json.dump(m, open(mp, "w"))
+    with pytest.raises(durable.CorruptGenerationError, match="schema"):
+        durable.load_generation(root, 1)
+
+
+def test_prune_keeps_newest(tmp_path):
+    root = str(tmp_path)
+    for i in range(5):
+        durable.write_generation(root, {"i": i}, {"a": np.arange(3)})
+    durable.prune_generations(root, keep=2)
+    assert durable.committed_generations(root) == [4, 5]
+
+
+# ---------------------------------------------------------------------------
+# Request journal
+# ---------------------------------------------------------------------------
+
+def test_journal_roundtrip_and_torn_tail(tmp_path):
+    path = str(tmp_path / "j.log")
+    j = RequestJournal(path, fsync=False)
+    for i in range(3):
+        j.append({"type": "submit", "uid": i})
+    j.close()
+    # crash mid-append: an unterminated half-record at the tail
+    with open(path, "ab") as f:
+        f.write(b'{"type": "submit", "uid": 3, "se')
+    records, good = RequestJournal.replay(path)
+    assert [r["uid"] for r in records] == [0, 1, 2]
+    assert good < os.path.getsize(path)
+    # recovery truncates the torn tail, then appending continues cleanly
+    with open(path, "r+b") as f:
+        f.truncate(good)
+    j2 = RequestJournal(path, fsync=False)
+    j2.append({"type": "submit", "uid": 3})
+    j2.close()
+    records, good = RequestJournal.replay(path)
+    assert [r["uid"] for r in records] == [0, 1, 2, 3]
+    assert good == os.path.getsize(path)
+
+
+def test_journal_corrupt_record_stops_replay(tmp_path):
+    path = str(tmp_path / "j.log")
+    j = RequestJournal(path, fsync=False)
+    for i in range(3):
+        j.append({"type": "submit", "uid": i})
+    j.close()
+    lines = open(path, "rb").read().splitlines(keepends=True)
+    lines[1] = lines[1].replace(b'"uid": 1', b'"uid": 9')  # crc now wrong
+    open(path, "wb").write(b"".join(lines))
+    records, good = RequestJournal.replay(path)
+    assert [r["uid"] for r in records] == [0]              # stops at damage
+    assert good == len(lines[0])
+
+
+# ---------------------------------------------------------------------------
+# Snapshot validation + legacy layout
+# ---------------------------------------------------------------------------
+
+def test_load_snapshot_reports_missing_and_extra_keys(tmp_path):
+    root = str(tmp_path)
+    tree = {"version": 1,
+            "a": {"__arr__": "snap/a"}, "b": {"__arr__": "snap/b"}}
+    durable.write_generation(root, tree, {"snap/a": np.arange(3),
+                                          "snap/zzz": np.arange(2)})
+    with pytest.raises(RuntimeError) as ei:
+        load_snapshot(root)
+    msg = str(ei.value)
+    assert "snap/b" in msg and "snap/zzz" in msg and "mismatch" in msg
+
+
+def test_load_snapshot_rejects_non_snapshot_tree(tmp_path):
+    root = str(tmp_path)
+    durable.write_generation(root, {"not_a": "snapshot"}, {})
+    with pytest.raises(RuntimeError, match="version"):
+        load_snapshot(root)
+
+
+def test_load_snapshot_legacy_layout(tmp_path):
+    """The pre-PR-8 single-dir layout (arrays.npz + manifest.json) still
+    loads; a truncated archive raises a clear error, not a zipfile one."""
+    snap = {"version": 1, "x": np.arange(5, dtype=np.float32),
+            "nested": {"y": np.ones((2, 2))}}
+    d = tmp_path / "legacy"
+    d.mkdir()
+    arrays = {}
+    tree = _split_arrays(snap, arrays, "snap")
+    np.savez(str(d / "arrays.npz"), **arrays)
+    with open(d / "manifest.json", "w") as f:
+        json.dump(tree, f)
+    back = load_snapshot(str(d))
+    np.testing.assert_array_equal(back["x"], snap["x"])
+    np.testing.assert_array_equal(back["nested"]["y"], snap["nested"]["y"])
+    with open(d / "arrays.npz", "r+b") as f:
+        f.truncate(10)
+    with pytest.raises(RuntimeError, match="corrupt or truncated"):
+        load_snapshot(str(d))
+
+
+def test_save_snapshot_generations_accumulate(tmp_path):
+    root = str(tmp_path / "snaps")
+    save_snapshot(root, {"version": 1, "n": np.asarray([1])})
+    save_snapshot(root, {"version": 1, "n": np.asarray([2])})
+    assert durable.committed_generations(root) == [1, 2]
+    assert int(load_snapshot(root)["n"][0]) == 2
+    assert int(load_snapshot(root, generation=1)["n"][0]) == 1
+
+
+# ---------------------------------------------------------------------------
+# DurableScheduler: acknowledged work survives a kill
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def served():
+    cfg = get_config("qwen3_32b", "smoke")
+    model = build(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def _reqs(cfg, n, S, steps, temperature=0.0):
+    toks = concrete_batch(cfg, n, S)["tokens"]
+    key = jax.random.PRNGKey(11)
+    return [Request(uid=u, inputs={"tokens": toks[u:u + 1]},
+                    max_new_tokens=steps, key=jax.random.fold_in(key, u),
+                    temperature=temperature)
+            for u in range(n)]
+
+
+def _kw(cache_len, **over):
+    kw = dict(num_slots=2, cache_len=cache_len, paged=True,
+              block_size=BLOCK, num_blocks=10, key=jax.random.PRNGKey(7))
+    kw.update(over)
+    return kw
+
+
+def test_acknowledged_submit_survives_immediate_kill(served, tmp_path):
+    """A submit is acknowledged once DurableScheduler.submit returns: a
+    kill before ANY decode step (nothing in the snapshot but the empty
+    boot generation) must still recover it from the journal alone."""
+    cfg, model, params = served
+    S, steps = 8, 4
+    reqs = _reqs(cfg, 3, S, steps)
+    ref = Scheduler(model, params, **_kw(S + steps + 2))
+    for r in reqs:
+        ref.submit(r)
+    refout = ref.run()
+    ref.allocator.assert_quiescent()
+
+    root = str(tmp_path / "store")
+    clk = {"t": 0.0}
+    ds = DurableScheduler(
+        Scheduler(model, params, clock=step_clock(clk), **_kw(S + steps + 2)),
+        root)
+    for r in reqs:
+        ds.submit(r)
+    ds.close()                            # kill -9: no step, no snapshot
+    del ds
+
+    rec = DurableScheduler.recover(root, model, params,
+                                   clock=step_clock(clk))
+    assert len(rec.queue) == 3
+    while not rec.idle:
+        clk["t"] += 1
+        rec.step()
+    rec.allocator.assert_quiescent()
+    out = {f.uid: f for f in rec.finished}
+    for u in range(3):
+        np.testing.assert_array_equal(out[u].tokens, refout[u].tokens)
+    rec.close()
+
+
+def test_recovery_is_idempotent_after_drain(served, tmp_path):
+    """Recovering a fully-drained store must replay retires without
+    recomputing or duplicating them — the journaled results are
+    authoritative."""
+    cfg, model, params = served
+    S, steps = 8, 4
+    reqs = _reqs(cfg, 3, S, steps, temperature=0.5)
+    root = str(tmp_path / "store")
+    clk = {"t": 0.0}
+    ds = DurableScheduler(
+        Scheduler(model, params, clock=step_clock(clk), **_kw(S + steps + 2)),
+        root, snapshot_every=2)
+    for r in reqs:
+        ds.submit(r)
+    while not ds.idle:
+        clk["t"] += 1
+        ds.step()
+    first = {f.uid: f.tokens.tolist() for f in ds.finished}
+    ds.close()
+    del ds
+
+    rec = DurableScheduler.recover(root, model, params,
+                                   clock=step_clock(clk))
+    assert rec.idle
+    again = {f.uid: f.tokens.tolist() for f in rec.finished}
+    assert again == first                 # nothing lost, nothing doubled
+    assert len(rec.finished) == 3
+    rec.close()
