@@ -138,12 +138,14 @@ def shard_act(x: jax.Array, names: tuple[str | None, ...]) -> jax.Array:
 # Parameter sharding from spec trees
 # ---------------------------------------------------------------------------
 
-def param_pspec(spec: ParamSpec, mesh: Mesh, fsdp_axes: tuple[str, ...] = ()
-                ) -> P:
+def param_pspec(spec: ParamSpec, mesh: Mesh, fsdp_axes: tuple[str, ...] = (),
+                rules: dict | None = None) -> P:
+    if rules is None:
+        rules = PARAM_RULES
     parts = []
     used: set = set()
     for dim, name in zip(spec.shape, spec.axes):
-        axis = _resolve_axis(mesh, PARAM_RULES.get(name))
+        axis = _resolve_axis(mesh, rules.get(name))
         if axis is not None and dim % _axis_size(mesh, axis) != 0:
             axis = None
         # one mesh axis per tensor: leftmost logical dim wins (e.g. stacked
@@ -177,13 +179,78 @@ def param_shardings(spec_tree, mesh: Mesh, fsdp: bool = False):
     return jax.tree.map(f, spec_tree, is_leaf=is_spec)
 
 
-def replicated(mesh: Mesh) -> NamedSharding:
-    return NamedSharding(mesh, P())
+# ---------------------------------------------------------------------------
+# Serving shardings (DESIGN.md §14)
+# ---------------------------------------------------------------------------
+#
+# Serving is pure data placement: params and the KV pool are device_put with
+# the trees below and GSPMD partitions the *unchanged* jitted entry points
+# (prefill / masked decode / splice / resume) — the traced programs are
+# byte-identical to the single-device ones, only the compiler-inserted
+# collectives differ.  No ShardCtx is set, so shard_act stays a no-op and
+# MoE expert parallelism falls out of the "experts" parameter axis alone.
+
+# TT cores are fully replicated when serving (the compressed object is
+# KB-scale by construction); training keeps the tt_m output-factor TP rule.
+SERVE_PARAM_RULES: dict[str, Any] = {**PARAM_RULES, "tt_m": None}
+
+# cache leaves carrying a KV-head axis at dim -2 in every pool layout:
+# dense/ring slots [layers, B, T, KV, hd] and paged arenas
+# [layers, num_blocks+1, block, KV, hd] — Megatron-style head partitioning.
+_KV_HEAD_LEAVES = frozenset({"k", "v", "xk", "xv"})
 
 
-def batch_sharding(mesh: Mesh, ndim: int, batch_divisible: bool = True
-                   ) -> NamedSharding:
-    """[B, ...] inputs: batch over (pod, data) when divisible."""
-    axes = _resolve_axis(mesh, ("pod", "data"))
-    return NamedSharding(
-        mesh, P(axes if batch_divisible else None, *([None] * (ndim - 1))))
+def serve_param_shardings(spec_tree, params, mesh: Mesh):
+    """NamedSharding tree for a *serving* parameter tree under
+    ``SERVE_PARAM_RULES`` (embeddings/LM head, fused head projections, MLP
+    ff and MoE expert stacks sharded on 'model'; TT cores, norms and
+    biases replicated).  Walks ``params`` (not the spec tree) so
+    checkpoint transforms survive: an int8-quantized tree keeps every
+    core's path/shape and its extra ``scales`` leaves — or any leaf whose
+    shape no longer matches its spec — fall back to replicated."""
+    ktr = jax.tree_util.keystr
+    flat, _ = jax.tree_util.tree_flatten_with_path(spec_tree, is_leaf=is_spec)
+    by_path = {ktr(p): s for p, s in flat}
+
+    def f(path, leaf):
+        s = by_path.get(ktr(path))
+        if s is None or tuple(s.shape) != tuple(leaf.shape):
+            return NamedSharding(mesh, P())
+        return NamedSharding(
+            mesh, param_pspec(s, mesh, rules=SERVE_PARAM_RULES))
+    return jax.tree_util.tree_map_with_path(f, params)
+
+
+def serve_cache_shardings(cache, mesh: Mesh, batch: int | None = None):
+    """NamedSharding tree for a scheduler pool cache (dense or paged).
+
+    Attention KV leaves are partitioned on the KV-head axis (dim -2 in
+    both the slot and arena layouts) when it divides the 'model' extent;
+    everything else — ``pos``, host-logical ``block_tables``, MLA latents
+    (shared across heads by design), SSM state/conv — is replicated.  The
+    same tree re-constrains the pool after resize/restore so the decode
+    executable always sees one stable input sharding.
+
+    ``batch`` (dense pools only — the scheduler passes ``num_slots``)
+    additionally partitions the slot axis (dim 1 of every ``[layers, B,
+    ...]`` leaf) over the 'data' mesh axis: each device owns the KV of
+    ``B / data`` slots and decode is batch-parallel — no per-layer
+    collectives, only the final logits gather.  Paged pools never pass
+    ``batch``: arena blocks are pooled across slots by the host-side
+    allocator, so the block axis has no slot alignment to exploit and is
+    partitioned on KV heads instead."""
+    msize = _axis_size(mesh, "model")
+    dsize = _axis_size(mesh, "data")
+
+    def f(path, leaf):
+        name = (path[-1].key if isinstance(path[-1], jax.tree_util.DictKey)
+                else None)
+        dims: list = [None] * leaf.ndim
+        if (batch is not None and dsize > 1 and leaf.ndim >= 2
+                and leaf.shape[1] == batch and batch % dsize == 0):
+            dims[1] = "data"
+        if (name in _KV_HEAD_LEAVES and leaf.ndim >= 2
+                and leaf.shape[-2] % msize == 0):
+            dims[-2] = "model"
+        return NamedSharding(mesh, P(*dims))
+    return jax.tree_util.tree_map_with_path(f, cache)

@@ -1,11 +1,12 @@
-"""Production mesh construction.
+"""Mesh construction — production dry-run shapes and the serving mesh.
 
-A function, not a module-level constant, so importing this module never
+Functions, not module-level constants, so importing this module never
 touches jax device state (the dry-run must set XLA_FLAGS first).
 """
 from __future__ import annotations
 
 import jax
+import numpy as np
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -16,7 +17,27 @@ def make_production_mesh(*, multi_pod: bool = False):
     return jax.make_mesh(shape, axes, axis_types=axis_types)
 
 
-def make_host_mesh():
-    """1-device mesh for CPU smoke runs (same axis names)."""
-    return jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+def make_serve_mesh(num_devices: int | None = None, *,
+                    data: int | None = None):
+    """Serving mesh over the first ``num_devices`` local devices with axes
+    ``("data", "model")``.  Default shape ``(1, n)`` — every device joins
+    the model axis (sharded embeddings/heads/experts and KV-head-
+    partitioned arenas, DESIGN.md §14).  ``data=d`` splits the devices
+    ``(d, n/d)`` instead: the data axis partitions decode *slots* (each
+    device owns the KV of its share of the batch — batch-parallel decode,
+    no per-layer collectives), composing with model-axis partitioning on
+    the rest.  Unlike the production dry-run meshes this may cover a
+    *subset* of visible devices, which is what the device-count scaling
+    sweep needs."""
+    devs = jax.devices()
+    n = len(devs) if num_devices is None else int(num_devices)
+    if n < 1 or n > len(devs):
+        raise ValueError(
+            f"serve mesh wants {n} devices but {len(devs)} are visible — "
+            f"on CPU launch with "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count={n}")
+    d = 1 if data is None else int(data)
+    if d < 1 or n % d != 0:
+        raise ValueError(f"data axis {d} must divide the mesh size {n}")
+    return jax.sharding.Mesh(np.asarray(devs[:n]).reshape(d, n // d),
+                             ("data", "model"))

@@ -75,7 +75,7 @@ def _make_sched(model, params, args, cache_len):
                      cache_len=cache_len, eos_id=args.eos_id,
                      key=jax.random.PRNGKey(args.seed + 1),
                      paged=args.paged, block_size=args.block_size,
-                     num_blocks=args.num_blocks)
+                     num_blocks=args.num_blocks, mesh=args.mesh_obj)
 
 
 def _print_pool_stats(sched) -> None:
@@ -504,6 +504,13 @@ def main(argv=None) -> dict:
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--top-k", type=int, default=0,
                     help="per-request top-k sampling filter (0 = off)")
+    ap.add_argument("--mesh", type=int, default=None,
+                    help="serve over an N-device (1, N) mesh (DESIGN.md "
+                         "§14): params/KV pool sharded by data placement, "
+                         "decode stays one collective-aware executable.  "
+                         "On CPU the devices must exist before jax starts "
+                         "— launch with XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=N")
     # continuous-batching simulation
     ap.add_argument("--arrival-rate", type=float, default=None,
                     help="Poisson arrival rate (req/s); enables simulation")
@@ -566,6 +573,20 @@ def main(argv=None) -> dict:
         args.slots = args.batch
     if args.restore and not args.durable:
         ap.error("--restore requires --durable DIR")
+    args.mesh_obj = None
+    if args.mesh is not None:
+        scheduler_mode = (args.arrival_rate is not None or args.restore
+                          or args.fault_smoke or args.prefix_smoke
+                          or args.durability_smoke)
+        if not scheduler_mode:
+            ap.error("--mesh applies to scheduler modes only (use "
+                     "--arrival-rate / --restore / the scheduler smokes); "
+                     "the fixed-batch and --first-token paths run "
+                     "single-device")
+        from .mesh import make_serve_mesh
+        args.mesh_obj = make_serve_mesh(args.mesh)
+        print(f"serving over mesh {dict(args.mesh_obj.shape)} "
+              f"({len(args.mesh_obj.devices.ravel())} devices)")
 
     cache_dir = enable_compile_cache(args.compile_cache)
     args.compile_cache = cache_dir        # resolves $REPRO_COMPILE_CACHE

@@ -441,12 +441,24 @@ class Model:
                             self.decode_step(params, cache, token),
                             donate_argnums=(1,)))
 
-    def jitted_decode_step_masked(self):
+    def jitted_decode_step_masked(self, mesh=None):
         """jit(decode_step) with a per-slot ``active`` mask (vector-pos
-        slot-pool cache), cache donated."""
-        return self._jit_get(
-            "decode_step_masked",
-            lambda: jax.jit(self.decode_step, donate_argnums=(1,)))
+        slot-pool cache), cache donated.
+
+        With a ``mesh`` the logits output is pinned replicated while the
+        cache stays compiler-placed: the final all-gather of the
+        tensor-parallel logits happens *inside* this executable (one step
+        = one program, collectives compiled in), and the downstream pick
+        never sees a vocab-sharded operand (a sharded top-k would compile
+        into a distributed sort — tens of rendezvous per step)."""
+        def build():
+            out_shardings = None
+            if mesh is not None:
+                from jax.sharding import NamedSharding, PartitionSpec
+                out_shardings = (NamedSharding(mesh, PartitionSpec()), None)
+            return jax.jit(self.decode_step, donate_argnums=(1,),
+                           out_shardings=out_shardings)
+        return self._jit_get(("decode_step_masked", mesh), build)
 
     def jitted_splice(self):
         """jit(splice_cache) with the pool cache donated: admission writes

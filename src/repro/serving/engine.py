@@ -33,8 +33,8 @@ def generate(model: Model, params, batch: dict, steps: int,
              temperature: float = 0.0, key: jax.Array | None = None,
              top_k: int = 0, paged: bool = False, block_size: int = 64,
              num_blocks: int | None = None, prefix_cache: bool = True,
-             priority: int = 0, deadline_s: float | None = None
-             ) -> GenerateResult:
+             priority: int = 0, deadline_s: float | None = None,
+             mesh=None) -> GenerateResult:
     """Decode ``steps`` tokens for every row of ``batch`` (no EOS: fixed
     budget, so the result is rectangular).  ``paged=True`` serves through
     the block-paged KV pool (DESIGN.md §7) — output is token-identical to
@@ -56,7 +56,8 @@ def generate(model: Model, params, batch: dict, steps: int,
         cache_len = S + steps
     sched = Scheduler(model, params, num_slots=B, cache_len=cache_len,
                       key=key, paged=paged, block_size=block_size,
-                      num_blocks=num_blocks, prefix_cache=prefix_cache)
+                      num_blocks=num_blocks, prefix_cache=prefix_cache,
+                      mesh=mesh)
     for req in make_requests(batch, max_new_tokens=steps, key=key,
                              temperature=temperature, top_k=top_k,
                              priority=priority, deadline_s=deadline_s):

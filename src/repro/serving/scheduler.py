@@ -66,6 +66,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.distributed import sharding as shd
 from repro.models.model import Model
 from repro.models.transformer import block_cache_kinds
 from .paging import BlockAllocator, chain_hashes, logical_blocks
@@ -150,10 +151,19 @@ class Scheduler:
                  paged: bool = False, block_size: int = 64,
                  num_blocks: int | None = None, prefix_cache: bool = True,
                  bucket_prompts: bool = True, preempt: bool = True,
-                 clock=None):
+                 clock=None, mesh=None):
         if num_slots < 1:
             raise ValueError("num_slots must be >= 1")
         self.model = model
+        self.mesh = mesh
+        if mesh is not None:
+            # one placement decision, made here: params land sharded per
+            # DESIGN.md §14 and every jitted entry point (prefill, masked
+            # decode, splice, resume) is partitioned by GSPMD from its
+            # operands — the traced programs are unchanged, so one decode
+            # step stays one executable, collectives compiled in.
+            params = jax.device_put(params, shd.serve_param_shardings(
+                model.param_specs(), params, mesh))
         self.params = params
         self.preempt = preempt
         # injectable clock (deadlines, latency stamps): tests and the
@@ -517,6 +527,21 @@ class Scheduler:
 
         return jax.jit(pick)
 
+    def _gather_logits(self, logits: jax.Array) -> jax.Array:
+        """Collapse tensor-parallel logits to replicated before the pick.
+
+        With a sharded LM head the decode step emits logits partitioned on
+        the vocab axis; feeding them to ``_pick`` as-is would compile the
+        top-k sort into a distributed sort (~40 collectives per step on a
+        2-device mesh, measured — the rendezvous cost dwarfs the math at
+        decode shapes).  One explicit all-gather of [B, V] instead keeps
+        the pick executable collective-free and mesh-agnostic."""
+        if self.mesh is None:
+            return logits
+        return jax.device_put(
+            logits, jax.sharding.NamedSharding(
+                self.mesh, jax.sharding.PartitionSpec()))
+
     def _req_key(self, req: Request) -> jax.Array | None:
         if req.temperature <= 0.0:
             return None                   # greedy: no randomness consumed
@@ -539,7 +564,7 @@ class Scheduler:
         else:
             keys = jnp.zeros((1, 2), jnp.uint32)
         tok, lp = self._pick(
-            logits_row[None], keys,
+            self._gather_logits(logits_row[None]), keys,
             jnp.asarray([slot.temperature], jnp.float32),
             jnp.asarray([slot.top_k], jnp.int32))
         return int(tok[0]), float(lp[0])
@@ -582,6 +607,20 @@ class Scheduler:
                 g[f"b{i}"] = b
             cache[f"g{gi}"] = g
         self.cache = cache
+        self._constrain_pool()
+
+    def _constrain_pool(self) -> None:
+        """Re-assert the pool's device placement (no-op without a mesh, or
+        for leaves already laid out correctly).  Called wherever the pool
+        is (re)built from host data or eager reshapes — pool build, resize
+        remaps, snapshot restore — so the decode executable always sees
+        the same input sharding and never recompiles mid-stream."""
+        if self.mesh is not None and self.cache is not None:
+            self.cache = jax.device_put(
+                self.cache,
+                shd.serve_cache_shardings(
+                    self.cache, self.mesh,
+                    batch=None if self.paged else self.num_slots))
 
     # -------------------------------------------------------------- admission
     def _try_admit(self, q: _Queued, slot_idx: int,
@@ -801,6 +840,7 @@ class Scheduler:
         if self.cache is not None:
             self.cache = self._reshape_slots(self.cache, n)
         self.num_slots = n
+        self._constrain_pool()
 
     def _apply_slot_shrink(self) -> bool:
         """Land a pending slot shrink once the tail slots have drained."""
@@ -816,6 +856,7 @@ class Scheduler:
         if self.cache is not None:
             self.cache = self._reshape_slots(self.cache, t)
         self.num_slots = t
+        self._constrain_pool()
         self._target_slots = None
         return True
 
@@ -889,6 +930,7 @@ class Scheduler:
                 g[f"b{i}"] = b
             cache[f"g{gi}"] = g
         self.cache = cache
+        self._constrain_pool()
 
     # --------------------------------------------------------------- snapshot
     SNAPSHOT_VERSION = 1
@@ -969,11 +1011,17 @@ class Scheduler:
 
     @classmethod
     def from_snapshot(cls, model: Model, params, snap: dict, *,
-                      clock=None, rebase_clock: bool = False) -> "Scheduler":
+                      clock=None, rebase_clock: bool = False,
+                      mesh=None) -> "Scheduler":
         """Rebuild a scheduler mid-stream from :meth:`snapshot`.  Pass
         ``rebase_clock=True`` when restoring in a *new process* (the
         monotonic clock rebased): pending submit times and deadlines are
-        shifted so in-flight TTLs keep their remaining budget."""
+        shifted so in-flight TTLs keep their remaining budget.
+
+        Snapshots are mesh-agnostic (host-side numpy, gathered at capture
+        time): pass ``mesh`` to restore onto any device topology — the
+        pool is re-partitioned per DESIGN.md §14 on load, so a snapshot
+        taken on one device restores onto four and vice versa."""
         if int(snap.get("version", -1)) != cls.SNAPSHOT_VERSION:
             raise ValueError(
                 f"snapshot version {snap.get('version')!r} != "
@@ -991,7 +1039,7 @@ class Scheduler:
                         else int(cfg["num_blocks"])),
             prefix_cache=bool(cfg["prefix_cache"]),
             bucket_prompts=bool(cfg["bucket_prompts"]),
-            preempt=bool(cfg["preempt"]), clock=clock)
+            preempt=bool(cfg["preempt"]), clock=clock, mesh=mesh)
         shift = (sched._now() - float(snap["now"])) if rebase_clock else 0.0
 
         def t_of(v):
@@ -1055,6 +1103,7 @@ class Scheduler:
                                else int(snap["target_slots"]))
         if snap["cache"] is not None:
             sched.cache = jax.tree.map(jnp.asarray, snap["cache"])
+            sched._constrain_pool()
         if sched.paged:
             sched.allocator = BlockAllocator.from_state(snap["allocator"])
             sched._slot_blocks = [
@@ -1079,7 +1128,7 @@ class Scheduler:
                 active[i] = True
                 temps[i] = s.temperature
                 topk[i] = s.top_k
-        logits, self.cache = self.model.jitted_decode_step_masked()(
+        logits, self.cache = self.model.jitted_decode_step_masked(self.mesh)(
             self.params, self.cache, jnp.asarray(toks), jnp.asarray(active))
         if any(s is not None and s.temperature > 0.0 for s in self.slots):
             keys = jnp.stack([
@@ -1088,8 +1137,8 @@ class Scheduler:
                 for s in self.slots])
         else:                             # all greedy: no splits consumed
             keys = jnp.zeros((B, 2), jnp.uint32)
-        tok, lp = self._pick(logits[:, 0, :], keys, jnp.asarray(temps),
-                             jnp.asarray(topk))
+        tok, lp = self._pick(self._gather_logits(logits[:, 0, :]), keys,
+                             jnp.asarray(temps), jnp.asarray(topk))
         tok, lp = np.asarray(tok), np.asarray(lp)
         self.steps_run += 1
         for i, s in enumerate(self.slots):

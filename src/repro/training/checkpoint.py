@@ -51,8 +51,29 @@ def _flatten_structure(tree) -> list[str]:
     ]
 
 
-def save(path: str, tree, step: int, extra: dict | None = None) -> str:
-    """Atomic checksummed save.  Returns the final checkpoint directory."""
+def save(path: str, tree, step: int, extra: dict | None = None,
+         quantize_tt: bool = False) -> str:
+    """Atomic checksummed save.  Returns the final checkpoint directory.
+
+    ``quantize_tt=True`` quantizes every TT core bundle on the way out
+    (int8 cores + per-layer/per-expert fp32 scales, ``core.quant`` via
+    ``models.layers.quantize_tt_params``) — the serving-ready checkpoint
+    transform of DESIGN.md §8 applied at save time instead of load time,
+    so the int8 artifact on disk is bit-identical to
+    ``Model.quantize_params`` of the fp32 tree and restores into the
+    int8-resident kernel path with no further transform.  The manifest
+    fingerprint is taken over the *transformed* tree (int8 shapes +
+    ``scales`` leaves) and ``extra["quantized_tt"]`` records the
+    transform; restore with a quantized template.  Idempotent: a tree
+    whose cores are already int8 is written unchanged.  For serving
+    checkpoints (a params tree, or ``{"params": ...}``): optimizer
+    moments mirror the params structure, so a full train state would get
+    its ``tt`` moment bundles quantized too — save those without the
+    flag."""
+    if quantize_tt:
+        from repro.models.layers import quantize_tt_params
+        tree = quantize_tt_params(tree)
+        extra = dict(extra or {}, quantized_tt=True)
     final = os.path.join(path, f"step_{step:08d}")
     tmp = final + f".tmp.{os.getpid()}"
     if os.path.exists(tmp):

@@ -15,6 +15,13 @@ import pytest  # noqa: E402
 jax.config.update("jax_enable_x64", False)
 
 
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers",
+        "slow: multi-minute subprocess tests (forced multi-device meshes, "
+        "full decode loops); run in tier-1, deselectable with -m 'not slow'")
+
+
 @pytest.fixture(autouse=True)
 def _fresh_tt_plan_memo():
     """The process-wide TT plan memo (kernels.plan) caches resolutions by

@@ -181,3 +181,43 @@ def test_checkpoint_includes_data_iterator_state(tmp_path):
         next(it_ref)
     np.testing.assert_array_equal(np.asarray(next(it2)["tokens"]),
                                   np.asarray(next(it_ref)["tokens"]))
+
+
+def test_quantize_on_save_roundtrip_bit_exact(tmp_path):
+    """``save(..., quantize_tt=True)`` writes the int8 serving transform:
+    the restored tree is bit-identical to ``Model.quantize_params`` of
+    the fp32 tree (codes, per-layer scales and untouched dense leaves),
+    and re-saving the already-quantized tree is a no-op transform."""
+    from repro.configs import get_config, build
+    from repro.configs.base import TTConfig
+
+    cfg = get_config("deepseek_7b", "smoke",
+                     tt=TTConfig(enabled=True, families=("ffn", "attn"),
+                                 rank=4, min_factor=2))
+    model = build(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    ref = model.quantize_params(params)
+
+    d = ckpt.save(str(tmp_path), params, step=1, quantize_tt=True)
+    with open(os.path.join(d, "manifest.json")) as f:
+        manifest = json.load(f)
+    assert manifest["extra"]["quantized_tt"] is True
+    # the artifact's structure is the *quantized* structure
+    assert manifest["fingerprint"] == ckpt.tree_fingerprint(ref)
+
+    restored, _ = ckpt.restore(str(tmp_path), ref)
+    flat_ref = jax.tree_util.tree_flatten_with_path(ref)[0]
+    flat_got = jax.tree_util.tree_flatten_with_path(restored)[0]
+    assert len(flat_ref) == len(flat_got) > len(jax.tree.leaves(params))
+    for (pa, a), (pb, b) in zip(flat_ref, flat_got):
+        assert pa == pb
+        assert a.dtype == b.dtype
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    # idempotent: saving the int8 tree again with the flag changes nothing
+    d2 = ckpt.save(str(tmp_path), restored, step=2, quantize_tt=True)
+    with open(os.path.join(d2, "manifest.json")) as f:
+        assert json.load(f)["fingerprint"] == ckpt.tree_fingerprint(ref)
+    again, _ = ckpt.restore(str(tmp_path), ref, step=2)
+    for a, b in zip(jax.tree.leaves(ref), jax.tree.leaves(again)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
