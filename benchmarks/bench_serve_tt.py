@@ -26,6 +26,11 @@ re-jit NOTHING (asserted via the cache entry count) and be measurably
 faster from process start to first token — the restart cost a crash-safe
 deployment actually pays.
 
+The long-prompt-adversary workload (DESIGN.md §15) queues short requests
+behind one multi-thousand-token prompt and reports their p50/p95
+time-to-first-token under monolithic vs chunked admission — the measured
+p95 TTFT win of folding prefill chunks into the decode step.
+
 The mesh-scaling sweep (DESIGN.md §14) serves the TT model over 1/2/4
 forced host devices at a fixed slots-per-device, one subprocess per
 measurement, asserting zero TT plan re-resolutions and paged≡dense token
@@ -403,6 +408,92 @@ def _mesh_scaling(quick: bool) -> dict:
                      "tokens_identical_across_device_counts": True}}
 
 
+def _pct(xs: list[float], p: float) -> float:
+    xs = sorted(xs)
+    if len(xs) == 1:
+        return xs[0]
+    k = (len(xs) - 1) * p / 100.0
+    lo = int(k)
+    hi = min(lo + 1, len(xs) - 1)
+    return xs[lo] + (xs[hi] - xs[lo]) * (k - lo)
+
+
+def _ttft_adversary(quick: bool) -> dict:
+    """Long-prompt adversary (DESIGN.md §15): one multi-thousand-token
+    prompt lands in a pool of short decoders, with more short requests
+    queued behind it.  Monolithic admission prefills the whole adversary
+    inside one scheduler step, so every short request behind it inherits
+    that full prefill in its time-to-first-token; chunked admission slices
+    the adversary into ``chunk_size`` pieces metered by ``prefill_budget``
+    and the shorts' first tokens come out after their own (single) chunk.
+    Reports p50/p95 TTFT of the trailing shorts, both modes, post-compile
+    (an identical throwaway pass warms every jit entry first)."""
+    long_len = 1024 if quick else 4096
+    chunk, budget = 64, 128            # 2 lanes: adversary + one short
+    n_short, S_short, steps = 4, 16, 24
+    cfg = get_config("deepseek_7b", "smoke")
+    model = build(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    cache_len = long_len + steps + 2
+    slots = 2 + 1 + n_short            # decoders + adversary + shorts
+
+    def workload(seed0):
+        mk = lambda n, s: concrete_batch(cfg, 1, n, seed=s)["tokens"]
+        return (
+            [Request(uid=seed0 + i, inputs={"tokens": mk(S_short, seed0 + i)},
+                     max_new_tokens=steps) for i in range(2)],
+            Request(uid=seed0 + 50, inputs={"tokens": mk(long_len, seed0)},
+                    max_new_tokens=steps),
+            [Request(uid=seed0 + 100 + i,
+                     inputs={"tokens": mk(S_short, seed0 + 100 + i)},
+                     max_new_tokens=steps) for i in range(n_short)])
+
+    def run_mode(chunked, seed0):
+        kw = (dict(chunk_prefill=True, chunk_size=chunk,
+                   prefill_budget=budget) if chunked else {})
+        sched = Scheduler(model, params, num_slots=slots,
+                          cache_len=cache_len, paged=True,
+                          block_size=BLOCK, **kw)
+        decoders, adversary, shorts = workload(seed0)
+        for r in decoders:
+            sched.submit(r)
+        sched.step()                   # decoders admitted and decoding
+        sched.step()
+        sched.submit(adversary)        # FIFO: the adversary ranks first,
+        for r in shorts:               # the shorts queue behind it
+            sched.submit(r)
+        finished = sched.run()
+        ttfts = [finished[r.uid].first_token_time
+                 - finished[r.uid].submit_time for r in shorts]
+        return ttfts, sched.stats()
+
+    out = {}
+    for mode, chunked in (("monolithic", False), ("chunked", True)):
+        run_mode(chunked, seed0=1000)            # warm every jit entry
+        ttfts, st = run_mode(chunked, seed0=2000)
+        out[mode] = {"ttft_p50_s": _pct(ttfts, 50),
+                     "ttft_p95_s": _pct(ttfts, 95),
+                     "ttft_max_s": max(ttfts)}
+        if chunked:
+            out[mode]["prefill_chunks"] = st["prefill_chunks"]
+    red = out["monolithic"]["ttft_p95_s"] / out["chunked"]["ttft_p95_s"]
+    if red <= 1.0:
+        raise AssertionError(
+            f"chunked prefill did not improve p95 TTFT under the "
+            f"long-prompt adversary: {out}")
+    out.update({
+        "arch": "deepseek_7b", "long_prompt": long_len,
+        "n_short": n_short, "short_prompt": S_short, "steps": steps,
+        "chunk_size": chunk, "prefill_budget": budget, "block": BLOCK,
+        "p95_ttft_reduction": round(red, 2)})
+    print(f"\nlong-prompt adversary ({long_len}-token prompt, {n_short} "
+          f"trailing shorts): p95 TTFT "
+          f"{out['monolithic']['ttft_p95_s']*1e3:.1f}ms monolithic → "
+          f"{out['chunked']['ttft_p95_s']*1e3:.1f}ms chunked "
+          f"({red:.2f}x)")
+    return out
+
+
 def run(quick: bool = False) -> None:
     S, steps = 16, (8 if quick else 16)
     slot_counts = [2] if quick else [1, 2, 4, 8]
@@ -463,6 +554,8 @@ def run(quick: bool = False) -> None:
           f"{px['on']['prefill_tokens_skipped']} prefill tokens skipped")
     # cold vs warm process start→first token (persistent compile cache)
     cold_start = _cold_start()
+    # chunked-vs-monolithic TTFT under a long-prompt adversary (§15)
+    ttft_adversary = _ttft_adversary(quick)
     # device-count scaling over forced host meshes (DESIGN.md §14)
     mesh_scaling = _mesh_scaling(quick)
 
@@ -473,6 +566,7 @@ def run(quick: bool = False) -> None:
          "prefix_workload": {"arch": px_arch, "prefix_len": px_len,
                              "block": BLOCK, **px},
          "cold_start": cold_start,
+         "ttft_adversary": ttft_adversary,
          "mesh_scaling": mesh_scaling}, indent=1))
     print(f"wrote {out}")
 

@@ -19,6 +19,18 @@ the prefix-cache hit rate.
       --arrival-rate 4 --max-requests 16 --slots 4 --prompt-len 16 \
       --steps 8 --paged
 
+Chunked prefill (--chunk-prefill, DESIGN.md §15): prompts stream into the
+pool ``--chunk-size`` tokens at a time *inside* the fused decode step —
+decoding requests keep emitting tokens while a long prompt prefills, so
+p95 TTFT stops being hostage to the longest prompt in the queue.
+``--prefill-budget`` caps prefill tokens per step (the prefill-vs-decode
+SLO knob).  Output is token-identical to monolithic prefill.
+
+Streaming serving (--serve / --serve-smoke, DESIGN.md §15): an HTTP/SSE
+front-end (stdlib-only) over the async StreamEngine — POST /generate
+streams per-token events, GET /stream/<uid>?from=N resumes a dropped
+stream (journal-aware with --durable/--restore), POST /shutdown drains.
+
 Prefix-reuse smoke (--prefix-smoke): two requests sharing a long prompt
 prefix through the paged scheduler; asserts the second request shares >= 1
 resident block and skips the covered prefill compute.
@@ -75,7 +87,10 @@ def _make_sched(model, params, args, cache_len):
                      cache_len=cache_len, eos_id=args.eos_id,
                      key=jax.random.PRNGKey(args.seed + 1),
                      paged=args.paged, block_size=args.block_size,
-                     num_blocks=args.num_blocks, mesh=args.mesh_obj)
+                     num_blocks=args.num_blocks, mesh=args.mesh_obj,
+                     chunk_prefill=args.chunk_prefill,
+                     chunk_size=args.chunk_size,
+                     prefill_budget=args.prefill_budget)
 
 
 def _print_pool_stats(sched) -> None:
@@ -176,17 +191,35 @@ def simulate(model, params, args) -> dict:
     finished = list(sched.finished)
 
     lats = [f.finish_time - f.submit_time for f in finished]
+    # TTFT (submit → first token: queueing + prefill) and inter-token
+    # latency (per-token decode cadence after the first) are separate
+    # SLOs — chunked prefill trades the one against the other, so they
+    # are reported apart (ISSUE 10 satellite)
+    ttfts = [f.first_token_time - f.submit_time for f in finished
+             if f.first_token_time is not None]
+    itls = [(f.finish_time - f.first_token_time) / (len(f.tokens) - 1)
+            for f in finished
+            if f.first_token_time is not None and len(f.tokens) > 1]
     tok_s = sched.tokens_out / wall if wall > 0 else float("nan")
     p50, p95 = _percentile(lats, 50), _percentile(lats, 95)
+    ttft50, ttft95 = _percentile(ttfts, 50), _percentile(ttfts, 95)
+    itl50, itl95 = _percentile(itls, 50), _percentile(itls, 95)
     partial = " (PARTIAL — interrupted)" if interrupted else ""
+    chunked = (f" chunk={sched.chunk_size}x{sched.chunk_lanes}"
+               if args.chunk_prefill else "")
     print(f"arch={model.cfg.name} slots={args.slots} "
           f"arrival_rate={args.arrival_rate}/s requests={len(finished)} "
           f"prompt={args.prompt_len} max_new={steps} "
-          f"pool={'paged' if args.paged else 'dense'}{partial}")
+          f"pool={'paged' if args.paged else 'dense'}{chunked}{partial}")
     print(f"compile (warm-up request): {compile_s:.2f}s — excluded below")
     print(f"steady-state: {sched.tokens_out} tokens in {wall:.2f}s "
           f"({tok_s:.1f} tok/s), decode steps={sched.steps_run}")
     print(f"per-request latency: p50={p50*1e3:.1f}ms p95={p95*1e3:.1f}ms")
+    print(f"ttft: p50={ttft50*1e3:.1f}ms p95={ttft95*1e3:.1f}ms | "
+          f"inter-token: p50={itl50*1e3:.1f}ms p95={itl95*1e3:.1f}ms")
+    if args.chunk_prefill:
+        print(f"prefill chunks executed: {sched.prefill_chunks} "
+              f"(budget {sched.prefill_budget} tok/step)")
     _print_pool_stats(sched)
     if interrupted and sched.paged and not preserved:
         sched.allocator.assert_quiescent()  # interrupt must not leak blocks
@@ -198,7 +231,9 @@ def simulate(model, params, args) -> dict:
             f"{replans} TT plan resolutions during the steady-state run — "
             "serving must execute build-time plans only")
     return {"finished": finished, "tok_per_s": tok_s, "p50_s": p50,
-            "p95_s": p95, "compile_s": compile_s, "replans": replans,
+            "p95_s": p95, "ttft_p50_s": ttft50, "ttft_p95_s": ttft95,
+            "itl_p50_s": itl50, "itl_p95_s": itl95,
+            "compile_s": compile_s, "replans": replans,
             "interrupted": interrupted}
 
 
@@ -285,7 +320,9 @@ def fault_smoke(model, params, args) -> dict:
             deadline_s=3.0 if uid == 0 else None))
     kw = dict(num_slots=args.slots, cache_len=cache_len, eos_id=args.eos_id,
               key=key, paged=args.paged, block_size=args.block_size,
-              num_blocks=args.num_blocks)
+              num_blocks=args.num_blocks,
+              chunk_prefill=args.chunk_prefill, chunk_size=args.chunk_size,
+              prefill_budget=args.prefill_budget)
     # Poisson arrivals in scheduler steps; the last (high-priority, late)
     # arrival lands mid-stream so the preemption path is exercised too
     arrivals = np.cumsum(rng.poisson(1.0, size=len(reqs))).tolist()
@@ -373,7 +410,9 @@ def durability_smoke(model, params, args) -> dict:
                             key=jax.random.fold_in(key, uid)))
     kw = dict(num_slots=args.slots, cache_len=cache_len, eos_id=args.eos_id,
               key=key, paged=args.paged, block_size=args.block_size,
-              num_blocks=args.num_blocks)
+              num_blocks=args.num_blocks,
+              chunk_prefill=args.chunk_prefill, chunk_size=args.chunk_size,
+              prefill_budget=args.prefill_budget)
     plan = FaultPlan.random(args.seed, horizon=max(4, steps),
                             n_alloc_fail=0, n_hold=0, n_cancel=0,
                             with_restart=False, with_kill=True)
@@ -443,6 +482,156 @@ def durability_smoke(model, params, args) -> dict:
     print("durability smoke OK")
     return {"kills": rep.kills + rep2.kills, "corruptions": corruptions,
             "survivors": len(rep.survivors)}
+
+
+def serve_mode(model, params, args) -> dict:
+    """HTTP/SSE serving (DESIGN.md §15): a StreamEngine step loop behind
+    the stdlib SSE front-end.  ``--durable DIR`` journals every
+    submit/retire (``--restore`` recovers after a crash, with in-flight
+    token streams replayable through GET /stream/<uid>?from=N — the
+    journal-aware client reconnect)."""
+    from repro.serving.engine import StreamEngine
+    from repro.serving.server import make_server
+
+    cache_len = args.prompt_len + args.steps
+    sched = _make_sched(model, params, args, cache_len)
+    if args.durable:
+        from repro.serving.durable import DurableScheduler
+        if args.restore:
+            sched = DurableScheduler.recover(
+                args.durable, model, params, rebase_clock=True,
+                snapshot_every=args.snapshot_every, log=print)
+        else:
+            sched = DurableScheduler(sched, args.durable,
+                                     snapshot_every=args.snapshot_every)
+    eng = StreamEngine(sched)
+    srv = make_server(eng, host=args.host, port=args.port, quiet=False)
+    host, port = srv.server_address[:2]
+    print(f"serving on http://{host}:{port} — POST /generate, "
+          f"GET /stream/<uid>?from=N, GET /stats, POST /shutdown "
+          f"(cache_len={cache_len}, "
+          f"chunked={'on' if args.chunk_prefill else 'off'})")
+    try:
+        srv.serve_forever()
+        print("shutdown requested — draining")
+    except KeyboardInterrupt:
+        print("\ninterrupted — draining")
+    finally:
+        srv.server_close()
+        eng.close()
+    st = eng.stats()
+    print(f"served {st['requests_done']} requests, "
+          f"{st['tokens_out']} tokens")
+    return st
+
+
+def serve_smoke(model, params, args) -> dict:
+    """CI streaming smoke: an in-process SSE server, two *overlapping*
+    streaming requests (per-token events must arrive in order and
+    interleave across requests), a mid-stream reconnect replay from an
+    arbitrary index, and a graceful POST /shutdown."""
+    import http.client
+    import threading
+
+    from repro.serving.engine import StreamEngine
+    from repro.serving.server import make_server
+
+    steps = args.steps
+    cache_len = args.prompt_len + steps
+    sched = _make_sched(model, params, args, cache_len)
+    eng = StreamEngine(sched)
+    plans0 = ttplan.plan_resolutions()    # everything resolved at build
+    srv = make_server(eng)
+    port = srv.server_address[1]
+    th = threading.Thread(target=srv.serve_forever, daemon=True)
+    th.start()
+
+    def events(resp):
+        buf = b""
+        while True:
+            chunk = resp.read1(4096)
+            if not chunk:
+                return
+            buf += chunk
+            while b"\n\n" in buf:
+                raw, buf = buf.split(b"\n\n", 1)
+                for line in raw.split(b"\n"):
+                    if line.startswith(b"data: "):
+                        yield json.loads(line[6:])
+
+    def client(uid, toks, out):
+        c = http.client.HTTPConnection("127.0.0.1", port)
+        c.request("POST", "/generate",
+                  json.dumps({"tokens": toks, "max_new_tokens": steps,
+                              "uid": uid}),
+                  {"Content-Type": "application/json"})
+        r = c.getresponse()
+        assert r.status == 200, r.status
+        for ev in events(r):
+            out.append((time.perf_counter(), ev))
+            if "done" in ev:
+                break
+        c.close()
+
+    prompts = [concrete_batch(model.cfg, 1, args.prompt_len,
+                              seed=args.seed + i)["tokens"][0].tolist()
+               for i in range(2)]
+    outs = [[], []]
+    threads = [threading.Thread(target=client, args=(i, prompts[i],
+                                                     outs[i]))
+               for i in range(2)]
+    threads[0].start()
+    time.sleep(0.02)
+    threads[1].start()
+    for t in threads:
+        t.join(timeout=300)
+        assert not t.is_alive(), "streaming client timed out"
+    for uid, out in enumerate(outs):
+        assert out[-1][1].get("done") == "length", out[-1]
+        idx = [ev["i"] for _, ev in out[:-1]]
+        assert idx == list(range(steps)), \
+            f"uid {uid}: events out of order: {idx}"
+    # the two token streams must overlap in wall time (continuous
+    # batching, not serial): each starts before the other finishes
+    starts = [out[0][0] for out in outs]
+    ends = [out[-1][0] for out in outs]
+    assert max(starts) < min(ends), "request streams did not overlap"
+    print(f"overlapping streams OK: 2 x {steps} ordered per-token events")
+
+    # reconnect mid-stream: replay uid 0 from an arbitrary index
+    frm = max(1, steps // 2)
+    c = http.client.HTTPConnection("127.0.0.1", port)
+    c.request("GET", f"/stream/0?from={frm}")
+    replay = []
+    for ev in events(c.getresponse()):
+        replay.append(ev)
+        if "done" in ev:
+            break
+    c.close()
+    want = [ev["token"] for _, ev in outs[0][frm:-1]]
+    got = [ev["token"] for ev in replay[:-1]]
+    assert got == want and replay[-1]["done"] == "length", (replay, want)
+    print(f"reconnect OK: replayed {len(got)} events from index {frm}")
+
+    c = http.client.HTTPConnection("127.0.0.1", port)
+    c.request("GET", "/stats")
+    st = json.loads(c.getresponse().read())
+    c.close()
+    c = http.client.HTTPConnection("127.0.0.1", port)
+    c.request("POST", "/shutdown", "{}")
+    assert json.loads(c.getresponse().read())["ok"]
+    c.close()
+    th.join(timeout=30)
+    assert not th.is_alive(), "server did not shut down"
+    eng.close()
+    replans = ttplan.plan_resolutions() - plans0
+    print(f"graceful shutdown OK; plan resolutions during serving: "
+          f"{replans}")
+    if args.assert_no_replan and replans != 0:
+        raise AssertionError(
+            f"{replans} TT plan resolutions during streaming serving")
+    print("streaming smoke OK")
+    return {"requests": 2, "steps": steps, "replans": replans, **st}
 
 
 def fixed(model, params, args) -> dict:
@@ -527,6 +716,35 @@ def main(argv=None) -> dict:
     ap.add_argument("--num-blocks", type=int, default=None,
                     help="arena blocks (default: slots x ceil(cache/block) "
                          "— admission is by free blocks, not slots)")
+    # chunked prefill fused into the decode step (DESIGN.md §15)
+    ap.add_argument("--chunk-prefill", action="store_true",
+                    help="prefill prompts in fixed-size chunks INSIDE the "
+                         "fused decode step (one traced program): decoding "
+                         "requests keep emitting tokens while a long "
+                         "prompt streams in, cutting p95 TTFT under mixed "
+                         "workloads")
+    ap.add_argument("--chunk-size", type=int, default=64,
+                    help="prompt tokens per prefill chunk "
+                         "(--chunk-prefill)")
+    ap.add_argument("--prefill-budget", type=int, default=None,
+                    help="max prefill tokens per step; runs "
+                         "floor(budget/chunk_size) chunk lanes per step "
+                         "(default: one lane).  The prefill-vs-decode "
+                         "SLO knob: higher = faster admission TTFT, "
+                         "more work per step")
+    # HTTP/SSE serving (DESIGN.md §15)
+    ap.add_argument("--serve", action="store_true",
+                    help="start the HTTP/SSE streaming server "
+                         "(serving/server.py) over a StreamEngine; "
+                         "stop with POST /shutdown or Ctrl-C")
+    ap.add_argument("--host", default="127.0.0.1")
+    ap.add_argument("--port", type=int, default=8763,
+                    help="--serve port (0 = ephemeral)")
+    ap.add_argument("--serve-smoke", action="store_true",
+                    help="CI smoke: in-process SSE server, two "
+                         "overlapping streaming requests with ordered "
+                         "per-token events, a mid-stream reconnect "
+                         "replay and a graceful shutdown")
     ap.add_argument("--prefix-smoke", action="store_true",
                     help="CI smoke: two requests sharing a --prefix-len "
                          "token prefix must share blocks and skip the "
@@ -577,7 +795,8 @@ def main(argv=None) -> dict:
     if args.mesh is not None:
         scheduler_mode = (args.arrival_rate is not None or args.restore
                           or args.fault_smoke or args.prefix_smoke
-                          or args.durability_smoke)
+                          or args.durability_smoke or args.serve
+                          or args.serve_smoke)
         if not scheduler_mode:
             ap.error("--mesh applies to scheduler modes only (use "
                      "--arrival-rate / --restore / the scheduler smokes); "
@@ -615,6 +834,10 @@ def main(argv=None) -> dict:
             out = durability_smoke(model, params, args)
         elif args.first_token:
             out = first_token(model, params, args)
+        elif args.serve_smoke:
+            out = serve_smoke(model, params, args)
+        elif args.serve:
+            out = serve_mode(model, params, args)
         elif args.arrival_rate is not None or args.restore:
             if args.arrival_rate is None:
                 args.arrival_rate = 1.0   # --restore drains, no arrivals

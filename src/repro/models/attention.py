@@ -119,13 +119,15 @@ def gqa_self_attn(p, cfg: ModelConfig, x, positions, *, window: int = 0,
 
 def gqa_decode_attn(p, cfg: ModelConfig, x, cache_k, cache_v, pos, *,
                     window: int = 0, theta: float | None = None,
-                    backend: str = "xla"):
+                    backend: str = "xla", active=None):
     """One-token decode against a full or ring cache.
 
     x [B,1,d]; cache_k/v [B, T, KV, hd] (T = S_max or window W);
     pos: int32 — current absolute position, either a scalar shared by the
     whole batch or a per-row vector [B] (continuous-batching slots, each at
-    its own depth).
+    its own depth).  ``active`` (optional [B] bool, per-slot mode) gates the
+    cache write per row — slots mid-chunked-prefill must not have their
+    partial K/V overwritten by the fused decode pass.
     Returns (y [B,1,d], new_k, new_v).
     """
     B = x.shape[0]
@@ -143,6 +145,8 @@ def gqa_decode_attn(p, cfg: ModelConfig, x, cache_k, cache_v, pos, *,
         # (rows whose slot is out of range — retired/free slots at pos ≥ T —
         # simply don't write)
         wr = (idx[None, :] == slot[:, None])[:, :, None, None]
+        if active is not None:
+            wr = wr & active[:, None, None, None]
         cache_k = jnp.where(wr, k, cache_k)
         cache_v = jnp.where(wr, v, cache_v)
         if window:
@@ -284,18 +288,20 @@ def _resume_scatter(arena, dst_b, dense):
     return arena.at[dst_b].set(blocks.astype(arena.dtype))
 
 
-def gqa_resume_attn(p, cfg: ModelConfig, x, arena_k, arena_v, src_b, dst_b,
-                    start, *, theta: float | None = None,
-                    backend: str = "xla"):
-    """Suffix prefill (x [1, S_pad, d] at absolute positions start + t)
-    attending to the gathered prefix + itself; writes the suffix K/V back
-    into the arenas through dst_b.  Full (non-windowed) attention only."""
+def gqa_chunk_attn(p, cfg: ModelConfig, x, dk, dv, start, *,
+                   theta: float | None = None, backend: str = "xla"):
+    """Chunk/suffix prefill against a *dense logical* cache buffer.
+
+    x [1, S_pad, d] at absolute positions start + t; dk/dv
+    [1, T + S_pad, KV, hd] — the logical cache with S_pad scratch rows
+    appended so the write at ``start`` never clamps.  Writes the chunk K/V
+    at its absolute positions and attends causally to prefix + itself.
+    Full (non-windowed) attention only.  Returns (y, dk, dv).
+    """
     B, S_pad, _ = x.shape
     theta = cfg.rope_theta if theta is None else theta
     positions = start + jnp.arange(S_pad)[None, :]        # [1, S_pad]
     q, k, v, heads_ok = _qkv(p, cfg, x, positions, theta, backend)
-    dk = _resume_dense(arena_k, src_b, S_pad)
-    dv = _resume_dense(arena_v, src_b, S_pad)
     dk = jax.lax.dynamic_update_slice(dk, k.astype(dk.dtype),
                                       (0, start, 0, 0))
     dv = jax.lax.dynamic_update_slice(dv, v.astype(dv.dtype),
@@ -305,19 +311,82 @@ def gqa_resume_attn(p, cfg: ModelConfig, x, arena_k, arena_v, src_b, dst_b,
     mask = (j <= positions[:, :, None])[:, None, None]    # [1,1,1,S,T]
     ctx = _gqa_scores_ctx(q, kk, vv, mask, 1.0 / np.sqrt(cfg.head_dim))
     y = linear_apply(p["o"], ctx, backend)
+    return y, dk, dv
+
+
+def gqa_resume_attn(p, cfg: ModelConfig, x, arena_k, arena_v, src_b, dst_b,
+                    start, *, theta: float | None = None,
+                    backend: str = "xla"):
+    """Suffix prefill (x [1, S_pad, d] at absolute positions start + t)
+    attending to the gathered prefix + itself; writes the suffix K/V back
+    into the arenas through dst_b.  Full (non-windowed) attention only."""
+    B, S_pad, _ = x.shape
+    dk = _resume_dense(arena_k, src_b, S_pad)
+    dv = _resume_dense(arena_v, src_b, S_pad)
+    y, dk, dv = gqa_chunk_attn(p, cfg, x, dk, dv, start, theta=theta,
+                               backend=backend)
     return y, _resume_scatter(arena_k, dst_b, dk), \
         _resume_scatter(arena_v, dst_b, dv)
 
 
-def mla_resume_attn(p, cfg: ModelConfig, x, arena_ckv, arena_kr, src_b,
-                    dst_b, start, backend="xla"):
-    """MLA suffix prefill over gathered latent arenas (absorbed form)."""
+def gqa_chunk_attn_ring(p, cfg: ModelConfig, x, ring_k, ring_v, start,
+                        true_len, *, theta: float | None = None,
+                        backend: str = "xla"):
+    """Chunked prefill for a windowed-ring layer.
+
+    x [1, C, d] at absolute positions start + t (rows >= true_len are
+    right-padding); ring_k/v [1, W, KV, hd] hold the state *before* this
+    chunk: slot w = K/V of the latest absolute position p <= start - 1 with
+    p % W == w (zeros where no such p >= 0 exists — the `_ring_cache`
+    convention).  A chunk may span more than W positions, so the ring is
+    NOT updated in place (in-chunk overwrites would hide keys still inside
+    an earlier query's window); instead the history is gathered densely,
+    the chunk keys appended, every real query attends over absolute
+    positions, and the ring is rebuilt for state after start + true_len - 1.
+    Returns (y, new_ring_k, new_ring_v).
+    """
+    B, C, _ = x.shape
+    W = ring_k.shape[1]
+    theta = cfg.rope_theta if theta is None else theta
+    positions = start + jnp.arange(C)[None, :]            # [1, C]
+    q, k, v, heads_ok = _qkv(p, cfg, x, positions, theta, backend)
+    # history entry i = absolute position start - W + i, stored at ring slot
+    # (start - W + i) mod W == (start + i) mod W
+    i_idx = jnp.arange(W)
+    hist_slot = jnp.mod(start + i_idx, W)
+    hk = jnp.take(ring_k, hist_slot, axis=1)
+    hv = jnp.take(ring_v, hist_slot, axis=1)
+    key_pos = jnp.concatenate([start - W + i_idx, start + jnp.arange(C)])
+    ck = jnp.concatenate([hk, k.astype(hk.dtype)], axis=1)    # [1,W+C,KV,hd]
+    cv = jnp.concatenate([hv, v.astype(hv.dtype)], axis=1)
+    kk, vv = _expand_and_shard_kv(cfg, ck, cv, heads_ok)
+    pq = positions[:, :, None]                            # [1,C,1]
+    j = key_pos[None, None, :]                            # [1,1,W+C]
+    mask = ((j <= pq) & (j > pq - W) & (j >= 0))[:, None, None]
+    ctx = _gqa_scores_ctx(q, kk, vv, mask, 1.0 / np.sqrt(cfg.head_dim))
+    y = linear_apply(p["o"], ctx, backend)
+    # rebuild: slot w <- latest p <= L1 with p % W == w; that p indexes the
+    # combined buffer at p - start + W (history region when p < start —
+    # where it provably equals the old ring entry — chunk region otherwise)
+    L1 = start + true_len - 1
+    p_w = L1 - jnp.mod(L1 - i_idx, W)
+    src = p_w - start + W
+    nk = jnp.take(ck, src, axis=1)
+    nv = jnp.take(cv, src, axis=1)
+    ok = (p_w >= 0)[None, :, None, None]
+    new_rk = jnp.where(ok, nk, jnp.zeros_like(nk)).astype(ring_k.dtype)
+    new_rv = jnp.where(ok, nv, jnp.zeros_like(nv)).astype(ring_v.dtype)
+    return y, new_rk, new_rv
+
+
+def mla_chunk_attn(p, cfg: ModelConfig, x, dckv, dkr, start, backend="xla"):
+    """MLA chunk/suffix prefill against dense latent buffers (absorbed
+    form).  dckv [1, T + S_pad, kv_lora], dkr [1, T + S_pad, rope_hd] with
+    S_pad scratch rows appended.  Returns (y, dckv, dkr)."""
     B, S_pad, _ = x.shape
     positions = start + jnp.arange(S_pad)[None, :]
     q_nope, q_rope = _mla_q(p, cfg, x, positions, backend)
     ckv, krope = _mla_compress(p, cfg, x, positions, backend)
-    dckv = _resume_dense(arena_ckv, src_b, S_pad)
-    dkr = _resume_dense(arena_kr, src_b, S_pad)
     dckv = jax.lax.dynamic_update_slice(dckv, ckv.astype(dckv.dtype),
                                         (0, start, 0))
     dkr = jax.lax.dynamic_update_slice(dkr, krope.astype(dkr.dtype),
@@ -326,6 +395,17 @@ def mla_resume_attn(p, cfg: ModelConfig, x, arena_ckv, arena_kr, src_b,
     valid = (j <= positions[:, :, None])[:, None]         # [1,1,S,T]
     ctx = _mla_absorbed_ctx(p, cfg, q_nope, q_rope, dckv, dkr, valid)
     y = linear_apply(p["o"], ctx.astype(x.dtype), backend)
+    return y, dckv, dkr
+
+
+def mla_resume_attn(p, cfg: ModelConfig, x, arena_ckv, arena_kr, src_b,
+                    dst_b, start, backend="xla"):
+    """MLA suffix prefill over gathered latent arenas (absorbed form)."""
+    B, S_pad, _ = x.shape
+    dckv = _resume_dense(arena_ckv, src_b, S_pad)
+    dkr = _resume_dense(arena_kr, src_b, S_pad)
+    y, dckv, dkr = mla_chunk_attn(p, cfg, x, dckv, dkr, start,
+                                  backend=backend)
     return y, _resume_scatter(arena_ckv, dst_b, dckv), \
         _resume_scatter(arena_kr, dst_b, dkr)
 
@@ -452,12 +532,13 @@ def _mla_absorbed_ctx(p, cfg: ModelConfig, q_nope, q_rope, cache_ckv,
 
 
 def mla_decode_attn(p, cfg: ModelConfig, x, cache_ckv, cache_krope, pos,
-                    backend="xla"):
+                    backend="xla", active=None):
     """Absorbed-form MLA decode: scores/context live in the latent space, so
     per-step cost is O(T·kv_lora) not O(T·H·head_dim) — the production path.
 
     cache_ckv [B, S_max, kv_lora], cache_krope [B, S_max, rope_hd].
     ``pos`` is a scalar or a per-row vector [B] (see gqa_decode_attn).
+    ``active`` (optional [B] bool) gates the per-slot cache write.
     """
     B = x.shape[0]
     per_slot = jnp.ndim(pos) == 1
@@ -468,6 +549,8 @@ def mla_decode_attn(p, cfg: ModelConfig, x, cache_ckv, cache_krope, pos,
     if per_slot:
         idx = jnp.arange(cache_ckv.shape[1])
         wr = (idx[None, :] == positions)[:, :, None]    # [B,T,1]
+        if active is not None:
+            wr = wr & active[:, None, None]
         cache_ckv = jnp.where(wr, ckv, cache_ckv)
         cache_krope = jnp.where(wr, krope, cache_krope)
     else:

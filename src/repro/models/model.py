@@ -24,7 +24,8 @@ from .layers import (embed_apply, embed_spec, linear_apply, linear_spec,
 from .spec import ParamSpec, abstract_tree, count_params, init_tree
 from .transformer import (BlockDef, Group, block_cache_kinds,
                           block_cache_shape, block_paged_cache_shape,
-                          group_decode, group_fwd, group_resume, group_spec)
+                          group_chunk, group_decode, group_fwd,
+                          group_resume, group_spec)
 
 
 def bucket_length(S: int, limit: int, floor: int = 16) -> int:
@@ -277,7 +278,8 @@ class Model:
         for gi, g in enumerate(self.groups):
             x, c = group_decode(params[f"g{gi}"], cfg, g, x,
                                 cache[f"g{gi}"], pos,
-                                plans=self.plan_book, paged=paged)
+                                plans=self.plan_book, paged=paged,
+                                active=active)
             new_cache[f"g{gi}"] = c
         logits = self._logits(params, x)
         return logits, new_cache
@@ -365,6 +367,97 @@ class Model:
             x, jnp.asarray(true_suf, jnp.int32) - 1, 1, axis=1)
         logits = self._logits(params, xl)
         return logits, new_cache
+
+    def chunk_step(self, params, cache: dict, tokens, slot, start, true_len,
+                   active, table=None) -> tuple[jax.Array, dict]:
+        """One prefill chunk of one slot, in place in the serving pool.
+
+        ``tokens`` [1, C] (rows >= true_len are right-padding) are the
+        prompt slice [start, start + true_len); ``slot`` addresses the pool
+        row, ``table`` [max_blocks] the paged arenas (None = dense layout;
+        pass it sentinel-redirected when ``active`` is False).  ``active``
+        (scalar bool) makes an unused lane a no-op by value.  Returns
+        (logits [1,1,V] at position start + true_len - 1, updated cache) —
+        the logits matter only on the final chunk, where the scheduler
+        picks the first generated token from them.
+        """
+        cfg = self.cfg
+        x = embed_apply(params["embed"], tokens, cfg.d_model,
+                        scale=cfg.tie_embeddings)
+        slot = jnp.asarray(slot, jnp.int32)
+        start = jnp.asarray(start, jnp.int32)
+        true_len = jnp.asarray(true_len, jnp.int32)
+        pos = cache["pos"]
+        new_cache = {"pos": pos.at[slot].set(jnp.where(
+            active, (start + true_len).astype(pos.dtype), pos[slot]))}
+        if table is not None:
+            bt = cache["block_tables"]
+            new_cache["block_tables"] = bt.at[slot].set(jnp.where(
+                active, table.astype(bt.dtype), bt[slot]))
+        for gi, g in enumerate(self.groups):
+            x, c = group_chunk(params[f"g{gi}"], cfg, g, x, cache[f"g{gi}"],
+                               slot, table, start, true_len, active,
+                               plans=self.plan_book)
+            new_cache[f"g{gi}"] = c
+        xl = jax.lax.dynamic_slice_in_dim(x, true_len - 1, 1, axis=1)
+        logits = self._logits(params, xl)
+        return logits, new_cache
+
+    def mixed_step(self, params, cache: dict, token, active, ck_tokens,
+                   ck_slot, ck_start, ck_true, ck_active, ck_tables=None
+                   ) -> tuple[jax.Array, jax.Array, dict]:
+        """Fused serving step: K prefill-chunk lanes + the masked decode
+        pass, one traced program (the chunked-prefill tentpole).
+
+        ck_tokens [K, C] int32, ck_slot/ck_start/ck_true [K] int32,
+        ck_active [K] bool, ck_tables [K, max_blocks] int32 (paged pools
+        only; rows of unused lanes must be sentinel-filled).  Chunk lanes
+        run before the decode pass, so a lane finishing its prompt this
+        step is decodable the next; the decode pass masks every per-slot
+        write with ``active``, leaving mid-prefill rows untouched.
+        Returns (decode logits [B,1,V], chunk logits [K,V] at each lane's
+        last true position, updated cache)."""
+        K = ck_tokens.shape[0]
+        ck_logits = []
+        for j in range(K):
+            tbl = None if ck_tables is None else ck_tables[j]
+            lg, cache = self.chunk_step(
+                params, cache, ck_tokens[j:j + 1], ck_slot[j], ck_start[j],
+                ck_true[j], ck_active[j], table=tbl)
+            ck_logits.append(lg[0, 0])
+        dec_logits, cache = self.decode_step(params, cache, token, active)
+        return dec_logits, jnp.stack(ck_logits), cache
+
+    def copy_blocks(self, cache: dict, src, dst) -> dict:
+        """Copy one arena block's content ``src`` → ``dst`` in every
+        pageable leaf — the eager COW at chunked admission with a
+        fully-covered prefix (the last matched block is about to be
+        partially overwritten through the slot's own table)."""
+        out = dict(cache)
+        for gi, (period, _count) in enumerate(self.groups):
+            g_new = {}
+            for i, bd in enumerate(period):
+                kinds = block_cache_kinds(bd)
+                b_new = {}
+                for name, pool in cache[f"g{gi}"][f"b{i}"].items():
+                    if kinds[name] == "slot":
+                        b_new[name] = pool
+                    else:
+                        b_new[name] = pool.at[:, dst].set(pool[:, src])
+                g_new[f"b{i}"] = b_new
+            out[f"g{gi}"] = g_new
+        return out
+
+    @property
+    def supports_chunked_prefill(self) -> bool:
+        """Chunked prefill covers every self-mixer — full attention, MLA,
+        windowed-ring (history-gathered), SSM (state-threaded) — but not
+        enc-dec cross-attention or multimodal frontends, whose admission
+        stays monolithic."""
+        if self.cfg.enc_dec or self.cfg.frontend is not None:
+            return False
+        return all(not bd.cross
+                   for period, _count in self.groups for bd in period)
 
     @property
     def supports_prefix_reuse(self) -> bool:
@@ -459,6 +552,27 @@ class Model:
             return jax.jit(self.decode_step, donate_argnums=(1,),
                            out_shardings=out_shardings)
         return self._jit_get(("decode_step_masked", mesh), build)
+
+    def jitted_mixed_step(self, K: int, C: int, mesh=None):
+        """jit(mixed_step), cache donated, one LRU entry per chunk config
+        (K lanes × C tokens) so distinct configs stay individually
+        evictable.  With a mesh both logits outputs are pinned replicated
+        (same rationale as :meth:`jitted_decode_step_masked`)."""
+        def build():
+            out_shardings = None
+            if mesh is not None:
+                from jax.sharding import NamedSharding, PartitionSpec
+                rep = NamedSharding(mesh, PartitionSpec())
+                out_shardings = (rep, rep, None)
+            return jax.jit(self.mixed_step, donate_argnums=(1,),
+                           out_shardings=out_shardings)
+        return self._jit_get(("mixed_step", K, C, mesh), build)
+
+    def jitted_copy_blocks(self):
+        """jit(copy_blocks), pool donated — the eager COW block copy."""
+        return self._jit_get(
+            "copy_blocks",
+            lambda: jax.jit(self.copy_blocks, donate_argnums=(0,)))
 
     def jitted_splice(self):
         """jit(splice_cache) with the pool cache donated: admission writes

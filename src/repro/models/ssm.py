@@ -72,19 +72,25 @@ def _segsum(a):
     return jnp.where(mask, diff, -jnp.inf)
 
 
-def ssd_chunked(x, dt, A, Bm, Cm, chunk: int):
+def ssd_chunked(x, dt, A, Bm, Cm, chunk: int, s0=None):
     """Chunked SSD scan.
 
     x [B,S,H,P], dt [B,S,H] (post-softplus), A [H] (negative),
-    Bm/Cm [B,S,G,N] with G dividing H.  Returns y [B,S,H,P] and the final
-    state [B,H,N,P].
+    Bm/Cm [B,S,G,N] with G dividing H.  ``s0`` (optional [B,H,N,P]) seeds
+    the inter-chunk recurrence — the linear state recurrence is exact
+    under any chunking, so running a sequence in pieces with the carried
+    state is bitwise the same math as one pass (chunked-prefill resume).
+    Returns y [B,S,H,P] and the final state [B,H,N,P].
     """
     Bsz, S, H, P = x.shape
     G, N = Bm.shape[2], Bm.shape[3]
     rep = H // G
+    # largest intra-chunk length <= ``chunk`` dividing S: arbitrary chunk
+    # sizes (scheduler prefill chunks) stay exact instead of asserting
     L = min(chunk, S)
+    while S % L:
+        L -= 1
     nc = S // L
-    assert nc * L == S, (S, L)
     f32 = jnp.float32
     xc = x.reshape(Bsz, nc, L, H, P).astype(f32)
     dtc = dt.reshape(Bsz, nc, L, H).astype(f32)
@@ -112,10 +118,11 @@ def ssd_chunked(x, dt, A, Bm, Cm, chunk: int):
         s_new = s_prev * dec[..., None, None] + st
         return s_new, s_prev
 
-    s0 = jnp.zeros((Bsz, H, N, P), f32)
+    s_init = (jnp.zeros((Bsz, H, N, P), f32) if s0 is None
+              else s0.astype(f32))
     s_final, s_prevs = jax.lax.scan(
-        step, s0, (states.transpose(1, 0, 2, 3, 4),
-                   chunk_decay.transpose(1, 0, 2)))
+        step, s_init, (states.transpose(1, 0, 2, 3, 4),
+                       chunk_decay.transpose(1, 0, 2)))
     s_prevs = s_prevs.transpose(1, 0, 2, 3, 4)           # [B,nc,H,N,P]
 
     decay_from_start = jnp.exp(a_cum)                    # [B,nc,H,L]
@@ -125,7 +132,8 @@ def ssd_chunked(x, dt, A, Bm, Cm, chunk: int):
     return y.astype(x.dtype), s_final
 
 
-def ssm_forward(p, cfg: ModelConfig, x, backend="xla", true_len=None):
+def ssm_forward(p, cfg: ModelConfig, x, backend="xla", true_len=None,
+                s0=None, conv_hist=None):
     """Full-sequence forward.  x [B,S,d] →
     (y [B,S,d], final_state, conv_tail [B, K-1, conv_dim]).
 
@@ -137,6 +145,12 @@ def ssm_forward(p, cfg: ModelConfig, x, backend="xla", true_len=None):
     makes them exact no-ops on the recurrent state (decay exp(0·A)=1,
     input dt·B·x=0), and the conv tail is sliced at the true length — the
     returned state/tail are bitwise those of the unpadded sequence.
+
+    ``s0`` [B,H,N,P] / ``conv_hist`` [B,K-1,conv_dim] resume a suffix from
+    carried recurrent state + conv history (chunked prefill): the causal
+    conv sees the real previous K-1 pre-conv rows instead of zero padding
+    and the SSD scan is seeded with ``s0`` — exactly the state a single
+    monolithic pass would have reached at this point.
     """
     s = cfg.ssm
     d_inner, heads, _ = ssm_dims(cfg)
@@ -144,17 +158,22 @@ def ssm_forward(p, cfg: ModelConfig, x, backend="xla", true_len=None):
     z, xc, Bc, Cc, dt = _split_in(cfg, zxbcdt)
     pre = jnp.concatenate([xc, Bc, Cc], -1)              # [B,S,conv_dim]
     K = s.d_conv
-    if true_len is not None:
-        # left-pad K-1 zeros, then the K-1 rows ending at true_len are the
-        # tail (covers true_len < K-1 with the correct zero history)
-        pre_p = jnp.pad(pre, ((0, 0), (K - 1, 0), (0, 0)))
-        conv_tail = jax.lax.dynamic_slice_in_dim(
-            pre_p, jnp.asarray(true_len, jnp.int32), K - 1, axis=1)
-    elif pre.shape[1] >= K - 1:
-        conv_tail = pre[:, pre.shape[1] - (K - 1):]
+    if conv_hist is not None:
+        full = jnp.concatenate([conv_hist.astype(pre.dtype), pre], 1)
     else:
-        conv_tail = jnp.pad(pre, ((0, 0), (K - 1 - pre.shape[1], 0), (0, 0)))
-    xbc = _causal_conv(pre, p["conv_w"], p["conv_b"])
+        # left-pad K-1 zeros — the no-history case
+        full = jnp.pad(pre, ((0, 0), (K - 1, 0), (0, 0)))
+    if true_len is not None:
+        # the K-1 rows ending at true_len are the tail (row t of ``pre``
+        # sits at index K-1+t of ``full``, so the slice starts at true_len;
+        # covers true_len < K-1 with the correct carried/zero history)
+        conv_tail = jax.lax.dynamic_slice_in_dim(
+            full, jnp.asarray(true_len, jnp.int32), K - 1, axis=1)
+    else:
+        conv_tail = full[:, pre.shape[1]:]
+    Sx = pre.shape[1]
+    out = sum(full[:, i:i + Sx, :] * p["conv_w"][i] for i in range(K))
+    xbc = jax.nn.silu(out + p["conv_b"])
     xc, Bc, Cc = jnp.split(
         xbc, np.cumsum([d_inner, s.n_groups * s.d_state]).tolist(), axis=-1)
     B_, S, _ = x.shape
@@ -167,7 +186,7 @@ def ssm_forward(p, cfg: ModelConfig, x, backend="xla", true_len=None):
     A = -jnp.exp(p["A_log"].astype(jnp.float32))
     Bm = Bc.reshape(B_, S, s.n_groups, s.d_state)
     Cm = Cc.reshape(B_, S, s.n_groups, s.d_state)
-    y, state = ssd_chunked(xh, dt_, A, Bm, Cm, cfg.ssm.chunk)
+    y, state = ssd_chunked(xh, dt_, A, Bm, Cm, cfg.ssm.chunk, s0=s0)
     y = y + xh * p["D"][:, None]
     y = y.reshape(B_, S, d_inner)
     y = rmsnorm_apply(p["norm"], y * jax.nn.silu(z), cfg.norm_eps)

@@ -18,9 +18,11 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.distributed.sharding import shard_act
-from .attention import (cross_attn, cross_attn_spec, cross_kv,
-                        gqa_decode_attn, gqa_decode_attn_paged,
-                        gqa_resume_attn, gqa_self_attn, gqa_spec,
+from .attention import (_resume_dense, _resume_scatter, cross_attn,
+                        cross_attn_spec, cross_kv, gqa_chunk_attn,
+                        gqa_chunk_attn_ring, gqa_decode_attn,
+                        gqa_decode_attn_paged, gqa_resume_attn,
+                        gqa_self_attn, gqa_spec, mla_chunk_attn,
                         mla_decode_attn, mla_decode_attn_paged,
                         mla_resume_attn, mla_self_attn, mla_spec)
 from .layers import mlp_apply, mlp_spec, rmsnorm_apply, rmsnorm_spec
@@ -246,39 +248,47 @@ def _enc_kv(p, cfg, bd, enc_out, cache, want_cache, backend):
 # ---------------------------------------------------------------------------
 
 def block_decode(p, cfg: ModelConfig, bd: BlockDef, x, cache: dict, pos,
-                 plans=None, paged=None):
+                 plans=None, paged=None, active=None):
     """``paged``: None for the dense slot-pool layout, else
     ``(block_tables [B, max_blocks], active [B])`` — attention leaves are
     block arenas addressed through the table; SSM/cross leaves are
-    slot-indexed in both layouts."""
+    slot-indexed in both layouts.  ``active`` (optional [B] bool) gates
+    every per-slot cache write: rows mid-chunked-prefill (and retired/free
+    rows) must not have their state touched by the fused decode pass —
+    paged attention leaves are already protected by the sentinel-block
+    redirect, dense attention rows and SSM state/conv need the mask."""
     backend = plans if plans is not None else cfg.tt.backend_spec
     h = rmsnorm_apply(p["ln1"], x, cfg.norm_eps)
     new_cache = dict(cache)
     if bd.mixer == "gqa":
         if paged is not None:
-            bt, active = paged
+            bt, pact = paged
             y, nk, nv = gqa_decode_attn_paged(
-                p["attn"], cfg, h, cache["k"], cache["v"], bt, pos, active,
+                p["attn"], cfg, h, cache["k"], cache["v"], bt, pos, pact,
                 window=bd.window, theta=bd.theta, backend=backend)
         else:
             y, nk, nv = gqa_decode_attn(p["attn"], cfg, h, cache["k"],
                                         cache["v"], pos, window=bd.window,
-                                        theta=bd.theta, backend=backend)
+                                        theta=bd.theta, backend=backend,
+                                        active=active)
         new_cache.update(k=nk, v=nv)
     elif bd.mixer == "mla":
         if paged is not None:
-            bt, active = paged
+            bt, pact = paged
             y, nckv, nkr = mla_decode_attn_paged(
                 p["attn"], cfg, h, cache["ckv"], cache["krope"], bt, pos,
-                active, backend=backend)
+                pact, backend=backend)
         else:
             y, nckv, nkr = mla_decode_attn(p["attn"], cfg, h, cache["ckv"],
                                            cache["krope"], pos,
-                                           backend=backend)
+                                           backend=backend, active=active)
         new_cache.update(ckv=nckv, krope=nkr)
     else:
         y, st, cv = ssm_decode(p["ssm"], cfg, h, cache["state"],
                                cache["conv"], backend)
+        if active is not None:
+            st = jnp.where(active[:, None, None, None], st, cache["state"])
+            cv = jnp.where(active[:, None, None], cv, cache["conv"])
         new_cache.update(state=st, conv=cv)
     x = x + y
     if bd.cross:
@@ -325,10 +335,11 @@ def group_fwd(params, cfg: ModelConfig, group: Group, x, positions, *,
 
 
 def group_decode(params, cfg: ModelConfig, group: Group, x, caches, pos,
-                 plans=None, paged=None):
+                 plans=None, paged=None, active=None):
     """Scan decode over stacked (params, caches).  Returns (x, new_caches).
     ``paged`` = (block_tables, active) switches attention leaves to the
-    block-arena layout (see block_decode)."""
+    block-arena layout; ``active`` masks per-slot writes (see
+    block_decode)."""
     period, count = group
 
     def body(x, inp):
@@ -337,7 +348,7 @@ def group_decode(params, cfg: ModelConfig, group: Group, x, caches, pos,
         for i, bd in enumerate(period):
             x, c = block_decode(layer_params[f"b{i}"], cfg, bd, x,
                                 layer_caches[f"b{i}"], pos, plans=plans,
-                                paged=paged)
+                                paged=paged, active=active)
             new[f"b{i}"] = c
         return x, new
 
@@ -396,6 +407,150 @@ def group_resume(params, cfg: ModelConfig, group: Group, x, caches, src_b,
             x, c = block_resume(layer_params[f"b{i}"], cfg, bd, x,
                                 layer_caches[f"b{i}"], src_b, dst_b, start,
                                 plans=plans)
+            new[f"b{i}"] = c
+        return x, new
+
+    x, new_caches = jax.lax.scan(body, x, (params, caches),
+                                 unroll=SCAN_UNROLL or 1)
+    return x, new_caches
+
+
+# ---------------------------------------------------------------------------
+# Chunked prefill — one prompt chunk of one slot, inside the serving pool
+# ---------------------------------------------------------------------------
+#
+# The chunked-prefill twin of block_resume, generalized two ways: it runs
+# against either pool layout (``table=None`` → dense slot pool, else the
+# slot's block table into the paged arenas), and it covers every mixer —
+# windowed-ring layers rebuild their ring from gathered history (a chunk
+# may span more than W positions) and SSM layers thread the recurrent
+# state + conv tail across chunks, both exactly the state a monolithic
+# prefill would have reached.  All tensor shapes are static in (C, layout),
+# so the scheduler's mixed step stays one traced program per chunk config.
+
+def block_chunk(p, cfg: ModelConfig, bd: BlockDef, x, cache: dict, slot,
+                table, start, true_len, active, plans=None):
+    """One prefill chunk of one slot through one block.
+
+    x [1, C, d] at absolute positions start + t (rows >= true_len are
+    right-padding); ``slot`` scalar int32 selects the row of slot-indexed
+    leaves; ``table`` [max_blocks] int32 addresses paged arenas (None for
+    the dense layout; callers redirect it to the write sentinel when the
+    lane is inactive).  ``active`` (scalar bool) gates dense-row and
+    slot-state writes so an unused lane is a no-op by value.
+    """
+    if bd.cross:
+        raise ValueError("chunked prefill does not support cross-attention")
+    backend = plans if plans is not None else cfg.tt.backend_spec
+    C = x.shape[1]
+    h = rmsnorm_apply(p["ln1"], x, cfg.norm_eps)
+    new_cache = dict(cache)
+
+    def _row(leaf):
+        return jnp.take(leaf, slot, axis=0)[None]
+
+    def _put(leaf, new_row):
+        old = jnp.take(leaf, slot, axis=0)
+        return leaf.at[slot].set(
+            jnp.where(active, new_row.astype(leaf.dtype), old))
+
+    if bd.mixer == "gqa" and not bd.window:
+        if table is not None:
+            dk = _resume_dense(cache["k"], table, C)
+            dv = _resume_dense(cache["v"], table, C)
+            y, dk, dv = gqa_chunk_attn(p["attn"], cfg, h, dk, dv, start,
+                                       theta=bd.theta, backend=backend)
+            new_cache["k"] = _resume_scatter(cache["k"], table, dk)
+            new_cache["v"] = _resume_scatter(cache["v"], table, dv)
+        else:
+            T = cache["k"].shape[1]
+            pad = lambda r: jnp.concatenate(
+                [r, jnp.zeros((1, C) + r.shape[2:], r.dtype)], axis=1)
+            dk, dv = pad(_row(cache["k"])), pad(_row(cache["v"]))
+            y, dk, dv = gqa_chunk_attn(p["attn"], cfg, h, dk, dv, start,
+                                       theta=bd.theta, backend=backend)
+            new_cache["k"] = _put(cache["k"], dk[0, :T])
+            new_cache["v"] = _put(cache["v"], dv[0, :T])
+    elif bd.mixer == "gqa":
+        if table is not None:
+            blk = cache["k"].shape[1]
+            W = min(bd.window, table.shape[0] * blk)
+            nblk = -(-W // blk)
+
+            def _gather_ring(arena):
+                g = arena[table[:nblk]].reshape(
+                    1, nblk * blk, *arena.shape[2:])
+                return g, g[:, :W]
+
+            gk, rk = _gather_ring(cache["k"])
+            gv, rv = _gather_ring(cache["v"])
+            y, nk, nv = gqa_chunk_attn_ring(p["attn"], cfg, h, rk, rv,
+                                            start, true_len, theta=bd.theta,
+                                            backend=backend)
+
+            def _scatter_ring(arena, g, new_ring):
+                merged = g.at[:, :W].set(new_ring.astype(g.dtype))
+                blocks = merged[0].reshape(nblk, blk, *arena.shape[2:])
+                return arena.at[table[:nblk]].set(blocks)
+
+            new_cache["k"] = _scatter_ring(cache["k"], gk, nk)
+            new_cache["v"] = _scatter_ring(cache["v"], gv, nv)
+        else:
+            rk, rv = _row(cache["k"]), _row(cache["v"])
+            y, nk, nv = gqa_chunk_attn_ring(p["attn"], cfg, h, rk, rv,
+                                            start, true_len, theta=bd.theta,
+                                            backend=backend)
+            new_cache["k"] = _put(cache["k"], nk[0])
+            new_cache["v"] = _put(cache["v"], nv[0])
+    elif bd.mixer == "mla":
+        if table is not None:
+            dckv = _resume_dense(cache["ckv"], table, C)
+            dkr = _resume_dense(cache["krope"], table, C)
+            y, dckv, dkr = mla_chunk_attn(p["attn"], cfg, h, dckv, dkr,
+                                          start, backend=backend)
+            new_cache["ckv"] = _resume_scatter(cache["ckv"], table, dckv)
+            new_cache["krope"] = _resume_scatter(cache["krope"], table, dkr)
+        else:
+            T = cache["ckv"].shape[1]
+            pad = lambda r: jnp.concatenate(
+                [r, jnp.zeros((1, C) + r.shape[2:], r.dtype)], axis=1)
+            dckv = pad(_row(cache["ckv"]))
+            dkr = pad(_row(cache["krope"]))
+            y, dckv, dkr = mla_chunk_attn(p["attn"], cfg, h, dckv, dkr,
+                                          start, backend=backend)
+            new_cache["ckv"] = _put(cache["ckv"], dckv[0, :T])
+            new_cache["krope"] = _put(cache["krope"], dkr[0, :T])
+    else:  # ssm — slot-indexed state in both layouts
+        st, cv = _row(cache["state"]), _row(cache["conv"])
+        fresh = start == 0
+        st = jnp.where(fresh, jnp.zeros_like(st), st)
+        cv = jnp.where(fresh, jnp.zeros_like(cv), cv)
+        y, st2, tail = ssm_forward(p["ssm"], cfg, h, backend,
+                                   true_len=true_len, s0=st, conv_hist=cv)
+        new_cache["state"] = _put(cache["state"], st2[0])
+        new_cache["conv"] = _put(cache["conv"], tail[0])
+    x = x + y
+    if bd.ffn != "none":
+        h = rmsnorm_apply(p["ln2"], x, cfg.norm_eps)
+        if bd.ffn == "moe":
+            x = x + moe_apply(p["ffn"], cfg, h, backend)
+        else:
+            x = x + mlp_apply(p["ffn"], h, backend)
+    return x, new_cache
+
+
+def group_chunk(params, cfg: ModelConfig, group: Group, x, caches, slot,
+                table, start, true_len, active, plans=None):
+    """Scan one prefill chunk over stacked (params, caches)."""
+    period, count = group
+
+    def body(x, inp):
+        layer_params, layer_caches = inp
+        new = {}
+        for i, bd in enumerate(period):
+            x, c = block_chunk(layer_params[f"b{i}"], cfg, bd, x,
+                               layer_caches[f"b{i}"], slot, table, start,
+                               true_len, active, plans=plans)
             new[f"b{i}"] = c
         return x, new
 

@@ -93,7 +93,8 @@ def encode_finished(f: FinishedRequest) -> dict:
     return {"uid": f.uid, "tokens": np.asarray(f.tokens).tolist(),
             "logprobs": [float(x) for x in np.asarray(f.logprobs)],
             "finish_reason": f.finish_reason, "prompt_len": f.prompt_len,
-            "submit_time": f.submit_time, "finish_time": f.finish_time}
+            "submit_time": f.submit_time, "finish_time": f.finish_time,
+            "first_token_time": f.first_token_time}
 
 
 def decode_finished(d: dict) -> FinishedRequest:
@@ -103,7 +104,9 @@ def decode_finished(d: dict) -> FinishedRequest:
         finish_reason=str(d["finish_reason"]),
         prompt_len=int(d["prompt_len"]),
         submit_time=float(d["submit_time"]),
-        finish_time=float(d["finish_time"]))
+        finish_time=float(d["finish_time"]),
+        first_token_time=(None if d.get("first_token_time") is None
+                          else float(d["first_token_time"])))
 
 
 # ------------------------------------------------------------------ journal

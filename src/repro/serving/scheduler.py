@@ -83,7 +83,11 @@ class Request:
     PRNG), top_k 0 disables the top-k filter.  ``priority`` orders
     admission and preemption (higher wins; ties go to the older request);
     ``deadline_s`` is a TTL from submit after which the request is retired
-    with ``finish_reason="deadline"``."""
+    with ``finish_reason="deadline"``.  ``on_token`` (optional callable
+    ``(uid, index, token, logprob)``) streams each generated token as it is
+    picked — the async serving front-end's hook; it is host-side state and
+    is dropped from snapshots/journals (reconnecting clients replay from
+    the server's buffers instead)."""
     uid: int
     inputs: dict
     max_new_tokens: int
@@ -92,6 +96,8 @@ class Request:
     top_k: int = 0
     priority: int = 0
     deadline_s: float | None = None
+    on_token: object | None = dataclasses.field(default=None, repr=False,
+                                                compare=False)
 
 
 @dataclasses.dataclass
@@ -103,6 +109,7 @@ class FinishedRequest:
     prompt_len: int
     submit_time: float                    # perf_counter at submit()
     finish_time: float                    # perf_counter at retirement
+    first_token_time: float | None = None  # perf_counter at first token
 
 
 @dataclasses.dataclass
@@ -113,6 +120,7 @@ class _Resume:
     logprobs: list[float]
     key: jax.Array | None                 # PRNG stream state at preemption
     last_tok: int
+    first_token_time: float | None = None
 
 
 @dataclasses.dataclass
@@ -139,6 +147,17 @@ class _Slot:
     tokens: list[int] = dataclasses.field(default_factory=list)
     logprobs: list[float] = dataclasses.field(default_factory=list)
     last_tok: int = 0
+    first_token_time: float | None = None
+    # chunked-prefill state machine: ``prefill_pos`` is None once the
+    # prompt is fully prefilled (slot is decoding); while prefilling it
+    # counts prompt tokens already processed.  ``prefill_toks`` is the
+    # effective prompt (original + resume tokens) and ``prefill_table``
+    # the slot's sentinel-padded block-table row (paged pools).
+    prefill_pos: int | None = None
+    prefill_toks: np.ndarray | None = dataclasses.field(
+        default=None, repr=False)
+    prefill_table: np.ndarray | None = dataclasses.field(
+        default=None, repr=False)
 
 
 class Scheduler:
@@ -151,9 +170,30 @@ class Scheduler:
                  paged: bool = False, block_size: int = 64,
                  num_blocks: int | None = None, prefix_cache: bool = True,
                  bucket_prompts: bool = True, preempt: bool = True,
-                 clock=None, mesh=None):
+                 clock=None, mesh=None, chunk_prefill: bool = False,
+                 chunk_size: int = 64, prefill_budget: int | None = None):
         if num_slots < 1:
             raise ValueError("num_slots must be >= 1")
+        # Chunked prefill: prompts are processed ``chunk_size`` tokens at a
+        # time INSIDE the fused decode step (one traced program per
+        # (lanes, chunk) shape) instead of a monolithic admission prefill.
+        # ``prefill_budget`` caps prefill tokens per step: the step runs
+        # floor(budget / chunk_size) chunk lanes alongside the B decode
+        # rows, trading TTFT of admitting requests against inter-token
+        # latency of running ones.
+        self.chunk_prefill = bool(chunk_prefill)
+        self.chunk_size = int(chunk_size)
+        budget = self.chunk_size if prefill_budget is None else int(prefill_budget)
+        self.prefill_budget = budget
+        self.chunk_lanes = max(1, budget // max(1, self.chunk_size))
+        self.prefill_chunks = 0           # chunk lanes executed
+        if self.chunk_prefill:
+            if self.chunk_size < 1:
+                raise ValueError("chunk_size must be >= 1")
+            if not model.supports_chunked_prefill:
+                raise ValueError(
+                    "model does not support chunked prefill (encoder-decoder "
+                    "and frontend models prefill monolithically)")
         self.model = model
         self.mesh = mesh
         if mesh is not None:
@@ -291,6 +331,11 @@ class Scheduler:
                "kv_pool_bytes": self.kv_pool_bytes(),
                "preemptions": self.preemptions,
                "cancelled": self.cancelled, "expired": self.expired}
+        if self.chunk_prefill:
+            out.update(chunk_size=self.chunk_size,
+                       prefill_budget=self.prefill_budget,
+                       chunk_lanes=self.chunk_lanes,
+                       prefill_chunks=self.prefill_chunks)
         if self.paged:
             out.update(
                 block_size=self.block, num_blocks=self.num_blocks,
@@ -316,6 +361,7 @@ class Scheduler:
         self.finished.clear()
         self.tokens_out = self.steps_run = 0
         self.preemptions = self.cancelled = self.expired = 0
+        self.prefill_chunks = 0
         if self.paged:
             self.block_hwm = self.allocator.in_use
             self.prefix_hit_tokens = self.prefix_prompt_tokens = 0
@@ -334,7 +380,12 @@ class Scheduler:
         if not self.hold_admissions:
             self._admit_phase(done)
         if self.num_active:
-            self._decode_once(done)
+            if self.chunk_prefill and any(
+                    s is not None and s.prefill_pos is not None
+                    for s in self.slots):
+                self._mixed_once(done)
+            else:
+                self._decode_once(done)
         # retirements this step may have been the last thing a deferred
         # shrink was waiting on — land it now, not one step later
         self._apply_pending_resize()
@@ -379,7 +430,8 @@ class Scheduler:
             tokens=np.asarray(r.tokens if r else [], np.int32),
             logprobs=np.asarray(r.logprobs if r else [], np.float32),
             finish_reason=reason, prompt_len=q.prompt_len,
-            submit_time=q.submit_time, finish_time=self._now())
+            submit_time=q.submit_time, finish_time=self._now(),
+            first_token_time=r.first_token_time if r else None)
 
     def _evict(self, i: int, reason: str) -> FinishedRequest:
         """Retire active slot ``i`` early (cancel/deadline): emit its
@@ -487,9 +539,12 @@ class Scheduler:
             blocks = self._slot_blocks[i]
             if self.prefix_cache and blocks:
                 # KV rows exist for the prompt + all generated tokens except
-                # last_tok (still pending as the next decode input)
+                # last_tok (still pending as the next decode input); a
+                # mid-prefill victim has valid KV only up to its chunk
+                # cursor
                 toks = self._resume_tokens(s)
-                n_valid = s.prompt_len + len(s.tokens) - 1
+                n_valid = (s.prefill_pos if s.prefill_pos is not None
+                           else s.prompt_len + len(s.tokens) - 1)
                 n_pub = min(n_valid // self.block, len(blocks))
                 if n_pub > 0:
                     hashes = chain_hashes(toks[:n_pub * self.block],
@@ -502,7 +557,7 @@ class Scheduler:
             req=s.req, prompt_len=s.prompt_len, submit_time=s.submit_time,
             deadline=s.deadline,
             resume=_Resume(list(s.tokens), list(s.logprobs), s.key,
-                           s.last_tok)))
+                           s.last_tok, s.first_token_time)))
         self.preemptions += 1
 
     # -------------------------------------------------------------- sampling
@@ -636,6 +691,8 @@ class Scheduler:
                 prompt_len=q.prompt_len, submit_time=q.submit_time,
                 finish_time=self._now()))
             return True
+        if self.chunk_prefill:
+            return self._admit_chunked(q, slot_idx)
         if self.paged:
             return self._admit_paged(q, slot_idx, done)
         self._admit_dense(q, slot_idx, done)
@@ -677,7 +734,23 @@ class Scheduler:
             s.logprobs = list(q.resume.logprobs)
             s.key = q.resume.key          # PRNG state, not a fresh fold_in
             s.last_tok = q.resume.last_tok
+            s.first_token_time = q.resume.first_token_time
         return s
+
+    def _emit(self, slot: _Slot, tok: int, lp: float) -> None:
+        """Append one generated token to a slot: TTFT stamp on the first,
+        streaming callback on every one.  The single funnel for token
+        emission — admission first-tokens, chunk-completion first-tokens
+        and decode steps all come through here."""
+        slot.tokens.append(tok)
+        slot.logprobs.append(lp)
+        slot.last_tok = tok
+        self.tokens_out += 1
+        if slot.first_token_time is None:
+            slot.first_token_time = self._now()
+        cb = slot.req.on_token
+        if cb is not None:
+            cb(slot.uid, len(slot.tokens) - 1, tok, lp)
 
     def _admit_dense(self, q: _Queued, slot_idx: int,
                      done: list[FinishedRequest]) -> None:
@@ -685,10 +758,7 @@ class Scheduler:
         logits, row_cache = self._row_prefill(inputs)
         slot = self._start_slot(q)
         tok, lp = self._pick_one(logits[0, -1], slot)
-        slot.tokens.append(tok)
-        slot.logprobs.append(lp)
-        slot.last_tok = tok
-        self.tokens_out += 1
+        self._emit(slot, tok, lp)
         if self._finished_reason(slot):
             done.append(self._retire(slot))
             return                        # never occupied a decode slot
@@ -771,14 +841,86 @@ class Scheduler:
         self.block_hwm = max(self.block_hwm, alloc.in_use)
         # ---- first token
         tok, lp = self._pick_one(logits[0, -1], slot)
-        slot.tokens.append(tok)
-        slot.logprobs.append(lp)
-        slot.last_tok = tok
-        self.tokens_out += 1
+        self._emit(slot, tok, lp)
         if self._finished_reason(slot):
             done.append(self._retire(slot))
             self._release_blocks(slot_idx)
             return True                   # never occupied a decode slot
+        self.slots[slot_idx] = slot
+        return True
+
+    def _ensure_pool_chunked(self) -> None:
+        """Chunked admission performs no monolithic prefill, so the pool
+        cannot be built "from the first prefilled row"; bootstrap it from
+        a zeroed single-row cache with the same shapes and dtypes."""
+        if self.cache is None:
+            self._ensure_pool(self.model.init_cache(
+                1, self.cache_len, dtype=self.model.param_dtype))
+
+    def _admit_chunked(self, q: _Queued, slot_idx: int) -> bool:
+        """Admit under chunked prefill: reserve memory and arm the chunk
+        state machine — NO prefill compute happens at admission.  The
+        mixed step streams the prompt through chunk lanes and the first
+        token is picked at chunk completion.  Paged reservation/prefix
+        logic mirrors :meth:`_admit_paged` exactly (same lifetime need,
+        same COW-credit trick), so admission-by-memory and preemption
+        behave identically in both modes.  Returns False when the block
+        reservation cannot fit yet."""
+        inputs, S = self._admit_inputs(q)
+        toks_np = np.asarray(inputs["tokens"]).reshape(-1).astype(np.int32)
+        self._ensure_pool_chunked()
+        if not self.paged:
+            slot = self._start_slot(q)
+            slot.prefill_pos = 0
+            slot.prefill_toks = toks_np
+            self.slots[slot_idx] = slot
+            return True
+        blk = self.block
+        alloc = self.allocator
+        need = logical_blocks(min(q.prompt_len + q.req.max_new_tokens,
+                                  self.cache_len), blk)
+        shared: list[int] = []
+        if self.prefix_cache:
+            for h in chain_hashes(np.asarray(inputs["tokens"]), blk):
+                bid = alloc.acquire(h)
+                if bid is None:
+                    break
+                shared.append(bid)
+        matched = len(shared)
+        covered = matched * blk
+        full_cover = matched > 0 and covered >= S
+        # full coverage still computes >= 1 chunk token for logits
+        start = S - 1 if full_cover else covered
+        fresh_needed = need - matched + (1 if full_cover else 0)
+        credit = (1 if full_cover and alloc.refcount(shared[-1]) == 1
+                  else 0)
+        if fresh_needed > alloc.available + credit:
+            for bid in shared:            # rollback: request stays queued
+                alloc.decref(bid)
+            return False
+        dst = list(shared)
+        if full_cover:
+            dst[-1] = alloc.cow(shared[-1])
+            if dst[-1] != shared[-1]:
+                # chunk passes read AND write through the slot's own
+                # table: materialize the to-be-partially-overwritten tail
+                # block eagerly (the monolithic resume path instead keeps
+                # src/dst tables apart inside one prefill call)
+                self.cache = self.model.jitted_copy_blocks()(
+                    self.cache, jnp.asarray(shared[-1], jnp.int32),
+                    jnp.asarray(dst[-1], jnp.int32))
+        dst += [alloc.alloc() for _ in range(need - len(dst))]
+        dst_t = np.full(self.max_blocks, self.num_blocks, np.int32)
+        dst_t[:len(dst)] = dst
+        self._slot_blocks[slot_idx] = dst
+        self.prefix_prompt_tokens += S
+        self.prefix_hit_tokens += min(covered, S)
+        self.prefill_tokens_skipped += start
+        self.block_hwm = max(self.block_hwm, alloc.in_use)
+        slot = self._start_slot(q)
+        slot.prefill_pos = int(start)
+        slot.prefill_toks = toks_np
+        slot.prefill_table = dst_t
         self.slots[slot_idx] = slot
         return True
 
@@ -958,7 +1100,8 @@ class Scheduler:
         def enc_resume(r: _Resume | None):
             return None if r is None else {
                 "tokens": list(r.tokens), "logprobs": list(r.logprobs),
-                "key": arr(r.key), "last_tok": r.last_tok}
+                "key": arr(r.key), "last_tok": r.last_tok,
+                "first_token_time": r.first_token_time}
 
         snap = {
             "version": self.SNAPSHOT_VERSION,
@@ -970,7 +1113,10 @@ class Scheduler:
                 "num_blocks": self.num_blocks if self.paged else None,
                 "prefix_cache": (self.prefix_cache if self.paged else True),
                 "bucket_prompts": self.bucket_prompts,
-                "preempt": self.preempt},
+                "preempt": self.preempt,
+                "chunk_prefill": self.chunk_prefill,
+                "chunk_size": self.chunk_size,
+                "prefill_budget": self.prefill_budget},
             "base_key": arr(self.base_key),
             "queue": [{"req": enc_req(q.req), "prompt_len": q.prompt_len,
                        "submit_time": q.submit_time, "deadline": q.deadline,
@@ -981,20 +1127,24 @@ class Scheduler:
                        "temperature": s.temperature, "top_k": s.top_k,
                        "priority": s.priority, "tokens": list(s.tokens),
                        "logprobs": list(s.logprobs), "last_tok": s.last_tok,
-                       "key": arr(s.key)} for s in self.slots],
+                       "key": arr(s.key),
+                       "first_token_time": s.first_token_time,
+                       "prefill_pos": s.prefill_pos} for s in self.slots],
             "finished": [{"uid": f.uid, "tokens": np.asarray(f.tokens),
                           "logprobs": np.asarray(f.logprobs),
                           "finish_reason": f.finish_reason,
                           "prompt_len": f.prompt_len,
                           "submit_time": f.submit_time,
-                          "finish_time": f.finish_time}
+                          "finish_time": f.finish_time,
+                          "first_token_time": f.first_token_time}
                          for f in self.finished],
             "target_slots": self._target_slots,
             "counters": {"steps_run": self.steps_run,
                          "tokens_out": self.tokens_out,
                          "preemptions": self.preemptions,
                          "cancelled": self.cancelled,
-                         "expired": self.expired},
+                         "expired": self.expired,
+                         "prefill_chunks": self.prefill_chunks},
             "cache": (None if self.cache is None
                       else jax.tree.map(np.asarray, self.cache)),
         }
@@ -1039,7 +1189,11 @@ class Scheduler:
                         else int(cfg["num_blocks"])),
             prefix_cache=bool(cfg["prefix_cache"]),
             bucket_prompts=bool(cfg["bucket_prompts"]),
-            preempt=bool(cfg["preempt"]), clock=clock, mesh=mesh)
+            preempt=bool(cfg["preempt"]), clock=clock, mesh=mesh,
+            chunk_prefill=bool(cfg.get("chunk_prefill", False)),
+            chunk_size=int(cfg.get("chunk_size") or 64),
+            prefill_budget=(None if cfg.get("prefill_budget") is None
+                            else int(cfg["prefill_budget"])))
         shift = (sched._now() - float(snap["now"])) if rebase_clock else 0.0
 
         def t_of(v):
@@ -1062,7 +1216,8 @@ class Scheduler:
             return None if d is None else _Resume(
                 tokens=[int(t) for t in d["tokens"]],
                 logprobs=[float(x) for x in d["logprobs"]],
-                key=dec_key(d["key"]), last_tok=int(d["last_tok"]))
+                key=dec_key(d["key"]), last_tok=int(d["last_tok"]),
+                first_token_time=t_of(d.get("first_token_time")))
 
         sched.queue = deque(
             _Queued(req=dec_req(d["req"]), prompt_len=int(d["prompt_len"]),
@@ -1084,21 +1239,33 @@ class Scheduler:
                 priority=int(d["priority"]), deadline=t_of(d["deadline"]),
                 tokens=[int(t) for t in d["tokens"]],
                 logprobs=[float(x) for x in d["logprobs"]],
-                last_tok=int(d["last_tok"])))
+                last_tok=int(d["last_tok"]),
+                first_token_time=t_of(d.get("first_token_time")),
+                prefill_pos=(None if d.get("prefill_pos") is None
+                             else int(d["prefill_pos"]))))
         sched.slots = slots
+        # mid-prefill slots rebuild their host-side chunk inputs (the
+        # effective prompt is derivable: original prompt + resume tokens)
+        for s in sched.slots:
+            if s is not None and s.prefill_pos is not None:
+                s.prefill_toks = sched._resume_tokens(s).astype(np.int32)
         sched.finished = [FinishedRequest(
             uid=int(f["uid"]), tokens=np.asarray(f["tokens"], np.int32),
             logprobs=np.asarray(f["logprobs"], np.float32),
             finish_reason=str(f["finish_reason"]),
             prompt_len=int(f["prompt_len"]),
             submit_time=float(f["submit_time"]),
-            finish_time=float(f["finish_time"])) for f in snap["finished"]]
+            finish_time=float(f["finish_time"]),
+            first_token_time=(None if f.get("first_token_time") is None
+                              else float(f["first_token_time"])))
+            for f in snap["finished"]]
         c = snap["counters"]
         sched.steps_run = int(c["steps_run"])
         sched.tokens_out = int(c["tokens_out"])
         sched.preemptions = int(c["preemptions"])
         sched.cancelled = int(c["cancelled"])
         sched.expired = int(c["expired"])
+        sched.prefill_chunks = int(c.get("prefill_chunks", 0))
         sched._target_slots = (None if snap["target_slots"] is None
                                else int(snap["target_slots"]))
         if snap["cache"] is not None:
@@ -1113,46 +1280,136 @@ class Scheduler:
             sched.prefix_hit_tokens = int(c["prefix_hit_tokens"])
             sched.prefix_prompt_tokens = int(c["prefix_prompt_tokens"])
             sched.prefill_tokens_skipped = int(c["prefill_tokens_skipped"])
+            for i, s in enumerate(sched.slots):
+                if s is not None and s.prefill_pos is not None \
+                        and sched._slot_blocks[i] is not None:
+                    t = np.full(sched.max_blocks, sched.num_blocks,
+                                np.int32)
+                    blocks = sched._slot_blocks[i]
+                    t[:len(blocks)] = blocks
+                    s.prefill_table = t
         return sched
 
     # ---------------------------------------------------------------- decode
-    def _decode_once(self, done: list[FinishedRequest]) -> None:
+    def _decode_arrays(self):
+        """Host-side inputs of the masked decode pass.  Mid-prefill slots
+        are NOT decode-active: the decode pass's per-slot writes are
+        masked off for them, leaving their partially-built rows alone."""
         B = self.num_slots
         toks = np.zeros((B, 1), np.int32)
         active = np.zeros((B,), bool)
         temps = np.zeros((B,), np.float32)
         topk = np.zeros((B,), np.int32)
         for i, s in enumerate(self.slots):
-            if s is not None:
+            if s is not None and s.prefill_pos is None:
                 toks[i, 0] = s.last_tok
                 active[i] = True
                 temps[i] = s.temperature
                 topk[i] = s.top_k
-        logits, self.cache = self.model.jitted_decode_step_masked(self.mesh)(
-            self.params, self.cache, jnp.asarray(toks), jnp.asarray(active))
-        if any(s is not None and s.temperature > 0.0 for s in self.slots):
+        return toks, active, temps, topk
+
+    def _finish_decode(self, logits, temps, topk,
+                       done: list[FinishedRequest]) -> None:
+        """Pick + emit + retire for one decode pass's logits.  Slots still
+        prefilling neither consume PRNG splits nor receive tokens."""
+        decoding = [s if s is not None and s.prefill_pos is None else None
+                    for s in self.slots]
+        if any(s is not None and s.temperature > 0.0 for s in decoding):
             keys = jnp.stack([
                 self._next_key(s) if s is not None and s.temperature > 0.0
                 else jnp.zeros((2,), jnp.uint32)
-                for s in self.slots])
+                for s in decoding])
         else:                             # all greedy: no splits consumed
-            keys = jnp.zeros((B, 2), jnp.uint32)
+            keys = jnp.zeros((self.num_slots, 2), jnp.uint32)
         tok, lp = self._pick(self._gather_logits(logits[:, 0, :]), keys,
                              jnp.asarray(temps), jnp.asarray(topk))
         tok, lp = np.asarray(tok), np.asarray(lp)
         self.steps_run += 1
-        for i, s in enumerate(self.slots):
+        for i, s in enumerate(decoding):
             if s is None:
                 continue
-            s.tokens.append(int(tok[i]))
-            s.logprobs.append(float(lp[i]))
-            s.last_tok = int(tok[i])
-            self.tokens_out += 1
+            self._emit(s, int(tok[i]), float(lp[i]))
             if self._finished_reason(s):
                 done.append(self._retire(s))
                 if self.paged:
                     self._release_blocks(i)
                 self.slots[i] = None
+
+    def _decode_once(self, done: list[FinishedRequest]) -> None:
+        toks, active, temps, topk = self._decode_arrays()
+        logits, self.cache = self.model.jitted_decode_step_masked(self.mesh)(
+            self.params, self.cache, jnp.asarray(toks), jnp.asarray(active))
+        self._finish_decode(logits, temps, topk, done)
+
+    def _mixed_once(self, done: list[FinishedRequest]) -> None:
+        """One fused serving step: up to ``chunk_lanes`` prefill chunks
+        (best-rank-first among mid-prefill slots) run alongside the
+        masked decode of every fully-prefilled slot — one traced program
+        per (K, C) shape, so the zero-replan contract holds under
+        chunked prefill."""
+        K, C = self.chunk_lanes, self.chunk_size
+        toks, active, temps, topk = self._decode_arrays()
+        pref = sorted(
+            (self._srank(s), i) for i, s in enumerate(self.slots)
+            if s is not None and s.prefill_pos is not None)
+        lanes: list[tuple[int, int, int]] = []
+        ck_tok = np.zeros((K, C), np.int32)
+        ck_slot = np.zeros((K,), np.int32)
+        ck_start = np.zeros((K,), np.int32)
+        ck_true = np.ones((K,), np.int32)   # 1 keeps unused lanes in-range
+        ck_active = np.zeros((K,), bool)
+        ck_tables = (np.full((K, self.max_blocks), self.num_blocks,
+                             np.int32) if self.paged else None)
+        for j, (_, i) in enumerate(pref[:K]):
+            s = self.slots[i]
+            start = s.prefill_pos
+            take = min(C, len(s.prefill_toks) - start)
+            ck_tok[j, :take] = s.prefill_toks[start:start + take]
+            ck_slot[j] = i
+            ck_start[j] = start
+            ck_true[j] = take
+            ck_active[j] = True
+            if self.paged:
+                ck_tables[j] = s.prefill_table
+            lanes.append((i, start, take))
+        args = [self.params, self.cache, jnp.asarray(toks),
+                jnp.asarray(active), jnp.asarray(ck_tok),
+                jnp.asarray(ck_slot), jnp.asarray(ck_start),
+                jnp.asarray(ck_true), jnp.asarray(ck_active)]
+        if self.paged:
+            args.append(jnp.asarray(ck_tables))
+        logits, ck_logits, self.cache = self.model.jitted_mixed_step(
+            K, C, self.mesh)(*args)
+        self.prefill_chunks += len(lanes)
+        if active.any():
+            self._finish_decode(logits, temps, topk, done)
+        for j, (i, start, take) in enumerate(lanes):
+            s = self.slots[i]
+            s.prefill_pos = start + take
+            if s.prefill_pos >= len(s.prefill_toks):
+                self._complete_prefill(i, s, ck_logits[j], done)
+
+    def _complete_prefill(self, i: int, s: _Slot, logits_row,
+                          done: list[FinishedRequest]) -> None:
+        """A lane just processed its final chunk: publish the prompt's
+        full blocks for prefix sharing, pick the first generated token
+        from the lane logits (same per-request PRNG discipline as a
+        monolithic admission pick) and flip the slot to decode mode."""
+        if self.paged and self.prefix_cache:
+            blocks = self._slot_blocks[i] or []
+            hashes = chain_hashes(s.prefill_toks, self.block)
+            for bid, h in zip(blocks, hashes):
+                self.allocator.publish(bid, h)
+        tok, lp = self._pick_one(logits_row, s)
+        s.prefill_pos = None
+        s.prefill_toks = None
+        s.prefill_table = None
+        self._emit(s, tok, lp)
+        if self._finished_reason(s):
+            done.append(self._retire(s))
+            if self.paged:
+                self._release_blocks(i)
+            self.slots[i] = None
 
     def _finished_reason(self, slot: _Slot) -> str | None:
         if self.eos_id is not None and slot.last_tok == self.eos_id:
@@ -1170,7 +1427,8 @@ class Scheduler:
             finish_reason=reason or self._finished_reason(slot),
             prompt_len=slot.prompt_len,
             submit_time=slot.submit_time,
-            finish_time=self._now())
+            finish_time=self._now(),
+            first_token_time=slot.first_token_time)
 
 
 def make_requests(batch: dict, max_new_tokens: int,

@@ -1,0 +1,286 @@
+"""Chunked prefill correctness (DESIGN.md §15): the mixed decode+prefill
+step must be *token-identical* to monolithic admission across every
+self-mixer family — full GQA, windowed-ring, MLA+MoE, SSM and the hybrid —
+for paged and dense pools, every interesting chunk size (1, block-1,
+block, whole-prompt), greedy and seeded sampling, with zero TT plan
+re-resolutions.  On top of identity: prefix-block reuse still fires under
+chunked admission, a victim preempted mid-prefill requeues and resumes
+bit-identically, and a snapshot taken mid-prefill round-trips."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import build, get_config
+from repro.configs.shapes import concrete_batch
+from repro.kernels.plan import plan_resolutions
+from repro.serving.scheduler import Request, Scheduler, make_requests
+
+# One arch per attention family (test_serving.PARITY_ARCHS minus mixtral,
+# whose mixer is the same dense-GQA+MoE shape deepseek_v2 already covers).
+CHUNK_ARCHS = ["qwen3_32b", "gemma3_4b", "deepseek_v2_lite_16b",
+               "mamba2_2p7b", "jamba_v0_1_52b"]
+BLOCK = 4
+PROMPT = 13          # deliberately not a block multiple
+
+_cache: dict[str, tuple] = {}
+
+
+def _built(arch):
+    """Model + params + the monolithic greedy reference, built once per
+    arch — every chunked variant below compares against the same run."""
+    if arch not in _cache:
+        cfg = get_config(arch, "smoke")
+        model = build(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        _cache[arch] = (cfg, model, params)
+    return _cache[arch]
+
+
+def _reqs(cfg, temperature=0.0):
+    batch = concrete_batch(cfg, 3, PROMPT)
+    return make_requests(batch, max_new_tokens=6, key=jax.random.PRNGKey(7),
+                         temperature=temperature,
+                         top_k=5 if temperature else 0)
+
+
+def _run(model, params, cfg, *, chunked, chunk=BLOCK, paged=True,
+         temperature=0.0):
+    kw = dict(eos_id=None, paged=paged, block_size=BLOCK, preempt=False)
+    if chunked:
+        kw.update(chunk_prefill=True, chunk_size=chunk)
+    sched = Scheduler(model, params, num_slots=3, cache_len=32, **kw)
+    for r in _reqs(cfg, temperature):
+        sched.submit(r)
+    return sched.run(), sched
+
+
+@pytest.mark.parametrize("arch", CHUNK_ARCHS)
+@pytest.mark.parametrize("paged", [True, False])
+def test_chunked_identity_all_families(arch, paged):
+    """Chunked == monolithic token-for-token on every family, both pools,
+    with no TT plan re-resolutions during the chunked run."""
+    cfg, model, params = _built(arch)
+    ref, _ = _run(model, params, cfg, chunked=False, paged=paged)
+    r0 = plan_resolutions()
+    got, sched = _run(model, params, cfg, chunked=True, paged=paged)
+    assert plan_resolutions() == r0, "chunked prefill re-resolved a TT plan"
+    assert sched.prefill_chunks > 0
+    for uid in ref:
+        np.testing.assert_array_equal(
+            np.asarray(ref[uid].tokens), np.asarray(got[uid].tokens),
+            err_msg=f"{arch} paged={paged} uid={uid}")
+        assert got[uid].first_token_time is not None
+
+
+# {1, block-1, block, prompt_len}: the chunk-boundary sweep of the issue —
+# degenerate single-token chunks, one-off-the-block straddles, block-aligned
+# chunks, and a whole-prompt chunk (chunked machinery, monolithic shape).
+@pytest.mark.parametrize("chunk", [1, BLOCK - 1, BLOCK, PROMPT])
+def test_chunk_size_boundary_sweep(chunk):
+    cfg, model, params = _built("qwen3_32b")
+    ref, _ = _run(model, params, cfg, chunked=False)
+    got, _ = _run(model, params, cfg, chunked=True, chunk=chunk)
+    for uid in ref:
+        np.testing.assert_array_equal(
+            np.asarray(ref[uid].tokens), np.asarray(got[uid].tokens),
+            err_msg=f"chunk={chunk} uid={uid}")
+
+
+def test_chunked_identity_seeded_sampling():
+    """Chunk-completion must consume exactly the PRNG splits monolithic
+    admission does, so seeded sampling stays bit-identical too."""
+    cfg, model, params = _built("qwen3_32b")
+    ref, _ = _run(model, params, cfg, chunked=False, temperature=0.8)
+    got, _ = _run(model, params, cfg, chunked=True, temperature=0.8)
+    for uid in ref:
+        np.testing.assert_array_equal(np.asarray(ref[uid].tokens),
+                                      np.asarray(got[uid].tokens))
+
+
+def test_chunked_ssm_odd_chunk():
+    """SSM state threading with a chunk size that divides nothing."""
+    cfg, model, params = _built("mamba2_2p7b")
+    ref, _ = _run(model, params, cfg, chunked=False)
+    got, _ = _run(model, params, cfg, chunked=True, chunk=5)
+    for uid in ref:
+        np.testing.assert_array_equal(np.asarray(ref[uid].tokens),
+                                      np.asarray(got[uid].tokens))
+
+
+def test_prefill_budget_caps_lanes():
+    """prefill_budget bounds concurrent chunk lanes: budget == chunk_size
+    means one lane, so three admissions prefill strictly in rank order."""
+    cfg, model, params = _built("qwen3_32b")
+    ref, _ = _run(model, params, cfg, chunked=False)
+    sched = Scheduler(model, params, num_slots=3, cache_len=32,
+                      eos_id=None, paged=True, block_size=BLOCK,
+                      preempt=False, chunk_prefill=True, chunk_size=BLOCK,
+                      prefill_budget=BLOCK)
+    assert sched.chunk_lanes == 1
+    for r in _reqs(cfg):
+        sched.submit(r)
+    got = sched.run()
+    for uid in ref:
+        np.testing.assert_array_equal(np.asarray(ref[uid].tokens),
+                                      np.asarray(got[uid].tokens))
+
+
+def test_chunked_prefix_reuse():
+    """Hash-based prefix reuse still fires when admission is chunked: the
+    full prompt's blocks are published at prefill *completion* and a later
+    identical/shared-prefix prompt skips the covered chunks."""
+    cfg, model, params = _built("qwen3_32b")
+    toks = np.asarray(concrete_batch(cfg, 1, 12)["tokens"])
+    t2 = toks.copy()
+    t2[0, -2:] = [5, 9]
+
+    def reqs():
+        return [Request(uid=0, inputs={"tokens": jnp.asarray(toks)},
+                        max_new_tokens=5),
+                Request(uid=1, inputs={"tokens": jnp.asarray(toks)},
+                        max_new_tokens=5),
+                Request(uid=2, inputs={"tokens": jnp.asarray(t2)},
+                        max_new_tokens=5)]
+
+    def run(chunked):
+        s = Scheduler(model, params, num_slots=1, cache_len=32, paged=True,
+                      block_size=BLOCK, prefix_cache=True,
+                      chunk_prefill=chunked, chunk_size=BLOCK)
+        for r in reqs():
+            s.submit(r)
+        return s.run(), s.stats()
+
+    ref, _ = run(False)
+    got, st = run(True)
+    for uid in ref:
+        np.testing.assert_array_equal(np.asarray(ref[uid].tokens),
+                                      np.asarray(got[uid].tokens))
+    assert st["prefix_hit_tokens"] > 0
+    assert st["prefill_tokens_skipped"] > 0
+
+
+@pytest.mark.parametrize("stagger", [1, 2, 3])
+def test_preempt_mid_prefill(stagger):
+    """A low-priority victim preempted partway through its prefill must
+    requeue with its PRNG untouched and resume bit-identically, whichever
+    chunk boundary the high-priority arrival lands on."""
+    cfg, model, params = _built("qwen3_32b")
+    long_toks = np.asarray(concrete_batch(cfg, 1, 20)["tokens"])
+    short_toks = np.asarray(concrete_batch(cfg, 1, 12)["tokens"])
+
+    def run(chunked, stagger):
+        s = Scheduler(model, params, num_slots=1, cache_len=32, paged=True,
+                      block_size=BLOCK, prefix_cache=True, preempt=True,
+                      chunk_prefill=chunked, chunk_size=BLOCK)
+        out = {}
+        s.submit(Request(uid=10, inputs={"tokens": jnp.asarray(long_toks)},
+                         max_new_tokens=4, priority=0))
+        for _ in range(stagger):       # long request starts prefilling
+            for f in s.step():
+                out[f.uid] = f
+        s.submit(Request(uid=11, inputs={"tokens": jnp.asarray(short_toks)},
+                         max_new_tokens=4, priority=5))
+        out.update(s.run())
+        return out, s
+
+    ref, _ = run(False, 1)
+    got, s = run(True, stagger)
+    assert s.preemptions >= 1
+    for uid in ref:
+        np.testing.assert_array_equal(
+            np.asarray(ref[uid].tokens), np.asarray(got[uid].tokens),
+            err_msg=f"stagger={stagger} uid={uid}")
+
+
+def test_snapshot_mid_prefill_roundtrip():
+    """snapshot() taken while a slot is mid-prefill restores the chunk
+    state machine (prefill_pos, reserved block tables, pending tokens) and
+    completes identically — with first_token_time surviving the trip."""
+    cfg, model, params = _built("gemma3_4b")
+    toks = np.asarray(concrete_batch(cfg, 2, 14)["tokens"])
+
+    def reqs():
+        return [Request(uid=i, inputs={"tokens": jnp.asarray(toks[i:i + 1])},
+                        max_new_tokens=5, key=jax.random.PRNGKey(3),
+                        temperature=0.7, top_k=4) for i in range(2)]
+
+    def base():
+        s = Scheduler(model, params, num_slots=2, cache_len=32, paged=True,
+                      block_size=BLOCK, chunk_prefill=True, chunk_size=BLOCK)
+        for r in reqs():
+            s.submit(r)
+        return s
+
+    ref = base().run()
+    s = base()
+    s.step()
+    assert any(x is not None and x.prefill_pos is not None
+               for x in s.slots), "step() already finished every prefill"
+    s2 = Scheduler.from_snapshot(model, params, s.snapshot())
+    out = s2.run()
+    for uid in ref:
+        np.testing.assert_array_equal(np.asarray(ref[uid].tokens),
+                                      np.asarray(out[uid].tokens))
+        assert out[uid].first_token_time is not None
+
+
+def test_chunked_rejects_unsupported_model():
+    """Cross-attention caches have no chunked admission path: asking for
+    chunk_prefill on an enc-dec model must fail at construction."""
+    cfg = get_config("seamless_m4t_large_v2", "smoke")
+    model = build(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    assert not model.supports_chunked_prefill
+    with pytest.raises(ValueError, match="chunked prefill"):
+        Scheduler(model, params, num_slots=1, cache_len=32,
+                  chunk_prefill=True, chunk_size=4)
+    _, qmodel, qparams = _built("qwen3_32b")
+    with pytest.raises(ValueError):
+        Scheduler(qmodel, qparams, num_slots=1, cache_len=32,
+                  chunk_prefill=True, chunk_size=0)
+
+
+# ------------------------------------------------------------- satellite 3
+# submit()-time validation regression: a request whose lifetime reservation
+# cannot fit must raise at submit, never corrupt ring/pos mid-decode.
+
+def test_submit_rejects_negative_budget():
+    cfg, model, params = _built("qwen3_32b")
+    sched = Scheduler(model, params, num_slots=1, cache_len=32)
+    batch = concrete_batch(cfg, 1, 8)
+    with pytest.raises(ValueError, match="max_new_tokens"):
+        sched.submit(Request(uid=0, inputs={"tokens": batch["tokens"]},
+                             max_new_tokens=-1))
+
+
+@pytest.mark.parametrize("paged", [True, False])
+@pytest.mark.parametrize("chunked", [True, False])
+def test_submit_rejects_cache_overflow(paged, chunked):
+    """prompt + max_new_tokens > cache_len raises in every pool/admission
+    mode — dense, paged, monolithic and chunked alike."""
+    cfg, model, params = _built("qwen3_32b")
+    kw = dict(chunk_prefill=True, chunk_size=4) if chunked else {}
+    sched = Scheduler(model, params, num_slots=1, cache_len=16,
+                      paged=paged, block_size=BLOCK, **kw)
+    batch = concrete_batch(cfg, 1, 12)
+    with pytest.raises(ValueError, match="cache_len"):
+        sched.submit(Request(uid=0, inputs={"tokens": batch["tokens"]},
+                             max_new_tokens=5))
+    # the boundary case fits
+    sched.submit(Request(uid=1, inputs={"tokens": batch["tokens"]},
+                         max_new_tokens=4))
+    out = sched.run()
+    assert len(out[1].tokens) == 4
+
+
+def test_submit_rejects_pool_overflow():
+    """A paged request needing more blocks than the whole pool can ever
+    hold is rejected up front (it would otherwise hang the drain loop)."""
+    cfg, model, params = _built("qwen3_32b")
+    sched = Scheduler(model, params, num_slots=1, cache_len=64,
+                      paged=True, block_size=BLOCK, num_blocks=4)
+    batch = concrete_batch(cfg, 1, 24)
+    with pytest.raises(ValueError, match="blocks"):
+        sched.submit(Request(uid=0, inputs={"tokens": batch["tokens"]},
+                             max_new_tokens=8))

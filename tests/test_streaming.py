@@ -1,0 +1,240 @@
+"""Streaming front-end (DESIGN.md §15): StreamEngine's per-token buffers
+and replayable streams, the SSE HTTP server (overlapping clients, ordered
+events, reconnect-from-index, graceful shutdown), and journal-aware
+reconnect — a token acknowledged before a crash is replayable after it,
+because a recovered ``DurableScheduler``'s partial streams seed the new
+engine's buffers."""
+import http.client
+import json
+import threading
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import build, get_config
+from repro.configs.shapes import concrete_batch
+from repro.serving.durable import DurableScheduler
+from repro.serving.engine import StreamEngine
+from repro.serving.scheduler import Request, Scheduler
+from repro.serving.server import make_server
+
+_cache: dict[str, tuple] = {}
+
+
+def _built(arch="qwen3_32b"):
+    if arch not in _cache:
+        cfg = get_config(arch, "smoke")
+        model = build(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        _cache[arch] = (cfg, model, params)
+    return _cache[arch]
+
+
+def _sched(model, params, **kw):
+    base = dict(num_slots=2, cache_len=32, paged=True, block_size=4,
+                chunk_prefill=True, chunk_size=4)
+    base.update(kw)
+    return Scheduler(model, params, **base)
+
+
+def _events(resp):
+    """Parse an SSE byte stream into decoded ``data:`` events."""
+    buf = b""
+    while True:
+        chunk = resp.read1(4096)
+        if not chunk:
+            return
+        buf += chunk
+        while b"\n\n" in buf:
+            raw, buf = buf.split(b"\n\n", 1)
+            for line in raw.split(b"\n"):
+                if line.startswith(b"data: "):
+                    yield json.loads(line[6:])
+
+
+def test_stream_engine_token_order_and_results():
+    """Tokens arrive through on_token in index order, stream() replays
+    them, and the final result matches a plain synchronous scheduler
+    run of the same requests."""
+    cfg, model, params = _built()
+    toks = np.asarray(concrete_batch(cfg, 2, 10)["tokens"])
+
+    def reqs():
+        return [Request(uid=i, inputs={"tokens": jnp.asarray(toks[i:i + 1])},
+                        max_new_tokens=6) for i in range(2)]
+
+    ref_sched = _sched(model, params)
+    for r in reqs():
+        ref_sched.submit(r)
+    ref = ref_sched.run()
+
+    eng = StreamEngine(_sched(model, params))
+    try:
+        for r in reqs():
+            eng.submit(r)
+        for uid in (0, 1):
+            f = eng.result(uid, timeout=60)
+            np.testing.assert_array_equal(np.asarray(f.tokens),
+                                          np.asarray(ref[uid].tokens))
+            evs = list(eng.stream(uid))
+            assert evs[-1] == {"uid": uid, "done": "length"}
+            assert [e["i"] for e in evs[:-1]] == list(range(6))
+            assert [e["token"] for e in evs[:-1]] == \
+                [int(t) for t in ref[uid].tokens]
+            # replay from an offset: the reconnect contract
+            tail = list(eng.stream(uid, start=4))
+            assert [e["i"] for e in tail[:-1]] == [4, 5]
+    finally:
+        eng.close()
+    with pytest.raises(KeyError):
+        list(eng.stream(999))
+
+
+def test_stream_engine_rejects_invalid_request():
+    """A request the scheduler would refuse at submit() is surfaced as a
+    rejection through the stream/result APIs, not a hung engine loop."""
+    cfg, model, params = _built()
+    toks = np.asarray(concrete_batch(cfg, 1, 10)["tokens"])
+    eng = StreamEngine(_sched(model, params))
+    try:
+        eng.submit(Request(uid=0, inputs={"tokens": jnp.asarray(toks)},
+                           max_new_tokens=999))       # overflows cache_len
+        evs = list(eng.stream(0, timeout=30))
+        assert evs[-1]["done"].startswith("rejected:")
+        with pytest.raises(RuntimeError, match="rejected"):
+            eng.result(0, timeout=30)
+    finally:
+        eng.close()
+
+
+def test_sse_server_end_to_end():
+    """Two overlapping SSE clients each see their own ordered token
+    events ending in done; a reconnect replays from the requested index;
+    /stats exposes engine+scheduler counters; POST /shutdown stops the
+    HTTP loop; a non-streaming POST returns one JSON result."""
+    cfg, model, params = _built()
+    toks = np.asarray(concrete_batch(cfg, 2, 10)["tokens"])
+    eng = StreamEngine(_sched(model, params))
+    srv = make_server(eng)
+    port = srv.server_address[1]
+    srv_t = threading.Thread(target=srv.serve_forever, daemon=True)
+    srv_t.start()
+    try:
+        def client(rows, out, uid):
+            c = http.client.HTTPConnection("127.0.0.1", port)
+            c.request("POST", "/generate", json.dumps(
+                {"tokens": rows, "max_new_tokens": 6, "uid": uid}),
+                {"Content-Type": "application/json"})
+            r = c.getresponse()
+            assert r.status == 200
+            for ev in _events(r):
+                out.append(ev)
+                if "done" in ev:
+                    break
+            c.close()
+
+        o1, o2 = [], []
+        t1 = threading.Thread(target=client, args=(toks[0].tolist(), o1, 0))
+        t2 = threading.Thread(target=client, args=(toks[1].tolist(), o2, 1))
+        t1.start()
+        time.sleep(0.01)
+        t2.start()
+        t1.join(60)
+        t2.join(60)
+        assert not t1.is_alive() and not t2.is_alive()
+        for o in (o1, o2):
+            assert o[-1].get("done") == "length"
+            assert [e["i"] for e in o[:-1]] == list(range(6))
+
+        # reconnect: replay uid 0 from index 3 — same tokens, same order
+        c = http.client.HTTPConnection("127.0.0.1", port)
+        c.request("GET", "/stream/0?from=3")
+        evs = []
+        for ev in _events(c.getresponse()):
+            evs.append(ev)
+            if "done" in ev:
+                break
+        assert [e["i"] for e in evs[:-1]] == [3, 4, 5]
+        assert [e["token"] for e in evs[:-1]] == \
+            [e["token"] for e in o1[3:-1]]
+
+        # non-streaming mode: one blocking JSON result
+        c = http.client.HTTPConnection("127.0.0.1", port)
+        c.request("POST", "/generate", json.dumps(
+            {"tokens": toks[0].tolist(), "max_new_tokens": 4,
+             "stream": False}), {"Content-Type": "application/json"})
+        res = json.loads(c.getresponse().read())
+        assert len(res["tokens"]) == 4
+        assert res["finish_reason"] == "length"
+        assert res["tokens"] == [e["token"] for e in o1[:4]]
+
+        # malformed request → 400, not a dead server thread
+        c = http.client.HTTPConnection("127.0.0.1", port)
+        c.request("POST", "/generate", json.dumps({"tokens": [[1, 2]]}),
+                  {"Content-Type": "application/json"})
+        assert c.getresponse().status == 400
+
+        c = http.client.HTTPConnection("127.0.0.1", port)
+        c.request("GET", "/stats")
+        st = json.loads(c.getresponse().read())
+        assert st["prefill_chunks"] > 0
+        assert st["requests_done"] >= 2
+
+        c = http.client.HTTPConnection("127.0.0.1", port)
+        c.request("POST", "/shutdown", "{}")
+        assert json.loads(c.getresponse().read())["ok"]
+        srv_t.join(10)
+        assert not srv_t.is_alive()
+    finally:
+        srv.server_close()
+        eng.close()
+
+
+def test_journal_aware_reconnect(tmp_path):
+    """Crash mid-generation, recover from the durable root, attach a new
+    StreamEngine: the buffers are pre-seeded from journal/snapshot state,
+    so a client reconnecting with its uid and last-seen index resumes the
+    token stream — pre-crash tokens replay, post-crash tokens follow, and
+    the whole sequence equals a crash-free run."""
+    cfg, model, params = _built()
+    toks = np.asarray(concrete_batch(cfg, 1, 10)["tokens"])
+
+    def req():
+        return Request(uid=0, inputs={"tokens": jnp.asarray(toks)},
+                       max_new_tokens=8)
+
+    ref_sched = _sched(model, params)
+    ref_sched.submit(req())
+    ref = [int(t) for t in ref_sched.run()[0].tokens]
+
+    root = str(tmp_path / "durable")
+    ds = DurableScheduler(_sched(model, params), root, snapshot_every=1)
+    eng = StreamEngine(ds)
+    eng.submit(req())
+    deadline = time.time() + 60
+    while time.time() < deadline:
+        with eng._cond:
+            n_seen = len(eng._buffers.get(0, ()))
+            if n_seen >= 3:
+                break
+        time.sleep(0.005)
+    assert n_seen >= 3, "no tokens generated before simulated crash"
+    eng.close(drain=False)               # crash: in-flight work abandoned
+
+    ds2 = DurableScheduler.recover(root, model, params)
+    eng2 = StreamEngine(ds2)
+    try:
+        seeded = len(eng2._buffers.get(0, ()))
+        assert seeded > 0, "recovered engine lost the acknowledged tokens"
+        evs = list(eng2.stream(0, start=2, timeout=60))
+        assert evs[-1] == {"uid": 0, "done": "length"}
+        assert [e["i"] for e in evs[:-1]] == list(range(2, 8))
+        assert [e["token"] for e in evs[:-1]] == ref[2:]
+        # full replay from zero matches the crash-free reference exactly
+        full = list(eng2.stream(0, start=0, timeout=60))
+        assert [e["token"] for e in full[:-1]] == ref
+    finally:
+        eng2.close()
